@@ -1,0 +1,118 @@
+"""Shared benchmark harness: simulator setup per (model, system) scheme."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import PagedKVManager, PipelineScheduler, PrefillPolicy, ThrottleConfig
+from repro.data.workload import get_workload, sample_requests
+from repro.runtime.simulator import (
+    CostModel,
+    PipelineSimulator,
+    RuntimeModel,
+    SimMetrics,
+    cost_model_for,
+)
+
+
+@dataclass(frozen=True)
+class Scheme:
+    """A serving system under comparison (paper §4.1 'Schemes')."""
+
+    name: str
+    policy: PrefillPolicy
+    runtime: RuntimeModel
+    tensor_parallel: bool = False     # SGLang-like TP baseline (pp=1, chips=N)
+
+    @staticmethod
+    def all_main() -> List["Scheme"]:
+        return [
+            Scheme("gLLM", PrefillPolicy.GLLM, RuntimeModel.gllm()),
+            Scheme("vLLM-like(PP)", PrefillPolicy.SARATHI,
+                   RuntimeModel.vllm_like()),
+            Scheme("SGLang-like(TP)", PrefillPolicy.SARATHI,
+                   RuntimeModel.gllm(), tensor_parallel=True),
+        ]
+
+    @staticmethod
+    def ablations() -> List["Scheme"]:
+        return [
+            Scheme("gLLM", PrefillPolicy.GLLM, RuntimeModel.gllm()),
+            Scheme("gLLM w/o WT", PrefillPolicy.NO_WT, RuntimeModel.gllm()),
+            Scheme("gLLM w/o UT", PrefillPolicy.NO_UT, RuntimeModel.gllm()),
+            Scheme("gLLM w/ CK", PrefillPolicy.SARATHI, RuntimeModel.gllm()),
+            Scheme("vLLM-like(PP)", PrefillPolicy.SARATHI,
+                   RuntimeModel.vllm_like()),
+        ]
+
+
+def simulate(
+    scheme: Scheme,
+    *,
+    arch: str = "qwen2.5-14b",
+    workload: str = "sharegpt",
+    rate: float = 12.0,
+    num_requests: int = 200,
+    pp: int = 4,
+    pages: int = 8192,
+    seed: int = 0,
+    throttle_overrides: Optional[dict] = None,
+    cross_node: bool = False,
+) -> SimMetrics:
+    cfg = get_config(arch)
+    th_kw = dict(pipeline_depth=pp, policy=scheme.policy)
+    th_kw.update(throttle_overrides or {})
+    th = ThrottleConfig(**th_kw)
+    kv = PagedKVManager(num_pages=pages, page_size=16)
+    sched = PipelineScheduler(th, kv, max_model_len=pages * 16)
+
+    if scheme.tensor_parallel:
+        # TP folds the whole model onto pp chips with per-token activation
+        # all-reduces (2 per layer): high bandwidth demand, no pipelining.
+        base = cost_model_for(cfg, chips_per_stage=pp, pp=1)
+        cost = CostModel(
+            flops_per_token_stage=base.flops_per_token_stage,
+            param_bytes_stage=base.param_bytes_stage,
+            kv_bytes_per_ctx_token=base.kv_bytes_per_ctx_token,
+            chips_per_stage=pp,
+            # 2 all-reduces/layer x activation row (d x 2B).  Wire bytes:
+            # intra-pod ICI rings have a dedicated link per hop (~2B per
+            # token); cross-node, every rank's shards serialize through the
+            # shared node NIC => 2(N-1)·B per all-reduce.
+            comm_bytes_per_token=2 * cfg.num_layers * cfg.d_model * 2
+            * (2 * (pp - 1) if cross_node else 2) / 2,
+            # plus ~2(N-1) link latencies per all-reduce
+            # (cross-node TCP/RDMA ~400us, intra-pod ICI ~5us)
+            comm_latency=2 * cfg.num_layers
+            * (400e-6 if cross_node else 5e-6),
+            net_bw=9.2e9 if cross_node else 50e9,   # 73.28 Gbps sim-network
+        )
+        sim_pp = 1
+    else:
+        cost = cost_model_for(cfg, chips_per_stage=1, pp=pp)
+        sim_pp = pp
+    sim = PipelineSimulator(sched, sim_pp, cost, scheme.runtime)
+    spec = get_workload(workload)
+    sim.add_workload(sample_requests(spec, num_requests, rate, seed=seed))
+    return sim.run()
+
+
+def rate_sweep(scheme: Scheme, rates, **kw) -> List[Tuple[float, SimMetrics]]:
+    return [(r, simulate(scheme, rate=r, **kw)) for r in rates]
+
+
+def max_throughput(scheme: Scheme, *, probe_rates=(8, 32, 96, 256),
+                   **kw) -> float:
+    best = 0.0
+    for r in probe_rates:
+        m = simulate(scheme, rate=float(r), **kw)
+        best = max(best, m.throughput())
+    return best
+
+
+def csv_row(name: str, value: float, derived: str = "") -> str:
+    return f"{name},{value:.6g},{derived}"

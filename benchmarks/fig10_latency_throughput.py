@@ -1,0 +1,35 @@
+"""Paper Fig. 10/13: TTFT / TPOT / E2EL / throughput vs request rate for
+gLLM vs vLLM-like(PP) vs SGLang-like(TP), on ShareGPT and Azure workloads.
+Fig. 13's cross-node variant uses the paper's simulated 73.28 Gbps network
+for the TP baseline."""
+
+from __future__ import annotations
+
+from benchmarks.common import Scheme, csv_row, simulate
+
+
+def run(verbose: bool = True, *, arch: str = "qwen2.5-14b",
+        cross_node: bool = False, rates=(4.0, 12.0, 30.0, 90.0),
+        workloads=("sharegpt", "azure")):
+    rows = []
+    tag = "fig13" if cross_node else "fig10"
+    for wl in workloads:
+        nreq = 150 if wl == "sharegpt" else 60
+        for scheme in Scheme.all_main():
+            for rate in rates:
+                m = simulate(scheme, arch=arch, workload=wl, rate=rate,
+                             num_requests=nreq, cross_node=cross_node,
+                             pages=65536 if wl == "azure" else 8192)
+                base = f"{tag}_{wl}_{scheme.name}_r{rate:g}"
+                rows.append(csv_row(base + "_ttft_ms", m.ttft() * 1e3))
+                rows.append(csv_row(base + "_tpot_ms", m.tpot() * 1e3))
+                rows.append(csv_row(base + "_e2el_s", m.e2el()))
+                rows.append(csv_row(base + "_thpt_tok_s", m.throughput()))
+    if verbose:
+        for r in rows:
+            print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

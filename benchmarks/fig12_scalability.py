@@ -1,0 +1,34 @@
+"""Paper Fig. 12: maximum throughput scaling as chips increase (pp = 1,2,4,8
+stages).  gLLM should scale near-linearly; the TP baseline degrades
+cross-node (communication-bound)."""
+
+from __future__ import annotations
+
+from benchmarks.common import Scheme, csv_row, max_throughput
+
+
+def run(verbose: bool = True, *, arch: str = "qwen2.5-14b",
+        cross_node: bool = False):
+    """Max throughput with the LOAD scaled alongside the system (paper
+    protocol: each configuration is saturated): KV pool, concurrency and
+    probe rates all grow with the chip count."""
+    rows = []
+    for scheme in Scheme.all_main():
+        base = None
+        for pp in (1, 2, 4, 8):
+            t = max_throughput(scheme, arch=arch, pp=pp,
+                               num_requests=100 * pp,
+                               pages=4096 * pp,
+                               cross_node=cross_node,
+                               probe_rates=(16 * pp, 48 * pp, 128 * pp))
+            base = base or t
+            rows.append(csv_row(f"fig12_{scheme.name}_pp{pp}_max_thpt", t,
+                                f"x{t / base:.2f} vs pp=1"))
+    if verbose:
+        for r in rows:
+            print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

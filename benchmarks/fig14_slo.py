@@ -1,0 +1,27 @@
+"""Paper Fig. 14: SLO attainment vs request rate (cross-node Llama-100B
+deployment in the paper; we use its proxy config)."""
+
+from __future__ import annotations
+
+from benchmarks.common import Scheme, csv_row, simulate
+
+
+def run(verbose: bool = True, *, arch: str = "llama3.1-100b",
+        rates=(1.0, 2.0, 4.0, 8.0), ttft_slo: float = 5.0,
+        tpot_slo: float = 0.2):
+    rows = []
+    for scheme in Scheme.all_main()[:2]:          # gLLM vs vLLM-like (paper)
+        for rate in rates:
+            m = simulate(scheme, arch=arch, rate=rate, num_requests=80,
+                         pp=8, pages=32768)
+            att = m.slo_attainment(ttft_slo, tpot_slo)
+            rows.append(csv_row(f"fig14_{scheme.name}_r{rate:g}_slo", att,
+                                f"ttft<{ttft_slo}s tpot<{tpot_slo}s"))
+    if verbose:
+        for r in rows:
+            print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

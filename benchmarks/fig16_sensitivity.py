@@ -1,0 +1,37 @@
+"""Paper Fig. 16: hyperparameter sensitivity — #T, #MaxP, #MinP, KV_thresh."""
+
+from __future__ import annotations
+
+from benchmarks.common import Scheme, csv_row, simulate
+from repro.core import PrefillPolicy
+from repro.runtime.simulator import RuntimeModel
+
+GLLM = Scheme("gLLM", PrefillPolicy.GLLM, RuntimeModel.gllm())
+
+SWEEPS = {
+    "num_iters_T": (1, 2, 4, 8, 16),
+    "max_prefill_tokens": (512, 1024, 2048, 4096),
+    "min_prefill_tokens": (8, 32, 128, 512),
+    "kv_threshold": (0.0, 0.05, 0.1, 0.2),
+}
+
+
+def run(verbose: bool = True, *, arch: str = "qwen2.5-14b",
+        rate: float = 24.0):
+    rows = []
+    for knob, values in SWEEPS.items():
+        for v in values:
+            m = simulate(GLLM, arch=arch, rate=rate, num_requests=120,
+                         pages=4096, throttle_overrides={knob: v})
+            rows.append(csv_row(
+                f"fig16_{knob}={v}_e2el_s", m.e2el(),
+                f"ttft={m.ttft()*1e3:.0f}ms tpot={m.tpot()*1e3:.1f}ms "
+                f"thpt={m.throughput():.0f}"))
+    if verbose:
+        for r in rows:
+            print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

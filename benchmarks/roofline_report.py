@@ -1,0 +1,68 @@
+"""Deliverable (g): render the roofline tables from dry-run artifacts
+(produced by `python -m repro.launch.dryrun`; see results/*.json)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import csv_row
+from repro.roofline.analysis import RooflineCell, render_table
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+_KEYS = ("arch", "shape", "mesh", "chips", "hlo_flops", "hlo_bytes",
+         "collective_bytes", "collective_breakdown", "model_flops_per_chip",
+         "per_device_memory_bytes", "notes")
+
+
+def load_cells(pattern: str = "roofline_baseline.json"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, pattern))):
+        try:
+            data = json.load(open(path))
+        except Exception:
+            continue
+        for d in data:
+            cells.append(RooflineCell(**{k: d[k] for k in _KEYS}))
+    return cells
+
+
+def run(verbose: bool = True):
+    base = sorted(load_cells(), key=lambda c: (c.arch, c.shape))
+    rows = []
+    if not base:
+        rows.append(csv_row("roofline_cells", 0,
+                            "run `python -m repro.launch.dryrun --all "
+                            "--single-pod-only --out "
+                            "results/roofline_baseline.json` first"))
+    else:
+        if verbose:
+            print("# paper-faithful baseline (single-pod, final cost parser)")
+            print(render_table(base))
+        for c in base:
+            rows.append(csv_row(
+                f"roofline_{c.arch}_{c.shape}_{c.mesh}_fraction",
+                c.roofline_fraction,
+                f"bound={c.bottleneck} useful={c.useful_ratio:.2f}"))
+        opts = []
+        for path in sorted(glob.glob(os.path.join(RESULTS, "opt*.json"))):
+            name = os.path.basename(path)[:-5]
+            for c in load_cells(os.path.basename(path)):
+                opts.append((name, c))
+        if opts and verbose:
+            print("# optimized variants (EXPERIMENTS.md §Perf)")
+        for name, c in opts:
+            rows.append(csv_row(
+                f"roofline_{name}_fraction", c.roofline_fraction,
+                f"{c.arch} x {c.shape}: t_mem={c.t_memory*1e3:.1f}ms "
+                f"t_coll={c.t_collective*1e3:.1f}ms"))
+    if verbose:
+        for r in rows:
+            print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only figXX] [--fast]
+
+Prints ``name,value,derived`` CSV rows (stdout), suitable for
+``tee bench_output.txt``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter (e.g. fig10, table1)")
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller sweeps for CI")
+    args = ap.parse_args()
+
+    from benchmarks import (fig01_volatility, fig10_latency_throughput,
+                            fig12_scalability, fig14_slo, fig15_ablation,
+                            fig16_sensitivity, roofline_report,
+                            table1_equivalence)
+
+    suites = [
+        ("fig01_volatility", fig01_volatility.run, {}),
+        ("fig10_latency_throughput", fig10_latency_throughput.run,
+         {"rates": (8.0, 60.0)} if args.fast else {}),
+        ("fig13_cross_node", fig10_latency_throughput.run,
+         {"cross_node": True, "rates": (8.0, 60.0),
+          "workloads": ("sharegpt",)}),
+        ("fig12_scalability", fig12_scalability.run, {}),
+        ("fig14_slo", fig14_slo.run, {}),
+        ("fig15_ablation", fig15_ablation.run, {}),
+        ("fig16_sensitivity", fig16_sensitivity.run, {}),
+        ("table1_equivalence", table1_equivalence.run, {}),
+        ("roofline_report", roofline_report.run, {}),
+    ]
+    failures = []
+    for name, fn, kw in suites:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        try:
+            fn(verbose=True, **kw)
+        except Exception as e:  # noqa: BLE001 — benchmarks must not abort the run
+            failures.append((name, repr(e)))
+            print(f"{name},FAILED,{e!r}")
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        print("# FAILURES:", failures)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

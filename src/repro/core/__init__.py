@@ -1,0 +1,36 @@
+"""gLLM core: Token Throttling scheduling + paged KV management."""
+
+from repro.core.kv_manager import PagedKVManager
+from repro.core.request import Request, RequestMetrics, RequestState, SamplingParams
+from repro.core.scheduler import (
+    PipelineScheduler,
+    ScheduledBatch,
+    ScheduledSeq,
+    SchedulerStats,
+)
+from repro.core.throttle import (
+    PrefillPolicy,
+    ThrottleConfig,
+    decode_budget,
+    prefill_budget,
+    prefill_budget_ut,
+    prefill_budget_wt,
+)
+
+__all__ = [
+    "PagedKVManager",
+    "Request",
+    "RequestMetrics",
+    "RequestState",
+    "SamplingParams",
+    "PipelineScheduler",
+    "ScheduledBatch",
+    "ScheduledSeq",
+    "SchedulerStats",
+    "PrefillPolicy",
+    "ThrottleConfig",
+    "decode_budget",
+    "prefill_budget",
+    "prefill_budget_ut",
+    "prefill_budget_wt",
+]

@@ -1,0 +1,380 @@
+"""Iteration-level pipeline scheduler with Token Throttling (gLLM §3).
+
+One `schedule()` call forms one micro-batch (= one pipeline tick's worth of
+work for the first stage).  The scheduler is policy-parameterized:
+
+  * ``PrefillPolicy.GLLM``    — Token Throttling (the paper's technique):
+        decode:  #D = ceil(#RD / #PP_depth)                       (eq. 4)
+        prefill: #P from eq. (3) (WT + UT + threshold)
+  * ``PrefillPolicy.SARATHI`` — the baseline (Sarathi-Serve / vLLM policy):
+        all available decode tokens first, then chunked prefill up to the
+        fixed token budget (#MaxP).
+  * ``NO_WT`` / ``NO_UT``     — the paper's ablations (Fig. 15).
+
+Pipeline-parallel correctness constraint: a request may be resident in at most
+one in-flight micro-batch (its KV pages are appended in sequence order), so
+requests scheduled into batch *t* are unavailable until `complete(t)`.
+"""
+
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.kv_manager import PagedKVManager
+from repro.core.request import Request, RequestState
+from repro.core.throttle import (
+    PrefillPolicy,
+    ThrottleConfig,
+    decode_budget,
+    prefill_budget,
+)
+
+
+@dataclass
+class ScheduledSeq:
+    """One sequence's contribution to a micro-batch."""
+
+    request: Request
+    start_pos: int          # context length before this step (tokens with KV)
+    num_tokens: int         # chunk length (prefill) or 1 (decode)
+    is_prefill: bool
+    # (page, slot) per new token — where this step writes KV.
+    slots: List[Tuple[int, int]] = field(default_factory=list)
+
+    @property
+    def produces_token(self) -> bool:
+        """True if this entry emits a sampled token (decode, or final chunk)."""
+        if not self.is_prefill:
+            return True
+        return self.start_pos + self.num_tokens == self.request.num_effective_prompt_tokens
+
+
+@dataclass
+class ScheduledBatch:
+    batch_id: int
+    prefill: List[ScheduledSeq]
+    decode: List[ScheduledSeq]
+
+    @property
+    def num_prefill_tokens(self) -> int:
+        return sum(s.num_tokens for s in self.prefill)
+
+    @property
+    def num_decode_tokens(self) -> int:
+        return len(self.decode)
+
+    @property
+    def num_tokens(self) -> int:
+        return self.num_prefill_tokens + self.num_decode_tokens
+
+    @property
+    def seqs(self) -> List[ScheduledSeq]:
+        return self.prefill + self.decode
+
+    @property
+    def is_empty(self) -> bool:
+        return not self.prefill and not self.decode
+
+
+@dataclass
+class SchedulerStats:
+    """Per-tick observability (drives Fig. 1/4-style benchmarks)."""
+
+    ticks: int = 0
+    scheduled_prefill_tokens: List[int] = field(default_factory=list)
+    scheduled_decode_tokens: List[int] = field(default_factory=list)
+    kv_free_rate: List[float] = field(default_factory=list)
+    preemptions: int = 0
+
+
+class PipelineScheduler:
+    """Global scheduler owned by the driver worker."""
+
+    def __init__(
+        self,
+        cfg: ThrottleConfig,
+        kv: PagedKVManager,
+        max_model_len: int = 1 << 20,
+        max_batch_seqs: int = 4096,
+        max_prefill_seqs: int = 4096,   # static tick bucket Sp
+        max_chunk_tokens: int = 1 << 20,  # static tick bucket C
+        max_decode_seqs: int = 4096,    # static tick bucket Sd
+    ) -> None:
+        self.cfg = cfg
+        self.kv = kv
+        self.max_model_len = max_model_len
+        self.max_batch_seqs = max_batch_seqs
+        self.max_prefill_seqs = max_prefill_seqs
+        self.max_chunk_tokens = max_chunk_tokens
+        self.max_decode_seqs = max_decode_seqs
+
+        self.waiting: Deque[Request] = deque()          # FCFS admission queue
+        self.running_prefill: List[Request] = []         # partially prefilled
+        self.running_decode: List[Request] = []          # decoding (FCFS order)
+        self._in_flight: Dict[str, int] = {}             # request_id -> batch_id
+        self._batches: Dict[int, ScheduledBatch] = {}
+        self._batch_counter = itertools.count()
+        self.stats = SchedulerStats()
+
+    # ---------------------------------------------------------------- intake
+    def add_request(self, req: Request) -> None:
+        total = req.num_prompt_tokens + req.sampling.max_new_tokens
+        if total > self.max_model_len:
+            raise ValueError(
+                f"request {req.request_id}: {total} tokens > max_model_len {self.max_model_len}"
+            )
+        pool = self.kv.num_pages * self.kv.page_size
+        if total > pool:
+            # would livelock on preempt/recompute: reject at admission
+            raise ValueError(
+                f"request {req.request_id}: {total} tokens exceed the KV pool "
+                f"({pool} token slots) — unservable on this replica")
+        req.state = RequestState.WAITING
+        self.waiting.append(req)
+
+    # ------------------------------------------------------------- accounting
+    @property
+    def num_waiting_prefill_tokens(self) -> int:
+        """#WP — global pending prefill work (waiting + partially prefilled)."""
+        wp = sum(r.remaining_prefill_tokens for r in self.waiting)
+        wp += sum(r.remaining_prefill_tokens for r in self.running_prefill)
+        return wp
+
+    @property
+    def num_running_decode(self) -> int:
+        """#RD — all decode-state requests, in flight or not."""
+        return len(self.running_decode)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running_prefill or self.running_decode
+                    or self._in_flight)
+
+    # ---------------------------------------------------------------- schedule
+    def schedule(self, now: float = 0.0) -> ScheduledBatch:
+        batch_id = next(self._batch_counter)
+        decode_seqs = self._schedule_decode(now)
+        prefill_seqs = self._schedule_prefill(now, len(decode_seqs))
+        batch = ScheduledBatch(batch_id, prefill_seqs, decode_seqs)
+        for seq in batch.seqs:
+            self._in_flight[seq.request.request_id] = batch_id
+        self._batches[batch_id] = batch
+
+        self.stats.ticks += 1
+        self.stats.scheduled_prefill_tokens.append(batch.num_prefill_tokens)
+        self.stats.scheduled_decode_tokens.append(batch.num_decode_tokens)
+        self.stats.kv_free_rate.append(self.kv.kv_free_rate)
+        return batch
+
+    # ----------------------------------------------------------------- decode
+    def _schedule_decode(self, now: float) -> List[ScheduledSeq]:
+        available = [r for r in self.running_decode
+                     if r.request_id not in self._in_flight]
+        if self.cfg.policy is PrefillPolicy.SARATHI:
+            quota = len(available)                     # decode-first, all of it
+        else:
+            quota = decode_budget(self.num_running_decode, self.cfg)
+        quota = min(quota, len(available), self.max_batch_seqs,
+                    self.max_decode_seqs)
+
+        out: List[ScheduledSeq] = []
+        for req in available:
+            if len(out) >= quota:
+                break
+            if not self._ensure_decode_page(req):
+                continue  # could not allocate even after preemption: defer
+            slots = self.kv.allocate(req.request_id, 1)
+            out.append(ScheduledSeq(req, req.seq_len, 1, False, slots))
+        return out
+
+    def _ensure_decode_page(self, req: Request) -> bool:
+        """Make room for one decode token, preempting if necessary (§3.1.3)."""
+        while not self.kv.can_allocate(req.request_id, 1):
+            victim = self._pick_preemption_victim(exclude=req.request_id)
+            if victim is None:
+                return False
+            self._preempt(victim)
+        return True
+
+    def _pick_preemption_victim(self, exclude: str) -> Optional[Request]:
+        """Latest-arrival resident request that is not in flight.
+
+        Partially-prefilled requests are victims *first*: a stalled chunked
+        prefill holding pages while decode is starved is otherwise a
+        deadlock (decode can only preempt decode, prefill can only shrink).
+        Then latest-arrival decode requests (vLLM recompute policy)."""
+        for req in reversed(self.running_prefill):
+            if req.request_id == exclude or req.request_id in self._in_flight:
+                continue
+            return req
+        for req in reversed(self.running_decode):
+            if req.request_id == exclude or req.request_id in self._in_flight:
+                continue
+            return req
+        return None
+
+    def _preempt(self, req: Request) -> None:
+        self.kv.free(req.request_id)
+        if req in self.running_decode:
+            self.running_decode.remove(req)
+        if req in self.running_prefill:
+            self.running_prefill.remove(req)
+        req.preempt()
+        req.state = RequestState.WAITING
+        self.waiting.appendleft(req)   # recompute with priority
+        self.stats.preemptions += 1
+
+    # ---------------------------------------------------------------- prefill
+    def _schedule_prefill(self, now: float, num_decode: int) -> List[ScheduledSeq]:
+        if self.cfg.policy is PrefillPolicy.SARATHI:
+            budget = max(0, self.cfg.max_prefill_tokens - num_decode)
+        else:
+            budget = prefill_budget(
+                self.num_waiting_prefill_tokens, self.kv.kv_free_rate, self.cfg
+            )
+        if budget <= 0:
+            return []
+
+        out: List[ScheduledSeq] = []
+
+        # 1) continue chunked prefills already in progress (not in flight)
+        for req in self.running_prefill:
+            if budget <= 0 or len(out) >= self.max_prefill_seqs:
+                break
+            if req.request_id in self._in_flight:
+                continue
+            took = self._take_prefill_chunk(req, budget, now)
+            if took is None:
+                break  # KV exhausted: stop prefill scheduling entirely
+            out.append(took)
+            budget -= took.num_tokens
+
+        # 2) admit new requests from the waiting queue (FCFS)
+        while self.waiting and budget > 0 and len(out) < min(
+                self.max_batch_seqs, self.max_prefill_seqs):
+            req = self.waiting[0]
+            if self.cfg.policy is not PrefillPolicy.SARATHI:
+                # UT guard: don't admit when below the KV idle threshold.
+                if self.kv.kv_free_rate <= self.cfg.kv_threshold:
+                    break
+            # prefix-cache reuse on first chunk
+            if req.num_prefilled == 0 and self.kv.enable_prefix_caching \
+                    and not self.kv.has_request(req.request_id):
+                cached, pages = self.kv.match_prefix(req.effective_prompt[:-1])
+                if cached:
+                    self.kv.adopt_prefix(req.request_id, cached, pages)
+                    req.num_prefilled = cached
+            took = self._take_prefill_chunk(req, budget, now)
+            if took is None:
+                break
+            self.waiting.popleft()
+            req.state = RequestState.PREFILLING
+            if req.metrics.first_scheduled_time is None:
+                req.metrics.first_scheduled_time = now
+            if not took.produces_token:
+                self.running_prefill.append(req)
+            out.append(took)
+            budget -= took.num_tokens
+        return out
+
+    def _take_prefill_chunk(
+        self, req: Request, budget: int, now: float
+    ) -> Optional[ScheduledSeq]:
+        chunk = min(req.remaining_prefill_tokens, budget,
+                    self.max_chunk_tokens)
+        if chunk <= 0:
+            return None
+        if not self.kv.can_allocate(req.request_id, chunk):
+            # Shrink to what fits rather than stalling completely.
+            cur = self.kv.num_tokens(req.request_id)
+            slack = (self.kv.page_size - cur % self.kv.page_size) % self.kv.page_size
+            headroom = slack + self.kv.num_free_pages * self.kv.page_size
+            chunk = min(chunk, headroom)
+            if chunk <= 0:
+                return None
+        slots = self.kv.allocate(req.request_id, chunk)
+        seq = ScheduledSeq(req, req.num_prefilled, chunk, True, slots)
+        if req in self.running_prefill and seq.produces_token:
+            self.running_prefill.remove(req)
+        return seq
+
+    # ---------------------------------------------------------------- complete
+    def complete(
+        self,
+        batch_id: int,
+        sampled_tokens: Sequence[int],
+        now: float = 0.0,
+    ) -> List[Request]:
+        """Apply results of a finished micro-batch.
+
+        `sampled_tokens` has one token per token-producing seq, in batch order
+        (prefill entries first, then decode), matching `produces_token`.
+        Returns requests that finished this tick.
+        """
+        batch = self._batches.pop(batch_id)
+        finished: List[Request] = []
+        it = iter(sampled_tokens)
+        for seq in batch.seqs:
+            req = seq.request
+            self._in_flight.pop(req.request_id, None)
+            # The step wrote KV for every token it consumed (prefill chunk, or
+            # the single consumed token of a decode step).
+            req.num_prefilled = seq.start_pos + seq.num_tokens
+            if not seq.produces_token:
+                continue
+            if seq.is_prefill and self.kv.enable_prefix_caching:
+                # chunk completed the (effective) prompt -> freeze full pages
+                self.kv.freeze_full_pages(req.request_id, req.effective_prompt)
+            token = int(next(it))
+            req.record_new_token(token, now)
+            if req.is_finished:
+                self.kv.free(req.request_id)
+                if req in self.running_decode:
+                    self.running_decode.remove(req)
+                finished.append(req)
+            elif seq.is_prefill:
+                req.state = RequestState.DECODING
+                self.running_decode.append(req)
+        remaining = sum(1 for _ in it)
+        assert remaining == 0, f"{remaining} unconsumed sampled tokens"
+        return finished
+
+    # ----------------------------------------------------------- fault paths
+    def abort_batch(self, batch_id: int) -> List[Request]:
+        """A worker died mid-flight: the micro-batch's results never arrive.
+        Affected requests recover by recompute — decode/partial-prefill
+        requests are preempted (KV freed, re-queued with priority); their
+        already-generated tokens are preserved (recompute re-prefills them).
+        Returns the affected requests."""
+        batch = self._batches.pop(batch_id, None)
+        if batch is None:
+            return []
+        affected = []
+        for seq in batch.seqs:
+            req = seq.request
+            self._in_flight.pop(req.request_id, None)
+            if req.is_finished:
+                continue
+            self.kv.free(req.request_id)
+            if req in self.running_decode:
+                self.running_decode.remove(req)
+            if req in self.running_prefill:
+                self.running_prefill.remove(req)
+            req.preempt()
+            req.state = RequestState.WAITING
+            if req not in self.waiting:
+                self.waiting.appendleft(req)
+            self.stats.preemptions += 1
+            affected.append(req)
+        return affected
+
+    # ------------------------------------------------------------- invariants
+    def check_invariants(self) -> None:
+        self.kv.check_invariants()
+        ids = [r.request_id for r in self.running_decode]
+        assert len(ids) == len(set(ids)), "duplicate request in running_decode"
+        for rid in self._in_flight:
+            assert self._in_flight[rid] in self._batches

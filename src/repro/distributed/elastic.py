@@ -1,0 +1,72 @@
+"""Elastic re-sharding: move a checkpoint between pipeline factorings.
+
+Parameters are stored logically (stacked [S, R, ...] per block group).  When
+the pipeline grid changes (e.g. a pod shrinks from pp=16/tp=1 to pp=8/tp=2
+after losing a rack), uniform-pattern architectures repartition by a pure
+reshape [S*R, ...] -> [S', R', ...]; heterogeneous patterns (jamba, whisper)
+keep their stage structure and only the tp factor may change (weights are
+not physically tp-sharded in the checkpoint, so that is free).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig, BlockSpec, ParallelPlan
+
+
+def replan(cfg: ArchConfig, new_pp: int, new_tp: int) -> ArchConfig:
+    """A config with the same architecture on a different (pp, tp) grid."""
+    if len(cfg.pattern) == 1:
+        total = cfg.layers_per_stage * cfg.plan.pp
+        if total % new_pp:
+            raise ValueError(f"{total} stacked layers don't tile pp={new_pp}")
+        pattern = (BlockSpec(cfg.pattern[0].kind, total // new_pp),)
+    else:
+        if new_pp != cfg.plan.pp:
+            raise ValueError(
+                f"{cfg.name}: heterogeneous pattern is pinned to pp={cfg.plan.pp}")
+        pattern = cfg.pattern
+    return dataclasses.replace(
+        cfg, pattern=pattern,
+        plan=dataclasses.replace(cfg.plan, pp=new_pp, tp=new_tp))
+
+
+def repartition_params(params: Dict[str, Any], cfg_old: ArchConfig,
+                       cfg_new: ArchConfig):
+    """Reshape stacked stage dims [S,R,...] -> [S',R',...] (host-side)."""
+    if cfg_old.pattern != cfg_new.pattern or cfg_old.plan.pp != cfg_new.plan.pp:
+        def reshape(x):
+            x = np.asarray(x)
+            s, r = x.shape[:2]
+            total = s * r
+            s2 = cfg_new.plan.pp
+            assert total % s2 == 0, (total, s2)
+            return x.reshape((s2, total // s2) + x.shape[2:])
+
+        stages = {k: jax.tree.map(reshape, v)
+                  for k, v in params["stages"].items()}
+        params = dict(params, stages=stages)
+    return params
+
+
+def elastic_restore(ckpt_dir: str, cfg_old: ArchConfig, cfg_new: ArchConfig,
+                    mesh_new, dtype=None):
+    """Load a checkpoint saved under cfg_old onto cfg_new's mesh."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.models import transformer as tfm
+    from repro.runtime.checkpoint import restore_checkpoint
+
+    host = restore_checkpoint(ckpt_dir, tfm.abstract_params(cfg_old))
+    host = repartition_params(host, cfg_old, cfg_new)
+    pspecs = tfm.param_pspecs(cfg_new)
+    return jax.tree.map(
+        lambda a, s: jax.device_put(np.asarray(a),
+                                    NamedSharding(mesh_new, s)),
+        host, pspecs, is_leaf=lambda x: isinstance(x, P))

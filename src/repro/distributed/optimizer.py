@@ -1,0 +1,83 @@
+"""Adam optimizer (self-contained — no optax in this environment).
+
+State is a pytree mirroring the parameters.  Sharding follows the parameter
+PartitionSpecs, so optimizer memory scales down with model parallelism; the
+step is pure jnp and runs inside the jitted train_step.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def adam_init(params) -> AdamState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamState(step=jnp.zeros((), jnp.int32), m=zeros,
+                     v=jax.tree.map(jnp.copy, zeros))
+
+
+def adam_abstract(params) -> AdamState:
+    z = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params)
+    return AdamState(step=jax.ShapeDtypeStruct((), jnp.int32), m=z, v=z)
+
+
+def adam_pspecs(param_specs) -> AdamState:
+    from jax.sharding import PartitionSpec as P
+    return AdamState(step=P(), m=param_specs, v=param_specs)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adam_update(cfg: AdamConfig, grads, params, state: AdamState,
+                gnorm: jax.Array = None) -> Tuple[Any, AdamState, jax.Array]:
+    if gnorm is None:
+        gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+    step = state.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, p, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        u = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        if cfg.weight_decay:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - cfg.lr * u).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    new_p, new_m, new_v = [], [], []
+    for g, p, m, v in zip(flat_g, flat_p, flat_m, flat_v):
+        a, b, c = upd(g, p, m, v)
+        new_p.append(a), new_m.append(b), new_v.append(c)
+    return (jax.tree.unflatten(treedef, new_p),
+            AdamState(step=step, m=jax.tree.unflatten(treedef, new_m),
+                      v=jax.tree.unflatten(treedef, new_v)),
+            gnorm)

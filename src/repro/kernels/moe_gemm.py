@@ -1,0 +1,93 @@
+"""Fused grouped-expert SwiGLU — the MoE hot spot (kimi-k2: 384 experts).
+
+Computes, per expert e over its capacity-padded token buffer:
+    out[e] = (silu(x[e] @ w_gate[e]) * (x[e] @ w_up[e])) @ w_down[e]
+
+The grid walks (expert, token-block, ff-block) with the ff dim minor: each
+step computes one [Ct, ffb] hidden tile in VMEM and immediately contracts it
+into the [Ct, d] accumulator — the [C, ff] hidden never exists in HBM (on
+GPU this is the megablocks-style fusion; on TPU the MXU consumes the tile
+straight from VMEM).  Tiles are MXU-aligned: Ct, ffb multiples of 128 ideal.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref,        # [1, Ct, d]
+            wg_ref,       # [1, d, ffb]
+            wu_ref,       # [1, d, ffb]
+            wd_ref,       # [1, ffb, d]
+            o_ref,        # [1, Ct, d]
+            acc_ref,      # [Ct, d] f32
+            *, num_ff_blocks: int):
+    fb = pl.program_id(2)
+
+    @pl.when(fb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]                                     # [Ct, d]
+    g = jax.lax.dot_general(x, wg_ref[0], (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    u = jax.lax.dot_general(x, wu_ref[0], (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)         # [Ct, ffb]
+    acc_ref[...] += jax.lax.dot_general(
+        h, wd_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(fb == num_ff_blocks - 1)
+    def _finalize():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("token_block", "ff_block",
+                                              "interpret"))
+def fused_moe_ffn(
+    x: jax.Array,         # [E, C, d] capacity-padded per-expert buffers
+    w_gate: jax.Array,    # [E, d, ff]
+    w_up: jax.Array,      # [E, d, ff]
+    w_down: jax.Array,    # [E, ff, d]
+    *,
+    token_block: int = 128,
+    ff_block: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    E, C, d = x.shape
+    ff = w_gate.shape[-1]
+    Ct = min(token_block, C)
+    ffb = min(ff_block, ff)
+    assert C % Ct == 0 and ff % ffb == 0, (C, Ct, ff, ffb)
+    grid = (E * (C // Ct), 1, ff // ffb)
+
+    def x_index(ec, _, fb):
+        return (ec // (C // Ct), ec % (C // Ct), 0)
+
+    def wg_index(ec, _, fb):
+        return (ec // (C // Ct), 0, fb)
+
+    def wd_index(ec, _, fb):
+        return (ec // (C // Ct), fb, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, num_ff_blocks=ff // ffb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Ct, d), x_index),
+            pl.BlockSpec((1, d, ffb), wg_index),
+            pl.BlockSpec((1, d, ffb), wg_index),
+            pl.BlockSpec((1, ffb, d), wd_index),
+        ],
+        out_specs=pl.BlockSpec((1, Ct, d), x_index),
+        scratch_shapes=[pltpu.VMEM((Ct, d), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((E, C, d), x.dtype),
+        interpret=interpret,
+    )(x, w_gate, w_up, w_down)
+    return out

@@ -1,0 +1,151 @@
+"""Paged flash attention — the serving hot spot, TPU-native.
+
+One kernel serves both phases (the gLLM merged micro-batch):
+  * decode:  q [S, 1, H, D]   — one new token against a 32k-page context
+  * prefill: q [S, C, H, D]   — a throttled chunk, causal vs. its positions
+
+TPU adaptation of the vLLM GPU kernel (DESIGN.md §6): the block-table
+indirection moves into the BlockSpec index_map via scalar prefetch — the
+grid walks (seq, q-block, page) and the KV BlockSpec *fetches page
+`tables[s, b]` from HBM into VMEM* while the previous page is being
+consumed (hardware double-buffering replaces the GPU's manual smem staging).
+Online softmax state lives in VMEM scratch across the minor (page) grid dim.
+All tiles are (8,128)-aligned: D = head_dim = 128/96/64, page >= 8.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    # scalar prefetch
+    tables_ref,            # [S * B] int32 (flattened block tables)
+    ctx_ref,               # [S] int32 context lens
+    # inputs
+    q_ref,                 # [1, TQ, H, D]
+    qpos_ref,              # [1, TQ] int32 global positions
+    kv_ref,                # [1, page, 2, KH, D] — page tables[s, b]
+    # outputs
+    o_ref,                 # [1, TQ, H, D]
+    # scratch
+    acc_ref,               # [TQ, H, D] f32
+    m_ref,                 # [TQ, H] f32
+    l_ref,                 # [TQ, H] f32
+    *,
+    kv_heads: int,
+    page: int,
+    num_pages: int,
+):
+    s, qb, b = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(b == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                    # [TQ, H, D]
+    TQ, H, D = q.shape
+    KH = kv_heads
+    G = H // KH
+    kv = kv_ref[0].astype(jnp.float32)                  # [page, 2, KH, D]
+    k, v = kv[:, 0], kv[:, 1]                           # [page, KH, D]
+
+    kpos = b * page + jax.lax.broadcasted_iota(jnp.int32, (page,), 0)
+    ctx = ctx_ref[s]
+    qpos = qpos_ref[0]                                  # [TQ]
+    mask = (kpos[None, :] < ctx) & (kpos[None, :] <= qpos[:, None])  # [TQ,page]
+
+    scale = D ** -0.5
+    parts = []
+    for kh in range(KH):
+        qg = q[:, kh * G:(kh + 1) * G, :].reshape(TQ * G, D)
+        sc = jax.lax.dot_general(qg, k[:, kh, :],
+                                 (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        parts.append(sc.reshape(TQ, G, page))
+    scores = jnp.concatenate(parts, axis=1) * scale     # [TQ, H, page]
+    scores = jnp.where(mask[:, None, :], scores, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+    p = jnp.exp(scores - m_new[..., None])              # [TQ, H, page]
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1)
+    m_ref[...] = m_new
+
+    pv_parts = []
+    for kh in range(KH):
+        pg = p[:, kh * G:(kh + 1) * G, :].reshape(TQ * G, page)
+        pv = jax.lax.dot_general(pg, v[:, kh, :],
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        pv_parts.append(pv.reshape(TQ, G, D))
+    pv = jnp.concatenate(pv_parts, axis=1)              # [TQ, H, D]
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
+
+    @pl.when(b == num_pages - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "q_block"))
+def paged_flash_attention(
+    q: jax.Array,            # [S, TQ, H, D]
+    kv_pages: jax.Array,     # [P, page, 2, KH, D]
+    block_tables: jax.Array, # [S, B] int32
+    context_lens: jax.Array, # [S] int32
+    q_positions: jax.Array,  # [S, TQ] int32
+    *,
+    q_block: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    S, TQ, H, D = q.shape
+    P, page, _, KH, _ = kv_pages.shape
+    B = block_tables.shape[1]
+    tq = min(q_block, TQ)
+    assert TQ % tq == 0, (TQ, tq)
+
+    grid = (S, TQ // tq, B)
+
+    def q_index(s, qb, b, tables, ctx):
+        return (s, qb, 0, 0)
+
+    def pos_index(s, qb, b, tables, ctx):
+        return (s, qb)
+
+    def kv_index(s, qb, b, tables, ctx):
+        return (tables[s * B + b], 0, 0, 0, 0)
+
+    kernel = functools.partial(_kernel, kv_heads=KH, page=page, num_pages=B)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, tq, H, D), q_index),
+                pl.BlockSpec((1, tq), pos_index),
+                pl.BlockSpec((1, page, 2, KH, D), kv_index),
+            ],
+            out_specs=pl.BlockSpec((1, tq, H, D), q_index),
+            scratch_shapes=[
+                pltpu.VMEM((tq, H, D), jnp.float32),
+                pltpu.VMEM((tq, H), jnp.float32),
+                pltpu.VMEM((tq, H), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((S, TQ, H, D), q.dtype),
+        interpret=interpret,
+    )(block_tables.reshape(-1), context_lens, q, q_positions, kv_pages)
+    return out

@@ -1,0 +1,106 @@
+"""RWKV6 (Finch) chunked linear-recurrence kernel — the ssm-family hot spot.
+
+Recurrence (per head, f32 state):
+    o_t = r_t · (S_{t-1} + diag(u) k_t vᵀ_t)
+    S_t = diag(w_t) S_{t-1} + k_t vᵀ_t          (w_t: data-dependent decay)
+
+Chunked form (length-L chunk; P_t = prod_{i<=t} w_i, cumulative within the
+chunk): intra-chunk work becomes two MXU matmuls plus a causal mask,
+inter-chunk state carries as one rank-Dk update —
+
+    o = (r ⊙ P_prev) @ S_0 + tril(A) @ V + diag-term
+    A = (r ⊙ P_prev) @ (k / P)ᵀ,  diag = (r · (u ⊙ k)) per row
+    S_L = P_L ⊙ S_0 + (k ⊙ P_L/P)ᵀ @ V
+
+The grid walks (batch, head, chunk) with the chunk dim minor so the state
+scratch persists across chunks in VMEM (sequential-grid carry — the TPU
+analogue of the GPU kernel's inter-block state in L2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref,      # [1, Tc, 1, D] / [1, D]
+            o_ref,                                   # [1, Tc, 1, D]
+            state_ref,                               # [D, D] f32 scratch
+            *, num_chunks: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)        # [Tc, Dk]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)        # [Tc, Dv]
+    w = w_ref[0, :, 0, :].astype(jnp.float32)        # [Tc, Dk] decay in (0,1]
+    u = u_ref[0].astype(jnp.float32)                 # [Dk]
+    Tc = r.shape[0]
+
+    logw = jnp.log(jnp.maximum(w, 1e-30))
+    logP = jnp.cumsum(logw, axis=0)                  # inclusive  [Tc, Dk]
+    P = jnp.exp(logP)
+    P_prev = jnp.exp(logP - logw)                    # exclusive prefix
+    P_last = jnp.exp(logP[-1])[None, :]              # [1, Dk]
+
+    rP = r * P_prev                                  # [Tc, Dk]
+    kQ = k * jnp.exp(-logP)                          # k / P
+    S0 = state_ref[...]
+
+    A = jax.lax.dot_general(rP, kQ, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [Tc, Tc]
+    row = jax.lax.broadcasted_iota(jnp.int32, (Tc, Tc), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (Tc, Tc), 1)
+    A = jnp.where(row > col, A, 0.0)                 # strictly causal (j < t)
+    diag = jnp.sum(r * (u[None, :] * k), axis=-1)    # [Tc]
+
+    o = jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    o = o + diag[:, None] * v
+    o = o + jax.lax.dot_general(rP, S0, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    kS = k * jnp.exp(logP[-1][None, :] - logP)       # k * P_L / P
+    S_new = P_last.T * S0 + jax.lax.dot_general(
+        kS, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    state_ref[...] = S_new
+    o_ref[0, :, 0, :] = o.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_chunked_scan(
+    r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,  # [B, T, H, D]
+    u: jax.Array,                                            # [H, D]
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+) -> jax.Array:
+    B, T, H, D = r.shape
+    Tc = min(chunk, T)
+    assert T % Tc == 0, (T, Tc)
+    grid = (B, H, T // Tc)
+
+    def seq_index(b, h, c):
+        return (b, c, h, 0)
+
+    def u_index(b, h, c):
+        return (h, 0)
+
+    spec = pl.BlockSpec((1, Tc, 1, D), seq_index)
+    out = pl.pallas_call(
+        functools.partial(_kernel, num_chunks=T // Tc),
+        grid=grid,
+        in_specs=[spec, spec, spec, spec, pl.BlockSpec((1, D), u_index)],
+        out_specs=spec,
+        scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((B, T, H, D), r.dtype),
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return out

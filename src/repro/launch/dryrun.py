@@ -1,0 +1,184 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production mesh, prove it fits (memory_analysis) and extract the
+roofline terms (cost_analysis + HLO collective parse).
+
+The XLA_FLAGS line above MUST precede any jax import — jax locks the device
+count at first init.  Do not set that flag anywhere global (smoke tests and
+benches must see 1 device).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-14b \
+        --shape decode_32k [--multi-pod] [--out results.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ASSIGNED_ARCHS, ASSIGNED_SHAPES, applicable_shapes,
+                           get_config)
+from repro.distributed.optimizer import adam_abstract
+from repro.distributed.pipeline import build_serve_tick, build_train_step, tree_specs
+from repro.launch.mesh import derive_pipeline_mesh, make_production_mesh
+from repro.launch.shapes import (serve_cell_dims, serve_input_specs,
+                                 train_batch_specs, train_cell_dims)
+from repro.models import transformer as tfm
+from repro.roofline.analysis import (RooflineCell, model_flops,
+                                     parse_collective_bytes, param_count)
+
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def abstract_params_sharded(cfg, mesh):
+    pspecs = tfm.param_pspecs(cfg)
+    abs_p = tfm.abstract_params(cfg)
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                          sharding=NamedSharding(mesh, s)),
+        abs_p, pspecs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool = False):
+    """Lower + compile one cell; returns (compiled, lowered, meta dict)."""
+    cfg = get_config(arch)
+    pp_env, tp_env = os.environ.get("REPRO_PP"), os.environ.get("REPRO_TP")
+    if pp_env and tp_env:
+        from repro.distributed.elastic import replan
+        cfg = replan(cfg, int(pp_env), int(tp_env))
+    shape = ASSIGNED_SHAPES[shape_name]
+    prod = make_production_mesh(multi_pod=multi_pod)
+    mesh = derive_pipeline_mesh(prod, cfg.plan.pp, cfg.plan.tp)
+    chips = int(jax.device_count())
+    t0 = time.time()
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            dims = train_cell_dims(cfg, shape, data=mesh.shape["data"],
+                                   pods=mesh.shape.get("pod", 1))
+            gc = os.environ.get("REPRO_GRAD_COMPRESSION") or None
+            step = build_train_step(cfg, mesh, enc_width=dims.enc_width,
+                                    grad_compression=gc)
+            params = abstract_params_sharded(cfg, mesh)
+            opt = adam_abstract(params)
+            batch = train_batch_specs(cfg, dims, mesh)
+            lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
+                params, opt, batch)
+        else:
+            dims = serve_cell_dims(cfg, shape, data=mesh.shape["data"])
+            tick, specs = build_serve_tick(cfg, mesh, dims)
+            params = abstract_params_sharded(cfg, mesh)
+            caches, carry, meta, fresh, sampling = serve_input_specs(
+                cfg, dims, mesh, specs)
+            lowered = jax.jit(tick, donate_argnums=(1, 2)).lower(
+                params, caches, carry, meta, fresh, sampling)
+        compiled = lowered.compile()
+
+    t_compile = time.time() - t0
+    return compiled, lowered, dict(cfg=cfg, shape=shape, chips=chips,
+                                   mesh=mesh, t_compile=t_compile)
+
+
+def analyse_cell(arch: str, shape_name: str, multi_pod: bool = False,
+                 verbose: bool = True) -> dict:
+    compiled, lowered, info = lower_cell(arch, shape_name, multi_pod)
+    cfg, shape, chips = info["cfg"], info["shape"], info["chips"]
+
+    memstats = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    # loop-aware costs: XLA's cost_analysis counts while bodies once; our
+    # parser scales by the HLO's known_trip_count annotations
+    from repro.roofline.hlo_cost import analyse_hlo_text
+    hc = analyse_hlo_text(hlo)
+
+    per_dev_bytes = (memstats.argument_size_in_bytes
+                     + memstats.output_size_in_bytes
+                     - memstats.alias_size_in_bytes
+                     + memstats.temp_size_in_bytes)
+    cell = RooflineCell(
+        arch=arch, shape=shape_name,
+        mesh="2x16x16" if multi_pod else "16x16", chips=chips,
+        hlo_flops=float(hc["flops"]),
+        hlo_bytes=float(hc["bytes"]),
+        collective_bytes=float(hc["collective_bytes"]),
+        collective_breakdown={k: int(v) for k, v in hc["collectives"].items()},
+        model_flops_per_chip=model_flops(cfg, shape, chips, shape.kind),
+        per_device_memory_bytes=float(per_dev_bytes),
+        notes=f"compile={info['t_compile']:.1f}s "
+              f"params={param_count(cfg)/1e9:.1f}B "
+              f"active={param_count(cfg, True)/1e9:.1f}B "
+              f"raw_xla_flops={ca.get('flops', 0.0):.3g} "
+              f"raw_xla_bytes={ca.get('bytes accessed', 0.0):.3g}",
+    )
+    if verbose:
+        print(memstats)
+        print({k: ca.get(k) for k in ("flops", "bytes accessed")})
+        print("collectives:", hc["collectives"])
+        d = cell.to_dict()
+        print(json.dumps({k: d[k] for k in (
+            "arch", "shape", "mesh", "t_compute", "t_memory", "t_collective",
+            "bottleneck", "useful_ratio", "roofline_fraction",
+            "per_device_memory_bytes", "notes")}, indent=1))
+    return cell.to_dict()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        meshes = (False,) if args.single_pod_only else (False, True)
+        todo = [(a, s.name, mp)
+                for a in ASSIGNED_ARCHS
+                for s in applicable_shapes(get_config(a))
+                for mp in meshes]
+    else:
+        todo = [(args.arch, args.shape, args.multi_pod)]
+
+    # order small-to-large so results stream in early
+    size_order = {"qwen1.5-0.5b": 0, "whisper-small": 1, "internlm2-1.8b": 2,
+                  "rwkv6-3b": 3, "minicpm3-4b": 4, "olmoe-1b-7b": 5,
+                  "qwen2-vl-7b": 6, "qwen2.5-14b": 7,
+                  "jamba-1.5-large-398b": 8, "kimi-k2-1t-a32b": 9}
+    todo.sort(key=lambda t: (size_order.get(t[0], 99), t[2], t[1]))
+
+    failures = []
+    for arch, shape, mp in todo:
+        tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+        print(f"=== {tag} ===", flush=True)
+        try:
+            cells.append(analyse_cell(arch, shape, mp))
+        except Exception as e:  # noqa: BLE001 — report all failures at the end
+            failures.append((tag, repr(e)))
+            traceback.print_exc()
+        if args.out:   # incremental flush: long sweeps stream results
+            with open(args.out, "w") as f:
+                json.dump(cells, f, indent=1)
+    if failures:
+        print("FAILURES:")
+        for tag, err in failures:
+            print(" ", tag, err)
+        return 1
+    print(f"OK: {len(cells)} cells lowered + compiled")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

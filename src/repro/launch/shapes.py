@@ -1,0 +1,185 @@
+"""Cell geometry: maps each assigned (architecture x input-shape) pair to the
+static tick/batch layout it is lowered with, plus abstract `input_specs()`
+(ShapeDtypeStruct stand-ins — weak-type-correct, shardable, zero allocation)
+for the multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models.serve import ServeDims
+
+PAGE_SIZE = 16
+PAGES_PER_BLOCK = 8
+
+
+def _ceil(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _round_mult(x: int, m: int) -> int:
+    return _ceil(x, m) * m
+
+
+# ----------------------------------------------------------------------------
+# Serving cells
+# ----------------------------------------------------------------------------
+
+def serve_cell_dims(cfg: ArchConfig, shape: ShapeSpec, data: int = 16,
+                    *, max_prefill: int = 2048) -> ServeDims:
+    """Static per-replica tick geometry for a serving cell."""
+    pp = cfg.plan.pp
+    page = PAGE_SIZE
+    Te = 1536 if cfg.is_encoder_decoder else 0
+    pages_per_seq = _round_mult(_ceil(shape.seq_len, page), PAGES_PER_BLOCK)
+    uses_pages = cfg.family not in ("ssm",)
+
+    if shape.kind == "prefill":
+        seqs_rep = max(1, _ceil(shape.global_batch, data))
+        Sp, C = 1, max_prefill
+        Sd = 8                                # decode rows forming behind prefill
+        pool = seqs_rep * pages_per_seq + 16 * PAGES_PER_BLOCK if uses_pages else 8
+        return ServeDims(Sp=Sp, C=C, Sd=Sd, pages=pool, page=page,
+                         Bp=pages_per_seq, Bd=pages_per_seq,
+                         slots=max(8, seqs_rep + Sd), Te=Te)
+
+    # decode cells
+    seqs_rep = max(1, _ceil(shape.global_batch, data))
+    seq_shard = cfg.plan.seq_shard_kv and shape.global_batch < data \
+        and cfg.family != "ssm"
+    if seq_shard:
+        # sequence-sharded KV: each replica holds an interleaved 1/data slice
+        local_pages = _round_mult(_ceil(shape.seq_len, page * data),
+                                  PAGES_PER_BLOCK)
+        pool = local_pages + 2 * PAGES_PER_BLOCK
+        Bd = local_pages
+    else:
+        pool = seqs_rep * pages_per_seq + 2 * PAGES_PER_BLOCK if uses_pages else 8
+        Bd = pages_per_seq if uses_pages else 8
+    Sd = max(1, _ceil(seqs_rep, pp))
+    return ServeDims(Sp=0, C=0, Sd=Sd, pages=pool if uses_pages else 8,
+                     page=page, Bp=8, Bd=Bd,
+                     slots=max(1, seqs_rep), Te=Te, seq_shard=seq_shard)
+
+
+# ----------------------------------------------------------------------------
+# Training cells
+# ----------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TrainDims:
+    M: int               # total micro-batches (sharded over pod)
+    mbg: int             # sequences per micro-batch (sharded over data)
+    T: int
+    enc_width: int = 0   # whisper payload split
+    stub_width: int = 0  # frontend-stub embedding rows (vlm/audio)
+
+
+def train_cell_dims(cfg: ArchConfig, shape: ShapeSpec, data: int = 16,
+                    pods: int = 1) -> TrainDims:
+    B, T = shape.global_batch, shape.seq_len
+    mbg = data                                   # 1 sequence per replica per mb
+    M = B // (mbg * 1)
+    enc_width = T // 2 if cfg.is_encoder_decoder else 0
+    stub = 0
+    if cfg.family == "vlm":
+        stub = 256
+    elif cfg.family == "audio":
+        stub = enc_width                          # precomputed frame embeddings
+    return TrainDims(M=M, mbg=mbg, T=T, enc_width=enc_width, stub_width=stub)
+
+
+# ----------------------------------------------------------------------------
+# Abstract inputs (dry-run)
+# ----------------------------------------------------------------------------
+
+def _sds(shape, dtype, mesh: Optional[Mesh] = None, spec: Optional[P] = None):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec or P()))
+
+
+def train_batch_specs(cfg: ArchConfig, dims: TrainDims, mesh: Mesh):
+    has_pod = "pod" in mesh.axis_names
+    bspec = P("pod", "data", None) if has_pod else P(None, "data", None)
+    espec = P(*(tuple(bspec) + (None,)))
+    batch: Dict[str, Any] = {
+        "tokens": _sds((dims.M, dims.mbg, dims.T), jnp.int32, mesh, bspec),
+        "labels": _sds((dims.M, dims.mbg, dims.T), jnp.int32, mesh, bspec),
+    }
+    if dims.stub_width:
+        batch["embeds"] = _sds((dims.M, dims.mbg, dims.stub_width, cfg.d_model),
+                               jnp.dtype(cfg.dtype), mesh, espec)
+    return batch
+
+
+def serve_input_specs(cfg: ArchConfig, dims: ServeDims, mesh: Mesh,
+                      specs: Dict[str, Tuple[Any, Any]]):
+    """Abstract (caches, carry, meta, fresh) for the serve tick."""
+    from repro.models import serve as serve_lib
+
+    S = cfg.plan.pp
+    repl = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    dt = jnp.dtype(cfg.dtype)
+    defs = serve_lib.cache_defs(cfg, dims)
+    shards = specs["caches"][0]
+    caches = {
+        gk: {name: jax.ShapeDtypeStruct(
+                _scale_replica(leaf[0], shards[gk][name], repl),
+                serve_lib.cache_leaf_dtype(name, dt),
+                sharding=shards[gk][name])
+             for name, leaf in grp.items()}
+        for gk, grp in defs.items()}
+
+    W = dims.prefill_width
+    carry_sh = specs["carry"][0]
+    carry = {
+        "xp": jax.ShapeDtypeStruct((S, repl * dims.Sp, W, cfg.d_model), dt,
+                                   sharding=carry_sh),
+        "xd": jax.ShapeDtypeStruct((S, repl * dims.Sd, 1, cfg.d_model), dt,
+                                   sharding=carry_sh),
+    }
+    fresh_sh = specs["fresh"][0]
+    fresh = {
+        "xp": jax.ShapeDtypeStruct((repl * dims.Sp, W, cfg.d_model), dt,
+                                   sharding=fresh_sh),
+        "xd": jax.ShapeDtypeStruct((repl * dims.Sd, 1, cfg.d_model), dt,
+                                   sharding=fresh_sh),
+    }
+    meta_abs = serve_lib.abstract_meta(dims, S)
+    meta = {
+        k: jax.ShapeDtypeStruct(
+            (v.shape[0], repl * v.shape[1]) + tuple(v.shape[2:]), v.dtype,
+            sharding=specs["meta"][0][k])
+        for k, v in meta_abs.items()
+    }
+    sampling = {
+        "temps": jax.ShapeDtypeStruct(
+            (repl * (dims.Sp + dims.Sd),), jnp.float32,
+            sharding=NamedSharding(mesh, P(specs["fresh"][0].spec[0]))),
+        "seed": jax.ShapeDtypeStruct((), jnp.uint32,
+                                     sharding=NamedSharding(mesh, P())),
+    }
+    return caches, carry, meta, fresh, sampling
+
+
+def _scale_replica(shape, sharding: NamedSharding, repl: int):
+    """Cache shapes are per-replica; the global array multiplies every
+    'data'/'pod'-sharded dim by the replica count."""
+    spec = sharding.spec
+    out = list(shape)
+    for i, entry in enumerate(spec):
+        names = entry if isinstance(entry, tuple) else (entry,)
+        if any(n in ("data", "pod") for n in names if n):
+            out[i] = shape[i] * repl
+    return tuple(out)

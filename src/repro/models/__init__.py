@@ -1,0 +1,34 @@
+"""Model definitions: unified heterogeneous transformer stack."""
+
+from repro.models.transformer import (
+    abstract_params,
+    block_apply_train,
+    cross_entropy,
+    embed_apply,
+    head_apply,
+    init_params,
+    model_param_defs,
+    param_pspecs,
+    param_shapes,
+    stage_forward_train,
+)
+from repro.models.serve import (
+    ServeDims,
+    abstract_caches,
+    abstract_meta,
+    block_apply_serve,
+    cache_pspecs,
+    init_caches,
+    meta_pspecs,
+    stage_forward_serve,
+    zero_meta,
+)
+
+__all__ = [
+    "abstract_params", "block_apply_train", "cross_entropy", "embed_apply",
+    "head_apply", "init_params", "model_param_defs", "param_pspecs",
+    "param_shapes", "stage_forward_train",
+    "ServeDims", "abstract_caches", "abstract_meta", "block_apply_serve",
+    "cache_pspecs", "init_caches", "meta_pspecs", "stage_forward_serve",
+    "zero_meta",
+]

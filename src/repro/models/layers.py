@@ -1,0 +1,107 @@
+"""Shared neural-net layers: norms, RoPE/M-RoPE, MLPs, embeddings, sampling."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x: jax.Array, g: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * g.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jax.Array, g: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * g.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(x: jax.Array, p: dict, kind: str, eps: float) -> jax.Array:
+    if kind == "layernorm":
+        return layernorm(x, p["g"], p["b"], eps)
+    return rmsnorm(x, p["g"], eps)
+
+
+# ----------------------------------------------------------------------------
+# Rotary embeddings
+# ----------------------------------------------------------------------------
+
+def _rope_angles(positions: jax.Array, dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions [...,] -> (cos, sin) each [..., dim/2] float32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # [..., dim/2]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _rotate(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x [..., H, D]; cos/sin broadcastable [..., 1, D/2]."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [..., T, H, D], positions [..., T] -> rotary-embedded x."""
+    cos, sin = _rope_angles(positions, x.shape[-1], theta)
+    return _rotate(x, cos[..., None, :], sin[..., None, :])
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions3: jax.Array,           # [3, ..., T] (temporal, height, width)
+    sections: Tuple[int, int, int],  # frequency-split sizes, sum == D/2
+    theta: float,
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: the D/2 frequency bands are split into
+    (t, h, w) sections, each rotated by its own position stream.  For text
+    tokens the three streams coincide and M-RoPE reduces to RoPE."""
+    D = x.shape[-1]
+    assert sum(sections) == D // 2, (sections, D)
+    inv = 1.0 / (theta ** (jnp.arange(0, D, 2, dtype=jnp.float32) / D))
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=D // 2)
+    # per-frequency position stream: gather the section's positions
+    pos3 = jnp.moveaxis(positions3, 0, -1).astype(jnp.float32)  # [..., T, 3]
+    pos = jnp.take(pos3, sec_id, axis=-1)                        # [..., T, D/2]
+    ang = pos * inv
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    return _rotate(x, cos[..., None, :], sin[..., None, :])
+
+
+# ----------------------------------------------------------------------------
+# MLPs
+# ----------------------------------------------------------------------------
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def gelu_mlp(x: jax.Array, w1: jax.Array, b1: jax.Array, w2: jax.Array, b2: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x @ w1 + b1, approximate=True) @ w2 + b2
+
+
+def mlp_apply(x: jax.Array, p: dict, act: str) -> jax.Array:
+    if act == "gelu":
+        return gelu_mlp(x, p["w1"], p["b1"], p["w2"], p["b2"])
+    return swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+
+
+# ----------------------------------------------------------------------------
+# Sampling
+# ----------------------------------------------------------------------------
+
+def sample_tokens(
+    logits: jax.Array,               # [rows, V]
+    rng: Optional[jax.Array],
+    temperature: float = 0.0,
+) -> jax.Array:
+    if temperature <= 0.0 or rng is None:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(rng, logits / temperature, axis=-1).astype(jnp.int32)

@@ -1,0 +1,335 @@
+"""State-space / linear-recurrence mixers: Mamba (jamba) and RWKV6 (Finch).
+
+Both expose a single entry point operating on [B, T, d] with an optional
+recurrent state: train/prefill run the scan over T and return the final
+state; decode calls the same function with T == 1 and the carried state.
+The sequential `lax.scan` here is the reference path; the chunked Pallas
+kernel (`repro.kernels.rwkv6_scan`) implements the throughput path.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------------------
+# Mamba (S6, selective SSM)  [arXiv:2312.00752]
+# ----------------------------------------------------------------------------
+
+class MambaState(NamedTuple):
+    conv: jax.Array    # [B, d_conv - 1, d_inner]
+    ssm: jax.Array     # [B, d_inner, d_state] float32
+
+
+def mamba_init_state(batch: int, d_inner: int, d_state: int, d_conv: int,
+                     dtype=jnp.bfloat16) -> MambaState:
+    return MambaState(
+        conv=jnp.zeros((batch, d_conv - 1, d_inner), dtype),
+        ssm=jnp.zeros((batch, d_inner, d_state), jnp.float32),
+    )
+
+
+def mamba_mixer(
+    x: jax.Array,                       # [B, T, d]
+    p: Dict[str, jax.Array],
+    *,
+    d_state: int,
+    d_conv: int,
+    state: Optional[MambaState] = None,
+    valid: Optional[jax.Array] = None,       # [B, T] bool (padding at the end)
+    chunk_lens: Optional[jax.Array] = None,  # [B] valid-row counts
+) -> Tuple[jax.Array, MambaState]:
+    B, T, d = x.shape
+    xz = x @ p["in_proj"]                               # [B, T, 2*di]
+    di = xz.shape[-1] // 2
+    xi, z = xz[..., :di], xz[..., di:]
+    if valid is not None:
+        xi = jnp.where(valid[..., None], xi, 0)
+
+    # causal depthwise conv over time
+    conv_in = xi if state is None else jnp.concatenate([state.conv.astype(xi.dtype), xi], axis=1)
+    pad = d_conv - 1 if state is None else 0
+    conv_in_p = jnp.pad(conv_in, ((0, 0), (pad, 0), (0, 0)))
+    # windows: y_t = sum_j w_j * x_{t-(K-1)+j}
+    yc = jnp.zeros((B, T, di), jnp.float32)
+    for j in range(d_conv):
+        yc = yc + conv_in_p[:, j : j + T, :].astype(jnp.float32) * \
+            p["conv_w"][j].astype(jnp.float32)
+    xi = jax.nn.silu(yc + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    if chunk_lens is None:
+        new_conv = jax.lax.dynamic_slice_in_dim(
+            conv_in_p, conv_in_p.shape[1] - (d_conv - 1), d_conv - 1, axis=1)
+    else:
+        # last (d_conv-1) *valid* rows of [old_state | chunk]
+        idx = chunk_lens[:, None] + jnp.arange(d_conv - 1)[None, :]  # [B, K-1]
+        new_conv = jnp.take_along_axis(conv_in_p, idx[..., None], axis=1)
+
+    # input-dependent SSM parameters
+    dtr = p["dt_proj"].shape[0]
+    dbc = xi @ p["x_proj"]                              # [B, T, dtr + 2*ds]
+    dt_raw = dbc[..., :dtr]
+    Bm = dbc[..., dtr : dtr + d_state].astype(jnp.float32)
+    Cm = dbc[..., dtr + d_state :].astype(jnp.float32)
+    dt = jax.nn.softplus((dt_raw @ p["dt_proj"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # [B, T, di]
+    if valid is not None:
+        dt = dt * valid[..., None]      # frozen state on padded rows (dA=1)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))        # [di, ds]
+    dA = jnp.exp(dt[..., None] * A)                     # [B, T, di, ds]
+    dBx = dt[..., None] * Bm[:, :, None, :] * xi.astype(jnp.float32)[..., None]
+
+    h0 = (jnp.zeros((B, di, d_state), jnp.float32) if state is None
+          else state.ssm)
+
+    chunk = _mamba_chunk()
+    if valid is None and chunk > 0 and T % chunk == 0 and T > chunk:
+        # blocked selective scan: associative scan inside each chunk (the
+        # S4/S6 parallel form), one state hand-off per chunk — removes the
+        # per-token HBM round-trip of the [B, di, ds] state (§Perf).
+        L = chunk
+        NC = T // L
+
+        def chunk_body(h, inp):
+            dA_c, dBx_c, C_c = inp                      # [B, L, di, ds] / ...
+
+            def comb(e1, e2):
+                a1, b1 = e1
+                a2, b2 = e2
+                return a1 * a2, a2 * b1 + b2
+
+            A_cum, b_cum = jax.lax.associative_scan(
+                comb, (dA_c, dBx_c), axis=1)
+            hs = A_cum * h[:, None] + b_cum             # [B, L, di, ds]
+            y_c = jnp.einsum("blds,bls->bld", hs, C_c)
+            return hs[:, -1], y_c
+
+        xs = (jnp.stack(jnp.split(dA, NC, axis=1)),
+              jnp.stack(jnp.split(dBx, NC, axis=1)),
+              jnp.stack(jnp.split(Cm, NC, axis=1)))
+        hT, ys = jax.lax.scan(chunk_body, h0, xs)
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, T, di)
+    else:
+        def step(h, inp):
+            dA_t, dBx_t, C_t = inp
+            h = dA_t * h + dBx_t                        # [B, di, ds]
+            y = jnp.einsum("bds,bs->bd", h, C_t)
+            return h, y
+
+        hT, ys = jax.lax.scan(step, h0,
+                              (jnp.moveaxis(dA, 1, 0), jnp.moveaxis(dBx, 1, 0),
+                               jnp.moveaxis(Cm, 1, 0)))
+        y = jnp.moveaxis(ys, 0, 1)                      # [B, T, di]
+    y = y + xi.astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ p["out_proj"]
+    return out, MambaState(conv=new_conv.astype(x.dtype), ssm=hT)
+
+
+# ----------------------------------------------------------------------------
+# RWKV6 (Finch) — data-dependent decay linear attention  [arXiv:2404.05892]
+# ----------------------------------------------------------------------------
+
+class RWKVState(NamedTuple):
+    tm_x: jax.Array    # [B, d]   last input of the time-mix block
+    cm_x: jax.Array    # [B, d]   last input of the channel-mix block
+    wkv: jax.Array     # [B, H, dk, dv] float32
+
+
+def rwkv_init_state(batch: int, d: int, heads: int, head_dim: int,
+                    dtype=jnp.bfloat16) -> RWKVState:
+    return RWKVState(
+        tm_x=jnp.zeros((batch, d), dtype),
+        cm_x=jnp.zeros((batch, d), dtype),
+        wkv=jnp.zeros((batch, heads, head_dim, head_dim), jnp.float32),
+    )
+
+
+def _token_shift(x: jax.Array, last: jax.Array) -> jax.Array:
+    """sx_t = x_{t-1} - x_t with x_{-1} = last (carried across chunks)."""
+    prev = jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+    return prev - x
+
+
+def _mamba_chunk() -> int:
+    """Selective-scan chunk length (0 = per-token lax.scan) — §Perf knob."""
+    import os
+    return int(os.environ.get("REPRO_MAMBA_CHUNK", "256"))
+
+
+def _rwkv_chunk() -> int:
+    """WKV chunk length for the blocked scan (0 = per-token lax.scan).
+    §Perf knob: the per-token scan round-trips the [B,H,D,D] state through
+    HBM every token."""
+    import os
+    return int(os.environ.get("REPRO_RWKV_CHUNK", "64"))
+
+
+def _wkv_chunked(r, k, v, w, u, S0, chunk: int):
+    """Blocked WKV6: o_t = r_t·(S_{t-1} + diag(u) k_t vᵀ_t), S_t = w_t⊙S + kvᵀ.
+
+    Within a chunk (P = inclusive decay product): two MXU matmuls + causal
+    mask; across chunks: one rank-D state update per chunk.  Identical math
+    to kernels/rwkv6_scan.py (which is its TPU Pallas form)."""
+    B, T, H, D = r.shape
+    L = chunk
+    NC = T // L
+
+    def f32(x):
+        return x.astype(jnp.float32)
+
+    rc = f32(r).reshape(B, NC, L, H, D)
+    kc = f32(k).reshape(B, NC, L, H, D)
+    vc = f32(v).reshape(B, NC, L, H, D)
+    logw = jnp.log(jnp.maximum(f32(w), 1e-30)).reshape(B, NC, L, H, D)
+    logP = jnp.cumsum(logw, axis=2)                      # inclusive
+    P_prev = jnp.exp(logP - logw)                        # exclusive prefix
+    kQ = kc * jnp.exp(-logP)
+    rP = rc * P_prev
+    kS = kc * jnp.exp(logP[:, :, -1:, :, :] - logP)      # k * P_L / P
+    P_last = jnp.exp(logP[:, :, -1])                     # [B, NC, H, D]
+
+    A = jnp.einsum("bnlhd,bnmhd->bnhlm", rP, kQ)
+    mask = jnp.tril(jnp.ones((L, L), bool), k=-1)        # strictly causal
+    A = jnp.where(mask[None, None, None], A, 0.0)
+    diag = jnp.sum(rc * (f32(u)[None, None, None] * kc), axis=-1)
+    intra = jnp.einsum("bnhlm,bnmhd->bnlhd", A, vc) + diag[..., None] * vc
+
+    def body2(S, inp):
+        rP_n, kS_n, v_n, Pl_n = inp
+        o_inter = jnp.einsum("blhd,bhdv->blhv", rP_n, S)
+        S_new = Pl_n[..., None] * S + jnp.einsum("blhd,blhv->bhdv", kS_n, v_n)
+        return S_new, o_inter
+
+    xs = (jnp.moveaxis(rP, 1, 0), jnp.moveaxis(kS, 1, 0),
+          jnp.moveaxis(vc, 1, 0), jnp.moveaxis(P_last, 1, 0))
+    ST, o_inter = jax.lax.scan(body2, S0, xs)
+    o = intra + jnp.moveaxis(o_inter, 0, 1)              # [B, NC, L, H, D]
+    return o.reshape(B, T, H, D), ST
+
+
+def _last_valid_row(x: jax.Array, last: jax.Array,
+                    chunk_lens: Optional[jax.Array]) -> jax.Array:
+    """New shift-state: x[chunk_len-1] per sequence (old state if len==0)."""
+    if chunk_lens is None:
+        return x[:, -1, :]
+    idx = jnp.maximum(chunk_lens - 1, 0)
+    picked = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0, :]
+    return jnp.where((chunk_lens > 0)[:, None], picked, last)
+
+
+def rwkv_time_mix(
+    x: jax.Array,                       # [B, T, d]
+    p: Dict[str, jax.Array],
+    *,
+    head_dim: int,
+    state: Optional[RWKVState] = None,
+    valid: Optional[jax.Array] = None,
+    chunk_lens: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (out, new_tm_x, new_wkv)."""
+    B, T, d = x.shape
+    H = d // head_dim
+    last = (jnp.zeros((B, d), x.dtype) if state is None else state.tm_x)
+    sx = _token_shift(x, last)
+    xr = x + sx * p["mu_r"]
+    xk = x + sx * p["mu_k"]
+    xv = x + sx * p["mu_v"]
+    xg = x + sx * p["mu_g"]
+    xw = x + sx * p["mu_w"]
+
+    r = (xr @ p["w_r"]).reshape(B, T, H, head_dim)
+    k = (xk @ p["w_k"]).reshape(B, T, H, head_dim)
+    v = (xv @ p["w_v"]).reshape(B, T, H, head_dim)
+    g = jax.nn.silu(xg @ p["w_g"])
+    # data-dependent decay (the Finch contribution): w = exp(-exp(w0 + lora))
+    dd = jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]    # [B, T, d]
+    logw = -jnp.exp(jnp.clip(p["w0"].astype(jnp.float32)
+                             + dd.astype(jnp.float32), -20.0, 10.0))
+    w = jnp.exp(logw).reshape(B, T, H, head_dim)         # decay in (0, 1)
+    u = p["u"].reshape(H, head_dim).astype(jnp.float32)  # bonus for current token
+
+    S0 = (jnp.zeros((B, H, head_dim, head_dim), jnp.float32) if state is None
+          else state.wkv)
+    valid_t = (jnp.ones((B, T), jnp.float32) if valid is None
+               else valid.astype(jnp.float32))
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t, m_t = inp                    # [B, H, dk] / [B,H,dv]
+        kv = k_t.astype(jnp.float32)[..., :, None] * \
+            v_t.astype(jnp.float32)[..., None, :]        # [B, H, dk, dv]
+        kv = kv * m_t[:, None, None, None]               # padded rows: no-op
+        o = jnp.einsum("bhk,bhkv->bhv", r_t.astype(jnp.float32),
+                       S + u[None, :, :, None] * kv)
+        w_eff = w_t.astype(jnp.float32) * m_t[:, None, None] + \
+            (1.0 - m_t)[:, None, None]                   # decay=1 when padded
+        S = w_eff[..., :, None] * S + kv
+        return S, o
+
+    chunk = _rwkv_chunk()
+    if valid is None and chunk > 0 and T % chunk == 0 and T > chunk:
+        # chunked linear recurrence (same math as kernels/rwkv6_scan.py):
+        # turns T HBM-round-trip scan steps into T/chunk matmul blocks —
+        # the memory-roofline fix measured in EXPERIMENTS.md §Perf.
+        o, ST = _wkv_chunked(r, k, v, w, u, S0, chunk)
+        o = o.reshape(B, T, d)
+    else:
+        ST, os = jax.lax.scan(
+            step, S0,
+            (jnp.moveaxis(r, 1, 0), jnp.moveaxis(k, 1, 0),
+             jnp.moveaxis(v, 1, 0), jnp.moveaxis(w, 1, 0),
+             jnp.moveaxis(valid_t, 1, 0)))
+        o = jnp.moveaxis(os, 0, 1).reshape(B, T, d)      # [B, T, d]
+    # per-head group norm
+    o = o.reshape(B, T, H, head_dim)
+    mu = jnp.mean(o, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(o - mu), axis=-1, keepdims=True)
+    o = (o - mu) * jax.lax.rsqrt(var + 64e-5)
+    o = (o.reshape(B, T, d) * p["ln_x_g"].astype(jnp.float32)).astype(x.dtype)
+    out = (o * g.astype(x.dtype)) @ p["w_o"]
+    return out, _last_valid_row(x, last, chunk_lens), ST
+
+
+def rwkv_channel_mix(
+    x: jax.Array,                       # [B, T, d]
+    p: Dict[str, jax.Array],
+    *,
+    state: Optional[RWKVState] = None,
+    chunk_lens: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    B, T, d = x.shape
+    last = (jnp.zeros((B, d), x.dtype) if state is None else state.cm_x)
+    sx = _token_shift(x, last)
+    xk = x + sx * p["cm_mu_k"]
+    xr = x + sx * p["cm_mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["cm_k"]))
+    out = jax.nn.sigmoid(xr @ p["cm_r"]) * (k @ p["cm_v"])
+    return out, _last_valid_row(x, last, chunk_lens)
+
+
+def rwkv_block(
+    x: jax.Array,
+    p: Dict[str, jax.Array],
+    *,
+    head_dim: int,
+    norm_eps: float,
+    state: Optional[RWKVState] = None,
+    valid: Optional[jax.Array] = None,
+    chunk_lens: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, RWKVState]:
+    from repro.models.layers import layernorm
+
+    h = layernorm(x, p["ln1_g"], p["ln1_b"], norm_eps)
+    att, tm_x, wkv = rwkv_time_mix(h, p, head_dim=head_dim, state=state,
+                                   valid=valid, chunk_lens=chunk_lens)
+    if valid is not None:
+        att = jnp.where(valid[..., None], att, 0)
+    x = x + att
+    h = layernorm(x, p["ln2_g"], p["ln2_b"], norm_eps)
+    ffn, cm_x = rwkv_channel_mix(h, p, state=state, chunk_lens=chunk_lens)
+    if valid is not None:
+        ffn = jnp.where(valid[..., None], ffn, 0)
+    x = x + ffn
+    return x, RWKVState(tm_x=tm_x, cm_x=cm_x, wkv=wkv)

@@ -1,0 +1,457 @@
+"""Unified transformer stack over heterogeneous block kinds.
+
+Parameters are *stacked*: every leaf carries leading dims ``[S, R, ...]``
+(S = pipeline stages — sharded over the manual `stage` axis — and R = the
+block's repeat count inside a stage, scanned).  The same stage program runs on
+every stage (SPMD pipelining); published layer counts that don't tile the
+grid are padded and *masked* — padded layers contribute exactly ``h + 0``
+(DESIGN.md §3).
+
+Two execution modes share the block definitions:
+  * ``train``  — full sequences, dense causal attention, no caches.
+  * ``serve``  — one pipeline tick: per-stage micro-batch of prefill chunks
+    [Sp, C] + decode rows [Sd], paged KV / recurrent-state caches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, BlockKind, BlockSpec
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    apply_mrope,
+    apply_norm,
+    apply_rope,
+    gelu_mlp,
+    mlp_apply,
+    rmsnorm,
+    swiglu,
+)
+
+Leaf = Tuple[Tuple[int, ...], P, str]   # (shape, partition-spec, init kind)
+
+
+def _norm_defs(cfg: ArchConfig, name: str) -> Dict[str, Leaf]:
+    d = {f"{name}_g": ((cfg.d_model,), P(), "ones")}
+    if cfg.norm == "layernorm":
+        d[f"{name}_b"] = ((cfg.d_model,), P(), "zeros")
+    return d
+
+
+def _mlp_defs(cfg: ArchConfig) -> Dict[str, Leaf]:
+    d, ff = cfg.d_model, cfg.d_ff
+    if cfg.act == "gelu":
+        return {
+            "w1": ((d, ff), P(None, "tensor"), "normal"),
+            "b1": ((ff,), P("tensor"), "zeros"),
+            "w2": ((ff, d), P("tensor", None), "residual"),
+            "b2": ((d,), P(), "zeros"),
+        }
+    return {
+        "w_gate": ((d, ff), P(None, "tensor"), "normal"),
+        "w_up": ((d, ff), P(None, "tensor"), "normal"),
+        "w_down": ((ff, d), P("tensor", None), "residual"),
+    }
+
+
+def _attn_defs(cfg: ArchConfig, prefix: str = "") -> Dict[str, Leaf]:
+    d = cfg.d_model
+    q, kv = cfg.q_dim, cfg.kv_dim
+    out: Dict[str, Leaf] = {
+        f"{prefix}wq": ((d, q), P(None, "tensor"), "normal"),
+        f"{prefix}wk": ((d, kv), P(None, "tensor"), "normal"),
+        f"{prefix}wv": ((d, kv), P(None, "tensor"), "normal"),
+        f"{prefix}wo": ((q, d), P("tensor", None), "residual"),
+    }
+    if cfg.qkv_bias:
+        out[f"{prefix}bq"] = ((q,), P("tensor"), "zeros")
+        out[f"{prefix}bk"] = ((kv,), P("tensor"), "zeros")
+        out[f"{prefix}bv"] = ((kv,), P("tensor"), "zeros")
+    return out
+
+
+def _mla_defs(cfg: ArchConfig) -> Dict[str, Leaf]:
+    d, H = cfg.d_model, cfg.num_heads
+    qlr, klr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "w_dq": ((d, qlr), P(), "normal"),
+        "q_norm_g": ((qlr,), P(), "ones"),
+        "w_uq": ((qlr, H * (dn + dr)), P(None, "tensor"), "normal"),
+        "w_dkv": ((d, klr + dr), P(), "normal"),
+        "kv_norm_g": ((klr,), P(), "ones"),
+        "w_ukv": ((klr, H * (dn + dv)), P(None, "tensor"), "normal"),
+        "wo": ((H * dv, d), P("tensor", None), "residual"),
+    }
+
+
+def _moe_defs(cfg: ArchConfig) -> Dict[str, Leaf]:
+    d, ff, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    ep = "data" if cfg.plan.ep_over_data else None
+    out: Dict[str, Leaf] = {
+        "router": ((d, E), P(), "normal"),
+        "w_gate": ((E, d, ff), P(ep, None, "tensor"), "normal"),
+        "w_up": ((E, d, ff), P(ep, None, "tensor"), "normal"),
+        "w_down": ((E, ff, d), P(ep, "tensor", None), "residual"),
+    }
+    if cfg.num_shared_experts:
+        ffs = ff * cfg.num_shared_experts
+        out["s_gate"] = ((d, ffs), P(None, "tensor"), "normal")
+        out["s_up"] = ((d, ffs), P(None, "tensor"), "normal")
+        out["s_down"] = ((ffs, d), P("tensor", None), "residual")
+    return out
+
+
+def _mamba_defs(cfg: ArchConfig) -> Dict[str, Leaf]:
+    d = cfg.d_model
+    di, ds, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    dtr = max(8, d // 16)
+    return {
+        "in_proj": ((d, 2 * di), P(None, "tensor"), "normal"),
+        "conv_w": ((dc, di), P(None, "tensor"), "normal"),
+        "conv_b": ((di,), P("tensor"), "zeros"),
+        "x_proj": ((di, dtr + 2 * ds), P("tensor", None), "normal"),
+        "dt_proj": ((dtr, di), P(None, "tensor"), "normal"),
+        "dt_bias": ((di,), P("tensor"), "zeros"),
+        "A_log": ((di, ds), P("tensor", None), "a_log"),
+        "D": ((di,), P("tensor"), "ones"),
+        "out_proj": ((di, d), P("tensor", None), "residual"),
+    }
+
+
+def _rwkv_defs(cfg: ArchConfig) -> Dict[str, Leaf]:
+    d, ff = cfg.d_model, cfg.d_ff
+    H, hd = cfg.num_rwkv_heads, cfg.rwkv_head_dim
+    lora = 64
+    out: Dict[str, Leaf] = {
+        "ln1_g": ((d,), P(), "ones"), "ln1_b": ((d,), P(), "zeros"),
+        "ln2_g": ((d,), P(), "ones"), "ln2_b": ((d,), P(), "zeros"),
+        "mu_r": ((d,), P(), "mu"), "mu_k": ((d,), P(), "mu"),
+        "mu_v": ((d,), P(), "mu"), "mu_g": ((d,), P(), "mu"),
+        "mu_w": ((d,), P(), "mu"),
+        "w_r": ((d, d), P(None, "tensor"), "normal"),
+        "w_k": ((d, d), P(None, "tensor"), "normal"),
+        "w_v": ((d, d), P(None, "tensor"), "normal"),
+        "w_g": ((d, d), P(None, "tensor"), "normal"),
+        "w_o": ((d, d), P("tensor", None), "residual"),
+        "w0": ((d,), P(), "decay"),
+        "w_lora_a": ((d, lora), P(), "normal"),
+        "w_lora_b": ((lora, d), P(), "zeros"),
+        "u": ((d,), P(), "mu"),
+        "ln_x_g": ((d,), P(), "ones"),
+        "cm_mu_k": ((d,), P(), "mu"), "cm_mu_r": ((d,), P(), "mu"),
+        "cm_k": ((d, ff), P(None, "tensor"), "normal"),
+        "cm_v": ((ff, d), P("tensor", None), "residual"),
+        "cm_r": ((d, d), P(), "normal"),
+    }
+    return out
+
+
+def block_param_defs(cfg: ArchConfig, kind: BlockKind) -> Dict[str, Leaf]:
+    defs: Dict[str, Leaf] = {}
+    if kind == BlockKind.RWKV:
+        return _rwkv_defs(cfg)
+    defs.update(_norm_defs(cfg, "ln1"))
+    defs.update(_norm_defs(cfg, "ln2"))
+    if kind in (BlockKind.ATTN_MLP, BlockKind.ATTN_MOE, BlockKind.ENC_LAYER):
+        defs.update(_attn_defs(cfg))
+    elif kind == BlockKind.MLA_MLP:
+        defs.update(_mla_defs(cfg))
+    elif kind in (BlockKind.MAMBA_MLP, BlockKind.MAMBA_MOE):
+        defs.update(_mamba_defs(cfg))
+    elif kind == BlockKind.DEC_LAYER:
+        defs.update(_attn_defs(cfg))
+        defs.update(_attn_defs(cfg, prefix="x_"))
+        defs.update(_norm_defs(cfg, "ln3"))
+    if kind in (BlockKind.ATTN_MOE, BlockKind.MAMBA_MOE):
+        defs.update(_moe_defs(cfg))
+    elif kind != BlockKind.RWKV:
+        defs.update(_mlp_defs(cfg))
+    return defs
+
+
+def _block_key(i: int, spec: BlockSpec) -> str:
+    return f"b{i}_{spec.kind.value}"
+
+
+def model_param_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    """Full parameter tree of (shape, spec, init) leaves."""
+    S = cfg.plan.pp
+    stages: Dict[str, Dict[str, Leaf]] = {}
+    for i, bs in enumerate(cfg.pattern):
+        defs = block_param_defs(cfg, bs.kind)
+        stages[_block_key(i, bs)] = {
+            k: ((S, bs.repeat) + shape, P(*(("stage", None) + tuple(spec))), init)
+            for k, (shape, spec, init) in defs.items()
+        }
+    # Embedding: replicated over manual axes (gathers are FLOP-free), d over
+    # `tensor`.  LM head: vocab sharded over (stage x tensor) — the sharded
+    # loss in distributed.pipeline broadcasts the last stage's hidden once and
+    # every stage computes its vocab slice (no S-fold redundant head FLOPs).
+    V = cfg.padded_vocab
+    tree: Dict[str, Any] = {
+        "embed": {"tok": ((V, cfg.d_model), P(None, "tensor"), "normal")},
+        "stages": stages,
+        "final_norm": {k.split("final_")[-1]: v for k, v in
+                       _norm_defs(cfg, "final").items()},
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = {"w": ((cfg.d_model, V),
+                                 P(None, ("stage", "tensor")), "normal")}
+    return tree
+
+
+def param_shapes(cfg: ArchConfig):
+    return jax.tree.map(lambda leaf: leaf[0], model_param_defs(cfg),
+                        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3
+                        and isinstance(x[0], tuple))
+
+
+def _is_leafdef(x):
+    return isinstance(x, tuple) and len(x) == 3 and isinstance(x[-1], str)
+
+
+def param_pspecs(cfg: ArchConfig):
+    return jax.tree.map(lambda leaf: leaf[1], model_param_defs(cfg),
+                        is_leaf=_is_leafdef)
+
+
+def init_params(cfg: ArchConfig, rng: jax.Array, dtype=None):
+    """Materialize parameters (reduced configs / examples; full configs are
+    only ever abstract — dry-run)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    defs = model_param_defs(cfg)
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_leafdef)
+    keys = jax.random.split(rng, len(leaves))
+
+    def make(leaf, key):
+        shape, _, init = leaf
+        if init == "zeros":
+            return jnp.zeros(shape, dtype)
+        if init == "ones":
+            return jnp.ones(shape, dtype)
+        if init == "mu":
+            return jax.random.uniform(key, shape, dtype, 0.0, 1.0)
+        if init == "decay":
+            return jnp.full(shape, -1.0, dtype)
+        if init == "a_log":
+            ds = shape[-1]
+            base = jnp.log(jnp.arange(1, ds + 1, dtype=jnp.float32))
+            return jnp.broadcast_to(base, shape).astype(dtype)
+        scale = 0.02
+        if init == "residual":
+            scale = 0.02 / math.sqrt(max(1, 2 * cfg.num_layers))
+        return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [make(l, k) for l, k in zip(leaves, keys)])
+
+
+def abstract_params(cfg: ArchConfig, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    return jax.tree.map(
+        lambda leaf: jax.ShapeDtypeStruct(leaf[0], dtype),
+        model_param_defs(cfg), is_leaf=_is_leafdef)
+
+
+# ----------------------------------------------------------------------------
+# Embedding / head / loss (run in auto-GSPMD land, outside the pipeline)
+# ----------------------------------------------------------------------------
+
+def embed_apply(cfg: ArchConfig, params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["embed"]["tok"], tokens, axis=0)
+
+
+def head_apply(cfg: ArchConfig, params, h: jax.Array) -> jax.Array:
+    fn = params["final_norm"]
+    if "b" in fn:
+        from repro.models.layers import layernorm
+        h = layernorm(h, fn["g"], fn["b"], cfg.norm_eps)
+    else:
+        h = rmsnorm(h, fn["g"], cfg.norm_eps)
+    w = params["embed"]["tok"].T if cfg.tie_embeddings else params["lm_head"]["w"]
+    return h @ w
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+# ----------------------------------------------------------------------------
+# Train-mode block application
+# ----------------------------------------------------------------------------
+
+def _heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _attn_train(cfg: ArchConfig, p, x, positions, *, causal=True, prefix=""):
+    """x [B, T, d] -> self-attention output."""
+    q = x @ p[f"{prefix}wq"]
+    k = x @ p[f"{prefix}wk"]
+    v = x @ p[f"{prefix}wv"]
+    if cfg.qkv_bias and f"{prefix}bq" in p:
+        q, k, v = q + p[f"{prefix}bq"], k + p[f"{prefix}bk"], v + p[f"{prefix}bv"]
+    q = _heads(q, cfg.num_heads, cfg.head_dim)
+    k = _heads(k, cfg.num_kv_heads, cfg.head_dim)
+    v = _heads(v, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.mrope:
+        pos3 = jnp.broadcast_to(positions, (3,) + positions.shape)
+        q = apply_mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, pos3, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    o = attn.causal_attention(q, k, v, causal=causal)
+    return o.reshape(o.shape[:-2] + (-1,)) @ p[f"{prefix}wo"]
+
+
+def _mla_train(cfg: ArchConfig, p, x, positions):
+    B, T, _ = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    klr = cfg.kv_lora_rank
+    cq = rmsnorm(x @ p["w_dq"], p["q_norm_g"], cfg.norm_eps)
+    q = (cq @ p["w_uq"]).reshape(B, T, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv_full = x @ p["w_dkv"]                              # [B, T, klr + dr]
+    ckv = rmsnorm(ckv_full[..., :klr], p["kv_norm_g"], cfg.norm_eps)
+    k_rope = apply_rope(ckv_full[..., None, klr:], positions, cfg.rope_theta)
+    kv = (ckv @ p["w_ukv"]).reshape(B, T, H, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, T, H, dr))], axis=-1)
+    o = attn.causal_attention(q, k, v)
+    return o.reshape(B, T, H * dv) @ p["wo"]
+
+
+def block_apply_train(cfg: ArchConfig, kind: BlockKind, p, x, aux,
+                      enc_width: int = 0):
+    """x [B, T, d] -> (x, aux).  Whisper blocks operate on the enc/dec halves
+    of the payload (enc_width = encoder slice length)."""
+    positions = jnp.arange(x.shape[1])
+    eps = cfg.norm_eps
+
+    def norm(name, h):
+        keys = {"g": p[f"{name}_g"]}
+        if f"{name}_b" in p:
+            keys["b"] = p[f"{name}_b"]
+        return apply_norm(h, keys, cfg.norm, eps)
+
+    if kind == BlockKind.RWKV:
+        x, _ = ssm_lib.rwkv_block(x, p, head_dim=cfg.rwkv_head_dim,
+                                  norm_eps=eps)
+        return x, aux
+
+    if kind in (BlockKind.ENC_LAYER, BlockKind.DEC_LAYER):
+        Te = enc_width
+        enc, dec = x[:, :Te], x[:, Te:]
+        if kind == BlockKind.ENC_LAYER:
+            h = norm("ln1", enc)
+            enc = enc + _attn_train(cfg, p, h, positions[:Te], causal=False)
+            h = norm("ln2", enc)
+            enc = enc + mlp_apply(h, p, cfg.act)
+        else:
+            h = norm("ln1", dec)
+            dec = dec + _attn_train(cfg, p, h, positions[: dec.shape[1]])
+            # cross-attention to the (stage-local) encoder stream
+            h = norm("ln3", dec)
+            q = _heads(h @ p["x_wq"] + (p.get("x_bq", 0.0)), cfg.num_heads,
+                       cfg.head_dim)
+            he = enc
+            k = _heads(he @ p["x_wk"] + (p.get("x_bk", 0.0)),
+                       cfg.num_kv_heads, cfg.head_dim)
+            v = _heads(he @ p["x_wv"] + (p.get("x_bv", 0.0)),
+                       cfg.num_kv_heads, cfg.head_dim)
+            o = attn.cross_attention(q, k, v)
+            dec = dec + o.reshape(o.shape[:-2] + (-1,)) @ p["x_wo"]
+            h = norm("ln2", dec)
+            dec = dec + mlp_apply(h, p, cfg.act)
+        return jnp.concatenate([enc, dec], axis=1), aux
+
+    # mixer
+    h = norm("ln1", x)
+    if kind in (BlockKind.MAMBA_MLP, BlockKind.MAMBA_MOE):
+        mix, _ = ssm_lib.mamba_mixer(h, p, d_state=cfg.mamba_d_state,
+                                     d_conv=cfg.mamba_d_conv)
+    elif kind == BlockKind.MLA_MLP:
+        mix = _mla_train(cfg, p, h, positions)
+    else:
+        mix = _attn_train(cfg, p, h, positions)
+    x = x + mix
+
+    # ffn
+    h = norm("ln2", x)
+    if kind in (BlockKind.ATTN_MOE, BlockKind.MAMBA_MOE):
+        flat = h.reshape(-1, cfg.d_model)
+        ep = "data" if cfg.plan.ep_over_data else None
+        y, a = moe_lib.moe_apply(flat, p, top_k=cfg.num_experts_per_tok,
+                                 ep_axis=ep,
+                                 capacity_factor=cfg.moe_capacity_factor)
+        x = x + y.reshape(x.shape)
+        aux = aux + a
+    else:
+        x = x + mlp_apply(h, p, cfg.act)
+    return x, aux
+
+
+def stage_forward_train(cfg: ArchConfig, stage_params, x, *,
+                        enc_width: int = 0, remat: bool = True):
+    """Apply one stage's blocks to x [B, T, d] (runs inside the `stage`
+    shard_map; stage_params leaves are local [R, ...])."""
+    aux = jnp.zeros((), jnp.float32)
+    stage_idx = jax.lax.axis_index("stage")
+    layer_offset = 0
+
+    for i, bs in enumerate(cfg.pattern):
+        p = stage_params[_block_key(i, bs)]
+
+        def apply_one(x_aux, pl, local_i, kind=bs.kind, off=layer_offset):
+            xx, ax = x_aux
+            g = stage_idx * cfg.layers_per_stage + off + local_i
+            active = jnp.where(g < cfg.num_layers, 1.0, 0.0).astype(xx.dtype)
+            fn = partial(block_apply_train, cfg, kind, enc_width=enc_width)
+            if remat:
+                import os
+                pol = os.environ.get("REPRO_REMAT_POLICY", "full")
+                if pol == "dots":
+                    fn = jax.checkpoint(
+                        fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+                else:
+                    fn = jax.checkpoint(fn)
+            y, ax2 = fn(pl, xx, ax)
+            xx = xx + active * (y - xx)      # masked: padded layers are identity
+            return (xx, ax2 * active + ax * (1 - active))
+
+        if bs.repeat == 1:
+            p1 = jax.tree.map(lambda a: a[0], p)
+            x, aux = apply_one((x, aux), p1, 0)
+        else:
+            def scan_body(carry, inp):
+                pl, li = inp
+                return apply_one(carry, pl, li), None
+
+            (x, aux), _ = jax.lax.scan(
+                scan_body, (x, aux),
+                (p, jnp.arange(bs.repeat)))
+        layer_offset += bs.repeat
+    return x, aux

@@ -1,0 +1,212 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch, shape, mesh), all *per chip* (the SPMD module XLA
+compiles and reports on is the per-device program):
+
+    compute    = HLO_FLOPs / peak_FLOP/s
+    memory     = HLO_bytes / HBM_bw
+    collective = collective_operand_bytes / ICI_link_bw
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (from the assignment).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes of every collective op in (post-optimization) HLO.
+
+    Operand types are printed inline in the op's argument list; we take all
+    shapes appearing *inside the parens* of the collective call.  `-start`
+    variants are counted once (`-done` carries no new payload).
+    """
+    out: Dict[str, int] = {op: 0 for op in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.search(r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+                      r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                      r"collective-permute)(-start)?\(", s)
+        if not m:
+            continue
+        op = m.group(1)
+        args = s[m.end():]
+        # strip trailing attributes (channel_id etc.) — operands end at ')'
+        depth, end = 1, len(args)
+        for i, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        arg_str = args[:end]
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(arg_str):
+            if dt in _DTYPE_BYTES:
+                total += _shape_bytes(dt, dims)
+        if total == 0:
+            # fallback: result type at line start
+            mres = _SHAPE_RE.search(s.split("=")[0] + "=" + s.split("=", 1)[1][:80])
+            if mres:
+                total = _shape_bytes(mres.group(1), mres.group(2))
+        out[op] += total
+    return out
+
+
+@dataclass
+class RooflineCell:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float             # per chip
+    hlo_bytes: float             # per chip
+    collective_bytes: float      # per chip
+    collective_breakdown: Dict[str, int]
+    model_flops_per_chip: float  # analytic "useful" flops
+    per_device_memory_bytes: float
+    notes: str = ""
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        if self.hlo_flops <= 0:
+            return 0.0
+        return self.model_flops_per_chip / self.hlo_flops
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable fraction of compute roofline: time the chip *must*
+        spend on useful math over the time the program takes at the
+        bound (dominant term), assuming perfect overlap of the rest."""
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        if t_bound <= 0:
+            return 0.0
+        return (self.model_flops_per_chip / PEAK_FLOPS) / t_bound
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bottleneck=self.bottleneck,
+                 useful_ratio=self.useful_ratio,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+# ----------------------------------------------------------------------------
+# Analytic model FLOPs (the "useful work" numerator)
+# ----------------------------------------------------------------------------
+
+def param_count(cfg, active_only: bool = False) -> float:
+    """Analytic parameter count from the config (MoE: active experts only
+    when `active_only`)."""
+    from repro.configs.base import BlockKind
+    per = cfg.params_per_layer_estimate()
+    total = 0.0
+    for bs in cfg.pattern:
+        for _ in range(bs.repeat):
+            k = bs.kind
+            if k in (BlockKind.ATTN_MLP, BlockKind.ENC_LAYER):
+                total += per["attn"] + per["mlp"]
+            elif k == BlockKind.DEC_LAYER:
+                total += 2 * per["attn"] + per["mlp"]
+            elif k == BlockKind.MLA_MLP:
+                total += per["attn"] + per["mlp"]
+            elif k == BlockKind.ATTN_MOE:
+                total += per["attn"] + (per["moe_active"] if active_only
+                                        else per["moe"])
+            elif k == BlockKind.MAMBA_MLP:
+                total += per["mamba"] + per["mlp"]
+            elif k == BlockKind.MAMBA_MOE:
+                total += per["mamba"] + (per["moe_active"] if active_only
+                                         else per["moe"])
+            elif k == BlockKind.RWKV:
+                total += per["rwkv"]
+    total *= cfg.plan.pp
+    total += 2 * cfg.vocab_size * cfg.d_model
+    return total
+
+
+def model_flops(cfg, shape, chips: int, kind: str) -> float:
+    """6·N_active·tokens (train) or 2·N_active·tokens (serve fwd), per chip.
+
+    Decode cells process one token per resident sequence per *pipeline
+    traversal*; a single tick advances 1/pp of the sequences, so per-tick
+    useful flops = 2·N·(batch/pp) — which is what one lowered tick does."""
+    n_active = param_count(cfg, active_only=True)
+    if kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * tokens / chips
+    if kind == "prefill":
+        # one tick prefills `C` tokens per replica on each stage's resident
+        # micro-batch: per-chip useful = 2·(N/pp)·C·... == 2·N·C·D / chips
+        data = 16
+        tokens_per_tick = 2048 * data          # C per replica x replicas
+        return 2.0 * n_active * tokens_per_tick / chips
+    # decode: one tick decodes Sd rows per (stage, replica)
+    data = 16
+    per_replica = max(1, -(-shape.global_batch // data))
+    sd = max(1, -(-per_replica // cfg.plan.pp))
+    tokens_per_tick = sd * cfg.plan.pp * data   # all stages advance their mb
+    return 2.0 * n_active * tokens_per_tick / chips
+
+
+def render_table(cells) -> str:
+    hdr = (f"| arch | shape | mesh | t_comp(ms) | t_mem(ms) | t_coll(ms) | "
+           f"bound | useful | roofline |")
+    sep = "|" + "---|" * 9
+    rows = [hdr, sep]
+    for c in cells:
+        rows.append(
+            f"| {c.arch} | {c.shape} | {c.mesh} | {c.t_compute*1e3:.3f} | "
+            f"{c.t_memory*1e3:.3f} | {c.t_collective*1e3:.3f} | "
+            f"{c.bottleneck} | {c.useful_ratio:.2f} | "
+            f"{c.roofline_fraction:.2%} |")
+    return "\n".join(rows)

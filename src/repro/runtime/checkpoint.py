@@ -1,0 +1,137 @@
+"""Sharded, async checkpointing (no orbax/tensorstore in this container).
+
+Layout: one .npy per pytree leaf (path-encoded filename) + manifest.json
+(tree structure, shapes, dtypes, step metadata, engine/scheduler snapshot).
+On restore, leaves are device_put with the *target* sharding — which may
+belong to a different mesh factoring than the one that saved them (elastic
+re-sharding: params are stored logically, so a pp=16/tp=1 checkpoint loads
+into a pp=8/tp=2 engine unchanged; see distributed/elastic.py for stacked-dim
+repartitioning when the stage grid itself changes).
+
+`AsyncCheckpointer` snapshots to host memory synchronously (cheap) and
+writes in a background thread so the train/serve loop is never blocked —
+the "async checkpointing" of the 1000+-node design (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(directory: str, tree, *, extra: Optional[dict] = None
+                    ) -> None:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    manifest = {"leaves": {}, "extra": extra or {}}
+    for key, leaf in flat.items():
+        arr = np.asarray(leaf)
+        fname = key.replace("/", "__") + ".npy"
+        dtype = str(arr.dtype)
+        if dtype == "bfloat16":          # numpy can't round-trip ml_dtypes
+            np.save(os.path.join(directory, fname), arr.view(np.uint16))
+        else:
+            np.save(os.path.join(directory, fname), arr)
+        manifest["leaves"][key] = {"file": fname,
+                                   "shape": list(arr.shape),
+                                   "dtype": dtype}
+    tmp = os.path.join(directory, "manifest.json.tmp")
+    with open(tmp, "w") as f:
+        json.dump(manifest, f)
+    os.replace(tmp, os.path.join(directory, "manifest.json"))
+
+
+def load_manifest(directory: str) -> dict:
+    with open(os.path.join(directory, "manifest.json")) as f:
+        return json.load(f)
+
+
+def restore_checkpoint(directory: str, target_tree, *, shardings=None):
+    """Restore into the structure of `target_tree` (values ignored).  With
+    `shardings` (matching pytree of jax.sharding.Sharding), leaves are placed
+    sharded — this is the elastic-rescale path."""
+    manifest = load_manifest(directory)
+    flat_target = _flatten_with_paths(target_tree)
+    flat_shard = _flatten_with_paths(shardings) if shardings is not None \
+        else {}
+    out = {}
+    for key in flat_target:
+        info = manifest["leaves"].get(key)
+        if info is None:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = np.load(os.path.join(directory, info["file"]))
+        if info["dtype"] == "bfloat16":
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        sh = flat_shard.get(key)
+        out[key] = jax.device_put(arr, sh) if sh is not None else arr
+    # rebuild the tree
+    leaves_paths = jax.tree_util.tree_flatten_with_path(target_tree)
+    keys = ["/".join(_path_str(p) for p in path)
+            for path, _ in leaves_paths[0]]
+    return jax.tree_util.tree_unflatten(leaves_paths[1],
+                                        [out[k] for k in keys])
+
+
+class AsyncCheckpointer:
+    """Non-blocking checkpoint writer (single background thread, snapshot
+    taken synchronously on submit)."""
+
+    def __init__(self) -> None:
+        self._q: "queue.Queue" = queue.Queue()
+        self._err: Optional[BaseException] = None
+        self._t = threading.Thread(target=self._worker, daemon=True)
+        self._t.start()
+
+    def _worker(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            directory, host_tree, extra = item
+            try:
+                save_checkpoint(directory, host_tree, extra=extra)
+            except BaseException as e:  # noqa: BLE001
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def submit(self, directory: str, tree, *, extra: Optional[dict] = None
+               ) -> None:
+        if self._err:
+            raise self._err
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)  # snapshot
+        self._q.put((directory, host_tree, extra))
+
+    def wait(self) -> None:
+        self._q.join()
+        if self._err:
+            raise self._err
+
+    def close(self) -> None:
+        self._q.put(None)
+        self._t.join()

@@ -1,0 +1,333 @@
+"""gLLM serving engine: the asynchronous pipeline runtime (paper §3.3)
+adapted to JAX.
+
+Roles (paper -> here):
+  * driver worker   -> `PipelineEngine` host logic: owns the scheduler, the
+    paged-KV page tables and state slots, builds per-tick metadata, streams
+    results to the frontend.
+  * ordinary worker -> the SPMD serving tick (`build_serve_tick`): each mesh
+    `stage` shard executes its resident micro-batch; activations move by
+    collective-permute (the NCCL path), metadata is computed host-side one
+    tick ahead (the ZeroMQ dual-phase path) and overlaps device compute
+    because jit dispatch is asynchronous.
+  * frontend        -> `AsyncFrontend` (asyncio): decoupled request intake /
+    token streaming.
+
+The engine is exact (it runs the real model); it is used by the examples,
+integration tests, and the output-equivalence benchmark.  Scale experiments
+run on the calibrated discrete-event simulator instead (runtime/simulator.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import (
+    PagedKVManager,
+    PipelineScheduler,
+    Request,
+    SamplingParams,
+    ScheduledBatch,
+    ThrottleConfig,
+)
+from repro.models import serve as serve_lib
+from repro.models import transformer as tfm
+from repro.models.serve import ServeDims
+
+
+class SlotAllocator:
+    """Sequence slots for recurrent state / encoder caches."""
+
+    def __init__(self, n: int) -> None:
+        self.free = list(range(n - 1, -1, -1))
+        self.owner: Dict[str, int] = {}
+
+    def get(self, request_id: str) -> int:
+        if request_id in self.owner:
+            return self.owner[request_id]
+        if not self.free:
+            raise MemoryError("out of state slots")
+        s = self.free.pop()
+        self.owner[request_id] = s
+        return s
+
+    def release(self, request_id: str) -> None:
+        s = self.owner.pop(request_id, None)
+        if s is not None:
+            self.free.append(s)
+
+
+@dataclass
+class EngineStats:
+    ticks: int = 0
+    tokens_out: int = 0
+    padded_prefill: int = 0     # bucket padding = TPU pipeline bubbles
+    padded_decode: int = 0
+    scheduled_prefill: int = 0
+    scheduled_decode: int = 0
+
+
+class PipelineEngine:
+    """Single-process engine (mesh may be 1 device for CPU runs — the SPMD
+    tick is identical; only the mesh size changes)."""
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        dims: ServeDims,
+        params,
+        mesh,
+        throttle: ThrottleConfig,
+        *,
+        num_pages: Optional[int] = None,
+        dtype=None,
+    ) -> None:
+        from repro.distributed.pipeline import build_serve_tick
+
+        self.cfg = cfg
+        self.dims = dims
+        self.mesh = mesh
+        self.params = params
+        self.dtype = dtype or jnp.dtype(cfg.dtype)
+        self.kv = PagedKVManager(num_pages or dims.pages, dims.page)
+        self.scheduler = PipelineScheduler(
+            throttle, self.kv,
+            max_model_len=dims.page * max(dims.Bp, dims.Bd),
+            max_prefill_seqs=max(dims.Sp, 0),
+            max_chunk_tokens=max(dims.C, 1),
+            max_decode_seqs=dims.Sd)
+        self.slots = SlotAllocator(dims.slots)
+        self.enc_embeds: Dict[str, np.ndarray] = {}
+
+        tick, specs = build_serve_tick(cfg, mesh, dims)
+        self._tick = jax.jit(tick, donate_argnums=(1, 2))
+        self._embed = jax.jit(
+            lambda p, t: jnp.take(p["embed"]["tok"], t, axis=0))
+        S = cfg.plan.pp
+        with jax.set_mesh(mesh):
+            self.caches = serve_lib.init_caches(cfg, dims, self.dtype)
+            W = dims.prefill_width
+            self.carry = {
+                "xp": jnp.zeros((S, dims.Sp, W, cfg.d_model), self.dtype),
+                "xd": jnp.zeros((S, dims.Sd, 1, cfg.d_model), self.dtype),
+            }
+        self.ring: Deque[Tuple[Optional[int], dict]] = deque(
+            [(None, serve_lib.zero_meta(dims))] * S, maxlen=S)
+        self.stats = EngineStats()
+        self.finished: List[Request] = []
+        self._now_fn: Callable[[], float] = time.monotonic
+        # streaming hook: called as on_token(request, token_id) per new token
+        self.on_token: Optional[Callable[[Request, int], None]] = None
+
+    # ------------------------------------------------------------------ API
+    def add_request(self, prompt: Sequence[int],
+                    sampling: Optional[SamplingParams] = None,
+                    request_id: Optional[str] = None,
+                    enc_embeds: Optional[np.ndarray] = None) -> Request:
+        rid = request_id or f"req-{len(self.scheduler.waiting)}-{self.stats.ticks}"
+        req = Request(rid, list(prompt), sampling or SamplingParams())
+        req.metrics.arrival_time = self._now_fn()
+        if self.cfg.is_encoder_decoder:
+            Te, d = self.dims.Te, self.cfg.d_model
+            if enc_embeds is None:
+                enc_embeds = np.zeros((Te, d), np.float32)
+            self.enc_embeds[rid] = np.asarray(enc_embeds, np.float32)[:Te]
+        self.scheduler.add_request(req)
+        return req
+
+    @property
+    def has_work(self) -> bool:
+        return self.scheduler.has_work
+
+    # ----------------------------------------------------------------- tick
+    def step(self) -> List[Request]:
+        """One pipeline tick.  Returns requests finishing this tick."""
+        now = self._now_fn()
+        batch = self.scheduler.schedule(now)
+        if batch.is_empty:
+            # nothing resident this tick: retire the empty batch immediately
+            self.scheduler.complete(batch.batch_id, [], now)
+            self.ring.appendleft((None, self._zero_meta_np()))
+        else:
+            self.ring.appendleft((batch.batch_id, self._build_meta(batch)))
+        exiting_id, _ = self.ring[-1] if len(self.ring) == self.ring.maxlen \
+            else (None, None)
+
+        meta_dev = {
+            k: jnp.asarray(np.stack([m[1][k] for m in self.ring], axis=0))
+            for k in self._zero_meta_np()
+        }
+        fresh = self._build_fresh(batch)
+        sampling = self._build_sampling(exiting_id)
+        self.carry, self.caches, tokens, top_lp = self._tick(
+            self.params, self.caches, self.carry, meta_dev, fresh, sampling)
+
+        self.stats.ticks += 1
+        self.stats.scheduled_prefill += batch.num_prefill_tokens
+        self.stats.scheduled_decode += batch.num_decode_tokens
+        self.stats.padded_prefill += \
+            self.dims.Sp * self.dims.C - batch.num_prefill_tokens
+        self.stats.padded_decode += self.dims.Sd - batch.num_decode_tokens
+
+        finished: List[Request] = []
+        if exiting_id is not None:
+            finished = self._complete(exiting_id, np.asarray(tokens), now)
+        return finished
+
+    def drain(self, max_ticks: int = 100000) -> List[Request]:
+        out = []
+        t = 0
+        while (self.scheduler.has_work or self._ring_busy()) and t < max_ticks:
+            out.extend(self.step())
+            t += 1
+        return out
+
+    def _ring_busy(self) -> bool:
+        return any(bid is not None for bid, _ in self.ring)
+
+    def _build_sampling(self, exiting_id):
+        """Per-row temperatures for the micro-batch exiting this tick."""
+        rows = self.dims.Sp + self.dims.Sd
+        temps = np.zeros(rows, np.float32)
+        batch = (self.scheduler._batches.get(exiting_id)
+                 if exiting_id is not None else None)
+        if batch is not None:
+            for i, seq in enumerate(batch.prefill):
+                temps[i] = seq.request.sampling.temperature
+            for j, seq in enumerate(batch.decode):
+                temps[self.dims.Sp + j] = seq.request.sampling.temperature
+        self._seed = (getattr(self, "_seed", 0) + 1) % (2**31)
+        return {"temps": jnp.asarray(temps),
+                "seed": jnp.asarray(self._seed, jnp.uint32)}
+
+    def _zero_meta_np(self) -> dict:
+        if not hasattr(self, "_zm"):
+            self._zm = {k: np.asarray(v)
+                        for k, v in serve_lib.zero_meta(self.dims).items()}
+        return self._zm
+
+    # ------------------------------------------------------------- internals
+    def _complete(self, batch_id: int, tokens: np.ndarray,
+                  now: float) -> List[Request]:
+        batch = self.scheduler._batches.get(batch_id)
+        if batch is None:
+            return []
+        toks: List[int] = []
+        producing = []
+        for i, seq in enumerate(batch.prefill):
+            if seq.produces_token:
+                toks.append(int(tokens[i]))
+                producing.append(seq.request)
+        for j, seq in enumerate(batch.decode):
+            toks.append(int(tokens[self.dims.Sp + j]))
+            producing.append(seq.request)
+        finished = self.scheduler.complete(batch_id, toks, now)
+        if self.on_token is not None:
+            for req, tok in zip(producing, toks):
+                self.on_token(req, tok)
+        for req in finished:
+            self.slots.release(req.request_id)
+            self.enc_embeds.pop(req.request_id, None)
+            self.finished.append(req)
+        self.stats.tokens_out += len(toks)
+        return finished
+
+    def _build_meta(self, batch: ScheduledBatch) -> dict:
+        dims = self.dims
+        m = {k: np.asarray(v) for k, v in serve_lib.zero_meta(dims).items()}
+        m = {k: v.copy() for k, v in m.items()}
+        for s, seq in enumerate(batch.prefill):
+            req = seq.request
+            L = seq.num_tokens
+            m["p_positions"][s, :L] = seq.start_pos + np.arange(L)
+            m["p_chunk_lens"][s] = L
+            m["p_context_lens"][s] = seq.start_pos + L
+            table = self.kv.block_table(req.request_id)[: dims.Bp]
+            m["p_block_tables"][s, : len(table)] = table
+            pages = [p for p, _ in seq.slots]
+            offs = [o for _, o in seq.slots]
+            m["p_slot_pages"][s, :L] = pages
+            m["p_slot_offsets"][s, :L] = offs
+            m["p_state_slots"][s] = self.slots.get(req.request_id)
+            m["p_sample"][s] = int(seq.produces_token)
+        for s, seq in enumerate(batch.decode):
+            req = seq.request
+            m["d_positions"][s] = seq.start_pos
+            m["d_context_lens"][s] = seq.start_pos + 1
+            table = self.kv.block_table(req.request_id)[: dims.Bd]
+            m["d_block_tables"][s, : len(table)] = table
+            m["d_slot_pages"][s] = seq.slots[0][0]
+            m["d_slot_offsets"][s] = seq.slots[0][1]
+            m["d_state_slots"][s] = self.slots.get(req.request_id)
+            m["d_valid"][s] = 1
+        return m
+
+    def _build_fresh(self, batch: ScheduledBatch) -> dict:
+        dims, cfg = self.dims, self.cfg
+        W = dims.prefill_width
+        xp = np.zeros((max(dims.Sp, 0), W, cfg.d_model), np.float32)
+        xd = np.zeros((dims.Sd, 1, cfg.d_model), np.float32)
+        p_tok = np.zeros((max(dims.Sp, 0), max(dims.C, 1)), np.int32)
+        d_tok = np.zeros((dims.Sd, 1), np.int32)
+        for s, seq in enumerate(batch.prefill):
+            toks = seq.request.effective_prompt[
+                seq.start_pos : seq.start_pos + seq.num_tokens]
+            p_tok[s, : len(toks)] = toks
+        for s, seq in enumerate(batch.decode):
+            d_tok[s, 0] = seq.request.effective_prompt[seq.start_pos]
+        if dims.Sp:
+            emb = np.asarray(self._embed(self.params,
+                                         jnp.asarray(p_tok)), np.float32)
+            xp[:, dims.Te : dims.Te + emb.shape[1], :] = emb[:, : dims.C]
+            for s, seq in enumerate(batch.prefill):
+                enc = self.enc_embeds.get(seq.request.request_id)
+                if enc is not None:
+                    xp[s, : enc.shape[0], :] = enc
+        if dims.Sd:
+            xd[:, 0, :] = np.asarray(
+                self._embed(self.params, jnp.asarray(d_tok)),
+                np.float32)[:, 0, :]
+        return {"xp": jnp.asarray(xp, self.dtype),
+                "xd": jnp.asarray(xd, self.dtype)}
+
+    # -------------------------------------------------------- checkpointing
+    def snapshot_state(self) -> dict:
+        """Scheduler + KV state for engine checkpoint/restart (in-flight
+        micro-batches are recovered by recompute: anything in the ring is
+        folded back into the waiting queue)."""
+        reqs = []
+        seen = set()
+        for group in (list(self.scheduler.waiting),
+                      self.scheduler.running_prefill,
+                      self.scheduler.running_decode):
+            for r in group:
+                if r.request_id in seen:
+                    continue
+                seen.add(r.request_id)
+                reqs.append({
+                    "request_id": r.request_id,
+                    "prompt": list(r.prompt_token_ids),
+                    "output": list(r.output_token_ids),
+                    "max_new_tokens": r.sampling.max_new_tokens,
+                    "arrival": r.metrics.arrival_time,
+                })
+        return {"requests": reqs, "ticks": self.stats.ticks}
+
+    @staticmethod
+    def restore_requests(engine: "PipelineEngine", snap: dict) -> None:
+        for r in snap["requests"]:
+            req = Request(r["request_id"], list(r["prompt"]),
+                          SamplingParams(max_new_tokens=r["max_new_tokens"]))
+            req.output_token_ids = list(r["output"])
+            req.metrics.arrival_time = r["arrival"]
+            # recompute semantics: prompt+outputs re-prefill from scratch
+            engine.scheduler.add_request(req)

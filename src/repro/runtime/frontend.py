@@ -1,0 +1,68 @@
+"""Decoupled asynchronous frontend (paper §3.3 design principle 2).
+
+Request intake and token streaming run on the asyncio loop; the engine's
+blocking device steps run on a worker thread, so user interaction never
+stalls model execution (and vice versa).  This is the JAX-native analogue of
+gLLM's separate frontend process + ZeroMQ sockets.
+"""
+
+from __future__ import annotations
+
+import asyncio
+from typing import AsyncIterator, Dict, List, Optional, Sequence
+
+from repro.core import Request, SamplingParams
+from repro.runtime.engine import PipelineEngine
+
+
+class AsyncFrontend:
+    def __init__(self, engine: PipelineEngine) -> None:
+        self.engine = engine
+        self._streams: Dict[str, asyncio.Queue] = {}
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._stop = False
+        engine.on_token = self._on_token
+
+    # ------------------------------------------------------------- intake
+    async def submit(self, prompt: Sequence[int],
+                     sampling: Optional[SamplingParams] = None,
+                     request_id: Optional[str] = None) -> str:
+        req = self.engine.add_request(prompt, sampling, request_id)
+        self._streams[req.request_id] = asyncio.Queue()
+        return req.request_id
+
+    async def stream(self, request_id: str) -> AsyncIterator[int]:
+        q = self._streams[request_id]
+        while True:
+            tok = await q.get()
+            if tok is None:
+                break
+            yield tok
+        self._streams.pop(request_id, None)
+
+    async def generate(self, prompt: Sequence[int],
+                       sampling: Optional[SamplingParams] = None
+                       ) -> List[int]:
+        rid = await self.submit(prompt, sampling)
+        return [t async for t in self.stream(rid)]
+
+    # --------------------------------------------------------------- engine
+    def _on_token(self, req: Request, tok: int) -> None:
+        q = self._streams.get(req.request_id)
+        if q is None or self._loop is None:
+            return
+        self._loop.call_soon_threadsafe(q.put_nowait, tok)
+        if req.is_finished:
+            self._loop.call_soon_threadsafe(q.put_nowait, None)
+
+    async def run(self, idle_sleep: float = 0.002) -> None:
+        """Engine loop: blocking ticks on a thread; intake stays responsive."""
+        self._loop = asyncio.get_running_loop()
+        while not self._stop:
+            if self.engine.has_work or self.engine._ring_busy():
+                await asyncio.to_thread(self.engine.step)
+            else:
+                await asyncio.sleep(idle_sleep)
+
+    def stop(self) -> None:
+        self._stop = True

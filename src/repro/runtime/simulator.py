@@ -1,0 +1,295 @@
+"""Discrete-event simulator of the pipeline-parallel serving runtime.
+
+Reproduces the paper's evaluation methodology at cluster scale on a CPU-only
+box: the *real* `PipelineScheduler` (Token Throttling or Sarathi policy — the
+actual policy code, not a model of it) drives an event-driven pipeline whose
+per-stage latency comes from a roofline cost model calibrated with the v5e
+constants used in §Roofline.
+
+Stage semantics match the SPMD tick: a micro-batch occupies one stage at a
+time; stage s starts batch b when (a) stage s-1 finished b and (b) stage s
+finished its previous batch.  Inter-batch imbalance therefore creates exactly
+the bubbles of paper Fig. 3, and Token Throttling's equalized token counts
+remove them.
+
+Also models: driver host overhead (serialized for the vLLM-like runtime,
+overlapped for the gLLM runtime — paper §3.4's 17% input-prep cost), pod
+failures (in-flight work lost, recompute on recovery), and straggler stages.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import (
+    PagedKVManager,
+    PipelineScheduler,
+    Request,
+    SamplingParams,
+    ScheduledBatch,
+    ThrottleConfig,
+)
+from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
+
+
+@dataclass
+class CostModel:
+    """Per-stage latency of one micro-batch (roofline form)."""
+
+    flops_per_token_stage: float      # 2*N_active/pp
+    param_bytes_stage: float          # active weight bytes read per tick
+    kv_bytes_per_ctx_token: float     # per context token per stage
+    chips_per_stage: int = 1
+    mfu: float = 0.55                 # achievable compute efficiency
+    hbm_eff: float = 0.75
+    fixed_us: float = 30.0            # kernel launch / sync floor
+    # tensor-parallel baseline: per-token activation all-reduce traffic plus
+    # a per-step latency floor (2 all-reduces per layer; each costs
+    # ~2(N-1) link latencies regardless of payload — dominant for decode on
+    # cross-node fabrics).  PP only communicates inter-stage activations
+    # (tiny, overlapped) — exactly the tradeoff the paper exploits (§2.3).
+    comm_bytes_per_token: float = 0.0
+    comm_latency: float = 0.0         # per-tick serialized all-reduce latency
+    net_bw: float = 50e9              # interconnect (ICI link / sim-network)
+
+    def stage_time(self, prefill_tokens: int, decode_tokens: int,
+                   prefill_ctx: int, decode_ctx: int) -> float:
+        tokens = prefill_tokens + decode_tokens
+        t_comp = tokens * self.flops_per_token_stage / (
+            PEAK_FLOPS * self.mfu * self.chips_per_stage)
+        kv_bytes = (prefill_tokens * 0.5 * prefill_ctx
+                    + decode_tokens * decode_ctx) * self.kv_bytes_per_ctx_token
+        weight_bytes = self.param_bytes_stage if tokens else 0.0
+        t_mem = (weight_bytes + kv_bytes) / (
+            HBM_BW * self.hbm_eff * self.chips_per_stage)
+        t_comm = tokens * self.comm_bytes_per_token / self.net_bw
+        if tokens and self.comm_bytes_per_token:
+            t_comm += self.comm_latency
+        return max(t_comp, t_mem) + t_comm + self.fixed_us * 1e-6
+
+
+def cost_model_for(cfg, *, chips_per_stage: int = 1, pp: int = None
+                   ) -> CostModel:
+    """Stage-cost model for a pipeline of depth `pp` (defaults to the arch's
+    plan).  Per stage: 1/pp of the layers on `chips_per_stage` chips."""
+    from repro.roofline.analysis import param_count
+    n_active = param_count(cfg, active_only=True)
+    pp = pp or cfg.plan.pp
+    kv_bytes = cfg.kv_cache_dim_per_token * (cfg.num_layers / pp) * 2  # bf16
+    return CostModel(
+        flops_per_token_stage=2.0 * n_active / pp,
+        param_bytes_stage=2.0 * n_active / pp,
+        kv_bytes_per_ctx_token=kv_bytes,
+        chips_per_stage=chips_per_stage,
+    )
+
+
+@dataclass
+class RuntimeModel:
+    """Host-side driver behaviour (paper §3.3/§3.4)."""
+
+    overhead_serial: float = 0.0     # blocks the pipeline (vLLM-style coupling)
+    overhead_overlap: float = 0.0    # hidden behind compute (gLLM async)
+
+    @staticmethod
+    def gllm() -> "RuntimeModel":
+        return RuntimeModel(overhead_serial=0.0002, overhead_overlap=0.002)
+
+    @staticmethod
+    def vllm_like() -> "RuntimeModel":
+        # ~17% of execution serialized on input prep (paper §3.4)
+        return RuntimeModel(overhead_serial=0.0025, overhead_overlap=0.0)
+
+
+@dataclass
+class SimMetrics:
+    finished: List[Request] = field(default_factory=list)
+    sim_time: float = 0.0
+    total_output_tokens: int = 0
+    total_input_tokens: int = 0
+    bubble_time: float = 0.0          # last-stage idle while work pending
+    busy_time: float = 0.0
+
+    def _vals(self, fn):
+        vals = [fn(r) for r in self.finished]
+        return [v for v in vals if v is not None]
+
+    def ttft(self):
+        return float(np.mean(self._vals(lambda r: r.metrics.ttft()) or [0]))
+
+    def tpot(self):
+        return float(np.mean(self._vals(
+            lambda r: r.metrics.tpot(r.num_output_tokens)) or [0]))
+
+    def e2el(self):
+        return float(np.mean(self._vals(lambda r: r.metrics.e2el()) or [0]))
+
+    def throughput(self):
+        """Steady-state token throughput: tokens completed within the p90
+        request-completion window (the paper saturates and excludes the
+        drain tail — a lone long-output straggler would otherwise dominate
+        the denominator)."""
+        if not self.finished:
+            return 0.0
+        fins = sorted(r.metrics.finish_time for r in self.finished
+                      if r.metrics.finish_time is not None)
+        if not fins:
+            return 0.0
+        t90 = fins[max(0, int(len(fins) * 0.9) - 1)]
+        tok = sum(r.num_prompt_tokens + r.num_output_tokens
+                  for r in self.finished
+                  if r.metrics.finish_time is not None
+                  and r.metrics.finish_time <= t90)
+        return tok / max(t90, 1e-9)
+
+    def slo_attainment(self, ttft_slo: float, tpot_slo: float) -> float:
+        ok = 0
+        for r in self.finished:
+            t1, t2 = r.metrics.ttft(), r.metrics.tpot(r.num_output_tokens)
+            if t1 is not None and t1 <= ttft_slo and (t2 or 0) <= tpot_slo:
+                ok += 1
+        return ok / max(1, len(self.finished))
+
+
+class PipelineSimulator:
+    """Event-driven PP serving simulator around the real scheduler."""
+
+    ARRIVAL, STAGE_DONE, DRIVER, FAIL, RECOVER = range(5)
+
+    def __init__(
+        self,
+        scheduler: PipelineScheduler,
+        pp: int,
+        cost: CostModel,
+        runtime: RuntimeModel = RuntimeModel.gllm(),
+        *,
+        straggler_stage: Optional[int] = None,
+        straggler_factor: float = 1.0,
+    ) -> None:
+        self.sched = scheduler
+        self.pp = pp
+        self.cost = cost
+        self.runtime = runtime
+        self.straggler = (straggler_stage, straggler_factor)
+        self._events: List[Tuple[float, int, int, object]] = []
+        self._eid = itertools.count()
+        self.stage_free_at = [0.0] * pp
+        self.stage_queue: List[List[Tuple[ScheduledBatch, float]]] = \
+            [[] for _ in range(pp)]
+        self.metrics = SimMetrics()
+        self._driver_pending = False
+        self._failed_until = -1.0
+
+    # ------------------------------------------------------------------ events
+    def _push(self, t: float, kind: int, payload=None):
+        heapq.heappush(self._events, (t, kind, next(self._eid), payload))
+
+    def add_workload(self, arrivals: List[Tuple[float, List[int], int]]):
+        """arrivals: (time, prompt_tokens, output_len)."""
+        for t, prompt, out_len in arrivals:
+            self._push(t, self.ARRIVAL, (prompt, out_len))
+
+    def inject_failure(self, at: float, downtime: float):
+        self._push(at, self.FAIL, downtime)
+
+    # ------------------------------------------------------------------- run
+    def run(self, until: float = float("inf"), max_events: int = 5_000_000
+            ) -> SimMetrics:
+        self._push(0.0, self.DRIVER)
+        n = 0
+        last_stage_busy_since = None
+        while self._events and n < max_events:
+            t, kind, _, payload = heapq.heappop(self._events)
+            if t > until and kind == self.ARRIVAL:
+                continue
+            n += 1
+            self.metrics.sim_time = max(self.metrics.sim_time, t)
+            if kind == self.ARRIVAL:
+                prompt, out_len = payload
+                rid = f"r{n}"
+                req = Request(rid, prompt,
+                              SamplingParams(max_new_tokens=out_len))
+                req.metrics.arrival_time = t
+                self.metrics.total_input_tokens += len(prompt)
+                self.sched.add_request(req)
+                self._kick_driver(t)
+            elif kind == self.DRIVER:
+                self._driver_pending = False
+                self._try_schedule(t)
+            elif kind == self.STAGE_DONE:
+                stage, batch = payload
+                self._stage_done(t, stage, batch)
+            elif kind == self.FAIL:
+                self._failed_until = t + payload
+                self._push(self._failed_until, self.RECOVER)
+                # in-flight micro-batches lost: abort + recompute on recovery
+                for bid in list(self.sched._batches):
+                    self.sched.abort_batch(bid)
+                self._events = [e for e in self._events
+                                if e[1] != self.STAGE_DONE]
+                heapq.heapify(self._events)
+                self.stage_free_at = [self._failed_until] * self.pp
+            elif kind == self.RECOVER:
+                self._kick_driver(t)
+        return self.metrics
+
+    # -------------------------------------------------------------- pipeline
+    def _kick_driver(self, t: float):
+        if not self._driver_pending:
+            self._driver_pending = True
+            self._push(max(t, self.stage_free_at[0]), self.DRIVER)
+
+    def _try_schedule(self, t: float):
+        if t < self._failed_until:
+            return
+        if self.stage_free_at[0] > t:
+            self._kick_driver(t)
+            return
+        batch = self.sched.schedule(t)
+        if batch.is_empty:
+            # nothing schedulable right now; wake on the next arrival or
+            # micro-batch completion (both kick the driver)
+            self.sched.complete(batch.batch_id, [], t)
+            return
+        t0 = t + self.runtime.overhead_serial
+        self._start_stage(t0, 0, batch)
+        self._kick_driver(t0)
+
+    def _batch_time(self, stage: int, batch: ScheduledBatch) -> float:
+        p_ctx = max((s.start_pos + s.num_tokens for s in batch.prefill),
+                    default=0)
+        d_ctx = int(np.mean([s.start_pos for s in batch.decode])) \
+            if batch.decode else 0
+        dt = self.cost.stage_time(batch.num_prefill_tokens,
+                                  batch.num_decode_tokens, p_ctx, d_ctx)
+        st, fac = self.straggler
+        if st is not None and stage == st:
+            dt *= fac
+        return dt
+
+    def _start_stage(self, t: float, stage: int, batch: ScheduledBatch):
+        start = max(t, self.stage_free_at[stage])
+        dt = self._batch_time(stage, batch)
+        if stage == self.pp - 1:
+            if self.stage_free_at[stage] < start and self.metrics.sim_time > 0:
+                self.metrics.bubble_time += start - self.stage_free_at[stage]
+            self.metrics.busy_time += dt
+        self.stage_free_at[stage] = start + dt
+        self._push(start + dt, self.STAGE_DONE, (stage, batch))
+
+    def _stage_done(self, t: float, stage: int, batch: ScheduledBatch):
+        if stage + 1 < self.pp:
+            self._start_stage(t, stage + 1, batch)
+        else:
+            toks = [0] * sum(1 for s in batch.seqs if s.produces_token)
+            finished = self.sched.complete(batch.batch_id, toks, t)
+            self.metrics.total_output_tokens += len(toks)
+            self.metrics.finished.extend(finished)
+            self._kick_driver(t)   # completions free in-flight requests
+        if stage == 0:
+            self._kick_driver(t)

@@ -1,0 +1,132 @@
+"""Trip-count-aware HLO cost parser: loop scaling, fusion classification."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.hlo_cost import HloCostModel, analyse_hlo_text, parse_hlo
+
+HLO = """
+HloModule jit_f
+
+%add_comp (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+%fused_convert (p0: bf16[64,128]) -> f32[64,128] {
+  %p0 = bf16[64,128]{1,0} parameter(0)
+  ROOT %c = f32[64,128]{1,0} convert(%p0)
+}
+
+%fused_gather (p0: f32[1000,128], p1: s32[8]) -> f32[8,128] {
+  %p0 = f32[1000,128]{1,0} parameter(0)
+  %p1 = s32[8]{0} parameter(1)
+  %cmp = pred[8]{0} compare(%p1, %p1), direction=LT
+  ROOT %g = f32[8,128]{1,0} gather(%p0, %p1), offset_dims={1}
+}
+
+%loop_body (t: (s32[], f32[16,16])) -> (s32[], f32[16,16]) {
+  %t = (s32[], f32[16,16]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%t), index=0
+  %x = f32[16,16]{1,0} get-tuple-element(%t), index=1
+  %d = f32[16,16]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %r = (s32[], f32[16,16]{1,0}) tuple(%i2, %d)
+}
+
+%loop_cond (t: (s32[], f32[16,16])) -> pred[] {
+  %t = (s32[], f32[16,16]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%t), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (p: f32[16,16], q: bf16[64,128], pool: f32[1000,128], idx: s32[8]) -> f32[16,16] {
+  %p = f32[16,16]{1,0} parameter(0)
+  %q = bf16[64,128]{1,0} parameter(1)
+  %pool = f32[1000,128]{1,0} parameter(2)
+  %idx = s32[8]{0} parameter(3)
+  %cast = f32[64,128]{1,0} fusion(%q), kind=kLoop, calls=%fused_convert
+  %gat = f32[8,128]{1,0} fusion(%pool, %idx), kind=kLoop, calls=%fused_gather
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[16,16]{1,0}) tuple(%zero, %p)
+  %w = (s32[], f32[16,16]{1,0}) while(%init), condition=%loop_cond, body=%loop_body, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %out = f32[16,16]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+class TestParser:
+    def test_computations_and_ops(self):
+        comps = parse_hlo(HLO)
+        assert {"add_comp", "fused_convert", "fused_gather", "loop_body",
+                "loop_cond", "main"} <= set(comps)
+        assert any(o.kind == "while" for o in comps["main"].ops)
+
+    def test_loop_flops_scaled_by_trip_count(self):
+        res = analyse_hlo_text(HLO)
+        # dot 16x16x16 = 2*16^3 = 8192 flops, x10 trips
+        assert res["flops"] == pytest.approx(8192 * 10)
+
+    def test_cast_fusion_free_gather_fusion_touched_bytes(self):
+        m = HloCostModel(HLO)
+        assert m._fusion_kind("fused_convert") == "cast"
+        assert m._fusion_kind("fused_gather") == "gather"
+        main = m.comps["main"]
+        cast_op = next(o for o in main.ops if o.name.startswith("cast"))
+        gat_op = next(o for o in main.ops if o.name.startswith("gat"))
+        assert m._op_bytes(cast_op, main) == 0.0
+        # 2 x result (8x128xf32), NOT the 1000x128 pool
+        assert m._op_bytes(gat_op, main) == 2 * 8 * 128 * 4
+
+    def test_real_compiled_module_parses(self):
+        @jax.jit
+        def f(x, w):
+            def body(c, _):
+                return c @ w, None
+            y, _ = jax.lax.scan(body, x, None, length=7)
+            return y
+
+        x = jnp.ones((8, 8), jnp.float32)
+        compiled = f.lower(x, x).compile()
+        res = analyse_hlo_text(compiled.as_text())
+        # 7 iterations x 2*8^3 flops
+        assert res["flops"] == pytest.approx(7 * 2 * 8**3, rel=0.01)
+
+
+class TestCollectivesHelpers:
+    def test_int8_psum_single_device_identity_scale(self):
+        # axis size 1: quantize/dequantize round trip within int8 precision
+        from repro.distributed.collectives import int8_psum
+        import jax
+        mesh = jax.make_mesh((1,), ("d",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        x = jnp.linspace(-3, 3, 64)
+
+        def f(x):
+            return int8_psum(x, "d")
+
+        got = jax.shard_map(f, mesh=mesh, in_specs=jax.sharding.PartitionSpec(),
+                            out_specs=jax.sharding.PartitionSpec(),
+                            axis_names={"d"}, check_vma=False)(x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(x),
+                                   atol=3.0 / 127 + 1e-6)
+
+    def test_compressed_psum_small_tensors_stay_exact(self):
+        from repro.distributed.collectives import compressed_psum
+        import jax
+        mesh = jax.make_mesh((1,), ("d",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        x = jnp.arange(16, dtype=jnp.float32)   # < 4096 elements => f32 path
+
+        def f(x):
+            return compressed_psum(x, ("d",), mode="int8")
+
+        got = jax.shard_map(f, mesh=mesh, in_specs=jax.sharding.PartitionSpec(),
+                            out_specs=jax.sharding.PartitionSpec(),
+                            axis_names={"d"}, check_vma=False)(x)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(x))

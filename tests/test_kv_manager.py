@@ -1,0 +1,120 @@
+"""Paged KV allocator: unit + stateful property tests."""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.kv_manager import PagedKVManager
+
+
+class TestBasics:
+    def test_alloc_slots_and_tables(self):
+        kv = PagedKVManager(num_pages=8, page_size=4)
+        slots = kv.allocate("a", 6)
+        assert len(slots) == 6
+        assert len(kv.block_table("a")) == 2
+        assert slots[0][1] == 0 and slots[4][1] == 0 and slots[5][1] == 1
+        assert kv.num_free_pages == 6
+        kv.free("a")
+        assert kv.num_free_pages == 8
+
+    def test_extend_uses_slack_before_new_page(self):
+        kv = PagedKVManager(num_pages=4, page_size=4)
+        kv.allocate("a", 3)
+        assert kv.pages_needed("a", 1) == 0
+        assert kv.pages_needed("a", 2) == 1
+        kv.allocate("a", 2)
+        assert len(kv.block_table("a")) == 2
+
+    def test_oom_raises(self):
+        kv = PagedKVManager(num_pages=2, page_size=4)
+        kv.allocate("a", 8)
+        assert not kv.can_allocate("b", 1)
+        with pytest.raises(MemoryError):
+            kv.allocate("b", 1)
+
+    def test_free_rate_signal(self):
+        kv = PagedKVManager(num_pages=10, page_size=4)
+        assert kv.kv_free_rate == 1.0
+        kv.allocate("a", 20)
+        assert kv.kv_free_rate == 0.5
+
+
+class TestPrefixCache:
+    def test_match_and_reuse(self):
+        kv = PagedKVManager(num_pages=16, page_size=4,
+                            enable_prefix_caching=True)
+        prompt = list(range(10))
+        kv.allocate("a", 10)
+        kv.freeze_full_pages("a", prompt)
+        # same prefix: two full pages (8 tokens) should match
+        n, pages = kv.match_prefix(prompt)
+        assert n == 8 and len(pages) == 2
+        kv.adopt_prefix("b", n, pages)
+        kv.allocate("b", 2)
+        # shared pages are refcounted: freeing one owner keeps them
+        kv.free("a")
+        assert kv.num_tokens("b") == 10
+        kv.check_invariants()
+        kv.free("b")
+        kv.check_invariants()
+
+    def test_eviction_under_pressure(self):
+        kv = PagedKVManager(num_pages=4, page_size=4,
+                            enable_prefix_caching=True)
+        kv.allocate("a", 16)
+        kv.freeze_full_pages("a", list(range(16)))
+        kv.free("a")                      # pages become evictable, not free
+        assert kv.num_free_pages == 4
+        kv.allocate("b", 16)              # must evict the cached pages
+        assert kv.num_free_pages == 0
+        n, _ = kv.match_prefix(list(range(16)))
+        assert n == 0                     # cache fully evicted
+        kv.check_invariants()
+
+    def test_no_match_for_different_tokens(self):
+        kv = PagedKVManager(num_pages=8, page_size=4,
+                            enable_prefix_caching=True)
+        kv.allocate("a", 8)
+        kv.freeze_full_pages("a", [1] * 8)
+        n, pages = kv.match_prefix([2] * 8)
+        assert n == 0 and not pages
+
+
+@st.composite
+def _ops(draw):
+    return draw(st.lists(
+        st.one_of(
+            st.tuples(st.just("alloc"), st.integers(0, 9),
+                      st.integers(1, 12)),
+            st.tuples(st.just("free"), st.integers(0, 9), st.just(0)),
+        ), min_size=1, max_size=60))
+
+
+class TestStatefulProperties:
+    @given(ops=_ops(), page_size=st.sampled_from([1, 4, 8]))
+    @settings(max_examples=150, deadline=None)
+    def test_invariants_under_random_ops(self, ops, page_size):
+        kv = PagedKVManager(num_pages=24, page_size=page_size)
+        live = {}
+        for op, rid_i, n in ops:
+            rid = f"r{rid_i}"
+            if op == "alloc":
+                if kv.can_allocate(rid, n):
+                    kv.allocate(rid, n)
+                    live[rid] = live.get(rid, 0) + n
+            else:
+                kv.free(rid)
+                live.pop(rid, None)
+            kv.check_invariants()
+            # every live request's table covers its tokens exactly
+            for r, tok in live.items():
+                table = kv.block_table(r)
+                assert len(table) == -(-tok // page_size)
+                assert len(set(table)) == len(table)   # no page shared
+        # tables of distinct requests are disjoint (no prefix cache here)
+        seen = set()
+        for r in live:
+            t = set(kv.block_table(r))
+            assert not (t & seen)
+            seen |= t

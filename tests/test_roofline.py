@@ -1,0 +1,114 @@
+"""Roofline plumbing: HLO collective parsing, term math, mesh derivation."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.roofline.analysis import (
+    HBM_BW,
+    PEAK_FLOPS,
+    RooflineCell,
+    model_flops,
+    param_count,
+    parse_collective_bytes,
+)
+
+HLO_SAMPLE = """
+HloModule jit_f
+ENTRY main {
+  %p0 = bf16[128,256]{1,0} parameter(0)
+  %ar = bf16[128,256]{1,0} all-reduce(bf16[128,256]{1,0} %p0), to_apply=%add
+  %ag = f32[64]{0} all-gather(f32[16]{0} %x), dimensions={0}
+  %cp-start = bf16[8,128]{1,0} collective-permute-start(bf16[8,128]{1,0} %y)
+  %cp = bf16[8,128]{1,0} collective-permute-done(%cp-start)
+  %a2a = f32[4,32]{1,0} all-to-all(f32[4,32]{1,0} %z), dimensions={0}
+  %rs = f32[8]{0} reduce-scatter(f32[32]{0} %w), dimensions={0}
+}
+"""
+
+
+class TestCollectiveParse:
+    def test_counts_each_kind(self):
+        got = parse_collective_bytes(HLO_SAMPLE)
+        assert got["all-reduce"] == 128 * 256 * 2
+        assert got["all-gather"] == 16 * 4           # operand, not result
+        assert got["collective-permute"] == 8 * 128 * 2
+        assert got["all-to-all"] == 4 * 32 * 4
+        assert got["reduce-scatter"] == 32 * 4
+
+    def test_done_ops_not_double_counted(self):
+        got = parse_collective_bytes(HLO_SAMPLE)
+        # only the -start line carries the permute payload
+        assert got["collective-permute"] == 8 * 128 * 2
+
+
+class TestCellMath:
+    def _cell(self, flops, bytes_, coll):
+        return RooflineCell(
+            arch="x", shape="train_4k", mesh="16x16", chips=256,
+            hlo_flops=flops, hlo_bytes=bytes_, collective_bytes=coll,
+            collective_breakdown={}, model_flops_per_chip=flops * 0.8,
+            per_device_memory_bytes=1e9)
+
+    def test_terms_and_bottleneck(self):
+        c = self._cell(1e12, 1e9, 1e8)
+        assert c.t_compute == pytest.approx(1e12 / PEAK_FLOPS)
+        assert c.t_memory == pytest.approx(1e9 / HBM_BW)
+        assert c.bottleneck == "compute"
+        c2 = self._cell(1e10, 1e11, 1e8)
+        assert c2.bottleneck == "memory"
+        c3 = self._cell(1e9, 1e6, 1e10)
+        assert c3.bottleneck == "collective"
+
+    def test_roofline_fraction(self):
+        c = self._cell(1e12, 1.0, 1.0)       # pure compute-bound
+        assert c.roofline_fraction == pytest.approx(0.8)
+        assert c.useful_ratio == pytest.approx(0.8)
+
+
+class TestParamCounts:
+    @pytest.mark.parametrize("arch,lo,hi", [
+        ("qwen2.5-14b", 12e9, 17e9),
+        ("qwen1.5-0.5b", 0.3e9, 0.8e9),
+        ("internlm2-1.8b", 1.2e9, 2.5e9),
+        ("olmoe-1b-7b", 5e9, 9e9),
+        ("kimi-k2-1t-a32b", 0.7e12, 1.3e12),
+        ("jamba-1.5-large-398b", 280e9, 480e9),
+        ("rwkv6-3b", 2e9, 4.5e9),
+        ("minicpm3-4b", 2.5e9, 5.5e9),
+        ("qwen2-vl-7b", 6e9, 10e9),
+        ("whisper-small", 0.15e9, 0.5e9),
+    ])
+    def test_total_params_near_published(self, arch, lo, hi):
+        n = param_count(get_config(arch))
+        assert lo < n < hi, f"{arch}: {n/1e9:.1f}B"
+
+    def test_moe_active_far_below_total(self):
+        cfg = get_config("kimi-k2-1t-a32b")
+        total = param_count(cfg)
+        active = param_count(cfg, active_only=True)
+        assert active < total / 10           # 1T total vs ~32B active
+        assert 15e9 < active < 60e9
+
+    def test_model_flops_scales_with_tokens(self):
+        from repro.configs import ASSIGNED_SHAPES
+        cfg = get_config("qwen2.5-14b")
+        tr = model_flops(cfg, ASSIGNED_SHAPES["train_4k"], 256, "train")
+        de = model_flops(cfg, ASSIGNED_SHAPES["decode_32k"], 256, "decode")
+        assert tr > de * 100                 # 1M tokens vs one tick
+
+
+class TestMeshDerivation:
+    def test_factoring_preserves_devices(self):
+        from repro.launch.mesh import derive_pipeline_mesh
+
+        devs = np.array(jax.devices() * 16)[:16].reshape(4, 4)
+
+        class FakeMesh:
+            devices = devs
+            axis_names = ("data", "model")
+
+        # derive requires pp*tp == model axis
+        with pytest.raises(ValueError):
+            derive_pipeline_mesh(FakeMesh, 3, 2)

@@ -1,0 +1,136 @@
+"""SSM mixers: chunked-state equivalence (the serving-correctness property)
+and padding-mask correctness for mamba + rwkv6."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ssm
+
+
+def mamba_params(key, d, di, ds, dc):
+    ks = jax.random.split(key, 8)
+    dtr = max(8, d // 16)
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di)) * 0.1,
+        "conv_w": jax.random.normal(ks[1], (dc, di)) * 0.3,
+        "conv_b": jnp.zeros((di,)),
+        "x_proj": jax.random.normal(ks[2], (di, dtr + 2 * ds)) * 0.1,
+        "dt_proj": jax.random.normal(ks[3], (dtr, di)) * 0.1,
+        "dt_bias": jnp.zeros((di,)),
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))),
+        "D": jnp.ones((di,)),
+        "out_proj": jax.random.normal(ks[4], (di, d)) * 0.1,
+    }
+
+
+def rwkv_params(key, d, ff, hd):
+    ks = jax.random.split(key, 20)
+    lora = 16
+    z = lambda *s: jnp.zeros(s)
+    n = lambda i, *s, sc=0.1: jax.random.normal(ks[i], s) * sc
+    return {
+        "ln1_g": jnp.ones((d,)), "ln1_b": z(d),
+        "ln2_g": jnp.ones((d,)), "ln2_b": z(d),
+        "mu_r": n(0, d, sc=0.5), "mu_k": n(1, d, sc=0.5),
+        "mu_v": n(2, d, sc=0.5), "mu_g": n(3, d, sc=0.5),
+        "mu_w": n(4, d, sc=0.5),
+        "w_r": n(5, d, d), "w_k": n(6, d, d), "w_v": n(7, d, d),
+        "w_g": n(8, d, d), "w_o": n(9, d, d),
+        "w0": jnp.full((d,), -1.0),
+        "w_lora_a": n(10, d, lora), "w_lora_b": z(lora, d),
+        "u": n(11, d, sc=0.3),
+        "ln_x_g": jnp.ones((d,)),
+        "cm_mu_k": n(12, d, sc=0.5), "cm_mu_r": n(13, d, sc=0.5),
+        "cm_k": n(14, d, ff), "cm_v": n(15, ff, d), "cm_r": n(16, d, d),
+    }
+
+
+class TestMamba:
+    def test_chunked_equals_full(self):
+        """Running [0:T/2] then [T/2:T] with carried state == one pass."""
+        d, di, ds, dc, B, T = 8, 16, 4, 4, 2, 32
+        p = mamba_params(jax.random.key(0), d, di, ds, dc)
+        x = jax.random.normal(jax.random.key(1), (B, T, d))
+        full, _ = ssm.mamba_mixer(x, p, d_state=ds, d_conv=dc)
+        st = ssm.mamba_init_state(B, di, ds, dc, jnp.float32)
+        h1, st = ssm.mamba_mixer(x[:, : T // 2], p, d_state=ds, d_conv=dc,
+                                 state=st)
+        h2, _ = ssm.mamba_mixer(x[:, T // 2 :], p, d_state=ds, d_conv=dc,
+                                state=st)
+        got = jnp.concatenate([h1, h2], axis=1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                                   atol=1e-4, rtol=1e-3)
+
+    def test_padding_freezes_state(self):
+        """A chunk padded beyond chunk_lens must leave state as if only the
+        valid rows ran."""
+        d, di, ds, dc, B = 8, 16, 4, 4, 1
+        p = mamba_params(jax.random.key(0), d, di, ds, dc)
+        x = jax.random.normal(jax.random.key(1), (B, 12, d))
+        st0 = ssm.mamba_init_state(B, di, ds, dc, jnp.float32)
+        # run 8 valid rows via a 12-row padded chunk
+        xpad = jnp.concatenate([x[:, :8], jnp.zeros((B, 4, d))], axis=1)
+        valid = jnp.arange(12)[None] < 8
+        _, st_pad = ssm.mamba_mixer(xpad, p, d_state=ds, d_conv=dc, state=st0,
+                                    valid=valid, chunk_lens=jnp.array([8]))
+        _, st_exact = ssm.mamba_mixer(x[:, :8], p, d_state=ds, d_conv=dc,
+                                      state=st0)
+        np.testing.assert_allclose(np.asarray(st_pad.ssm),
+                                   np.asarray(st_exact.ssm),
+                                   atol=1e-4, rtol=1e-3)
+
+
+class TestRWKV:
+    def test_chunked_equals_full(self):
+        d, ff, hd, B, T = 16, 32, 8, 2, 24
+        p = rwkv_params(jax.random.key(0), d, ff, hd)
+        x = jax.random.normal(jax.random.key(1), (B, T, d))
+        full, _ = ssm.rwkv_block(x, p, head_dim=hd, norm_eps=1e-5,
+                                 state=ssm.rwkv_init_state(B, d, d // hd, hd,
+                                                           jnp.float32))
+        st = ssm.rwkv_init_state(B, d, d // hd, hd, jnp.float32)
+        h1, st = ssm.rwkv_block(x[:, : T // 2], p, head_dim=hd, norm_eps=1e-5,
+                                state=st)
+        h2, _ = ssm.rwkv_block(x[:, T // 2 :], p, head_dim=hd, norm_eps=1e-5,
+                               state=st)
+        got = jnp.concatenate([h1, h2], axis=1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                                   atol=1e-4, rtol=1e-3)
+
+    def test_decode_steps_equal_scan(self):
+        """T one-token decode steps == one length-T pass (serving path)."""
+        d, ff, hd, B, T = 16, 32, 8, 1, 6
+        p = rwkv_params(jax.random.key(2), d, ff, hd)
+        x = jax.random.normal(jax.random.key(3), (B, T, d))
+        full, _ = ssm.rwkv_block(
+            x, p, head_dim=hd, norm_eps=1e-5,
+            state=ssm.rwkv_init_state(B, d, d // hd, hd, jnp.float32))
+        st = ssm.rwkv_init_state(B, d, d // hd, hd, jnp.float32)
+        outs = []
+        for t in range(T):
+            o, st = ssm.rwkv_block(x[:, t : t + 1], p, head_dim=hd,
+                                   norm_eps=1e-5, state=st)
+            outs.append(o)
+        got = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                                   atol=1e-4, rtol=1e-3)
+
+    def test_padding_freezes_state(self):
+        d, ff, hd, B = 16, 32, 8, 1
+        p = rwkv_params(jax.random.key(0), d, ff, hd)
+        x = jax.random.normal(jax.random.key(1), (B, 8, d))
+        st0 = ssm.rwkv_init_state(B, d, d // hd, hd, jnp.float32)
+        xpad = jnp.concatenate([x[:, :5], jnp.zeros((B, 3, d))], axis=1)
+        valid = jnp.arange(8)[None] < 5
+        _, st_pad = ssm.rwkv_block(xpad, p, head_dim=hd, norm_eps=1e-5,
+                                   state=st0, valid=valid,
+                                   chunk_lens=jnp.array([5]))
+        _, st_exact = ssm.rwkv_block(x[:, :5], p, head_dim=hd, norm_eps=1e-5,
+                                     state=st0)
+        np.testing.assert_allclose(np.asarray(st_pad.wkv),
+                                   np.asarray(st_exact.wkv),
+                                   atol=1e-4, rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(st_pad.tm_x),
+                                   np.asarray(st_exact.tm_x), atol=1e-5)

@@ -1,0 +1,107 @@
+"""Unit + property tests for Token Throttling (paper eqs. 1-4)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.throttle import (
+    PrefillPolicy,
+    ThrottleConfig,
+    decode_budget,
+    prefill_budget,
+    prefill_budget_ut,
+    prefill_budget_wt,
+)
+
+CFG = ThrottleConfig(num_iters_T=8, max_prefill_tokens=2048,
+                     min_prefill_tokens=32, kv_threshold=0.05,
+                     pipeline_depth=4)
+
+
+class TestEquations:
+    def test_eq1_wt_spreads_over_T(self):
+        # 8192 pending over T=8 iterations -> 1024 per batch
+        assert prefill_budget_wt(8192, CFG) == 1024
+
+    def test_eq1_clamps(self):
+        assert prefill_budget_wt(10, CFG) == 32          # MinP floor
+        assert prefill_budget_wt(10**6, CFG) == 2048     # MaxP ceiling
+        assert prefill_budget_wt(0, CFG) == 0
+
+    def test_eq2_ut_scales_with_free(self):
+        assert prefill_budget_ut(1.0, CFG) == 2048
+        assert prefill_budget_ut(0.5, CFG) == 1024
+        assert prefill_budget_ut(0.0, CFG) == 32         # MinP floor
+
+    def test_eq3_threshold_suspends_prefill(self):
+        # below KV_thresh the system suspends prefill entirely (§3.1.3)
+        assert prefill_budget(10000, 0.05, CFG) == 0
+        assert prefill_budget(10000, 0.01, CFG) == 0
+        assert prefill_budget(10000, 0.06, CFG) > 0
+
+    def test_eq3_combined_min_of_wt_ut(self):
+        # WT term: ceil(16000/8) = 2000; UT term at kv_free=0.5:
+        # 2048*(0.5-0.05)/0.95 = 970 -> min -> 970
+        got = prefill_budget(16000, 0.5, CFG)
+        expect = int(min(2000, 2048 * (0.5 - 0.05) / 0.95))
+        assert got == expect
+
+    def test_eq4_decode_even_spread(self):
+        assert decode_budget(128, CFG) == 32
+        assert decode_budget(130, CFG) == math.ceil(130 / 4)
+        assert decode_budget(0, CFG) == 0
+        assert decode_budget(3, CFG) == 1
+
+    def test_ablation_no_ut_ignores_kv(self):
+        cfg = ThrottleConfig(policy=PrefillPolicy.NO_UT)
+        # WT-only: KV pressure does not throttle (no threshold either)
+        assert prefill_budget(16000, 0.02, cfg) == \
+            prefill_budget(16000, 0.9, cfg)
+
+    def test_ablation_no_wt_ignores_backlog(self):
+        cfg = ThrottleConfig(policy=PrefillPolicy.NO_WT)
+        assert prefill_budget(100000, 0.5, cfg) == \
+            prefill_budget(2000, 0.5, cfg)
+
+
+class TestProperties:
+    @given(wp=st.integers(0, 10**7), kv=st.floats(0.0, 1.0),
+           policy=st.sampled_from([PrefillPolicy.GLLM, PrefillPolicy.NO_WT,
+                                   PrefillPolicy.NO_UT]))
+    @settings(max_examples=300, deadline=None)
+    def test_budget_bounds(self, wp, kv, policy):
+        cfg = ThrottleConfig(policy=policy)
+        b = prefill_budget(wp, kv, cfg)
+        assert 0 <= b <= cfg.max_prefill_tokens
+        assert b <= max(wp, 0)                       # never over-schedule
+        if wp == 0:
+            assert b == 0
+        if policy is not PrefillPolicy.NO_UT and kv <= cfg.kv_threshold:
+            assert b == 0                            # threshold safeguard
+
+    @given(wp=st.integers(1, 10**6), kv=st.floats(0.06, 1.0))
+    @settings(max_examples=200, deadline=None)
+    def test_budget_monotone_in_kv_free(self, wp, kv):
+        cfg = ThrottleConfig()
+        lo = prefill_budget(wp, kv * 0.9, cfg)
+        hi = prefill_budget(wp, kv, cfg)
+        assert hi >= lo                              # more free KV, >= budget
+
+    @given(rd=st.integers(0, 10**6), pp=st.integers(1, 64))
+    @settings(max_examples=200, deadline=None)
+    def test_decode_budget_covers_pool(self, rd, pp):
+        cfg = ThrottleConfig(pipeline_depth=pp)
+        b = decode_budget(rd, cfg)
+        # pp micro-batches at budget b must cover the decode pool exactly
+        assert b * pp >= rd
+        assert rd == 0 or b * pp < rd + pp           # and without waste > pp
+
+    def test_invalid_configs_rejected(self):
+        with pytest.raises(ValueError):
+            ThrottleConfig(kv_threshold=1.5)
+        with pytest.raises(ValueError):
+            ThrottleConfig(num_iters_T=0)
+        with pytest.raises(ValueError):
+            ThrottleConfig(min_prefill_tokens=100, max_prefill_tokens=10)
