@@ -1,0 +1,24 @@
+# Developer / CI entry points.
+#
+#   make dev-deps   install test-only dependencies (pytest, hypothesis)
+#   make test       tier-1 suite (works without dev-deps; property tests
+#                   skip themselves when hypothesis is missing)
+#   make ci         dev-deps + tier-1
+#   make bench      fast benchmark sweep (CSV rows on stdout)
+
+PY ?= python
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+export PYTHONPATH
+
+.PHONY: dev-deps test ci bench
+
+dev-deps:
+	$(PY) -m pip install -r requirements-dev.txt
+
+test:
+	$(PY) -m pytest -x -q
+
+ci: dev-deps test
+
+bench:
+	$(PY) -m benchmarks.run --fast

@@ -1,0 +1,83 @@
+"""Multi-replica routing: round-robin vs global-balance (DESIGN.md §1.3).
+
+A data-parallel cluster of PP replicas — one of them slower (older silicon /
+thermal throttling, modeled by a uniformly scaled cost model) — serves
+skewed ShareGPT-style arrivals on the `SimBackend`.  Round-robin splits
+requests evenly and saturates the slow replica; balance-score routing reads
+each replica's global state (#WP, #RD, KV free rate — the same signals
+Token Throttling uses inside a replica) and sheds load before queues build.
+
+Metrics per (rate, policy): throughput, mean/p95/p99 TTFT.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.configs import get_config
+from repro.core import PagedKVManager, PipelineScheduler, PrefillPolicy, ThrottleConfig
+from repro.data.workload import get_workload, sample_requests
+from repro.runtime.router import BalanceWeights, ReplicaRouter, SimCluster
+from repro.runtime.simulator import PipelineSimulator, cost_model_for
+
+
+def _make_sched(pp: int, pages: int) -> PipelineScheduler:
+    th = ThrottleConfig(pipeline_depth=pp, policy=PrefillPolicy.GLLM)
+    kv = PagedKVManager(num_pages=pages, page_size=16)
+    return PipelineScheduler(th, kv, max_model_len=pages * 16)
+
+
+def run_cluster(policy: str, rate: float, *, arch: str = "qwen2.5-14b",
+                workload: str = "sharegpt", num_requests: int = 200,
+                pp: int = 4, pages: int = 8192, slow_factor: float = 2.5,
+                seed: int = 0) -> SimCluster:
+    cfg = get_config(arch)
+    cost = cost_model_for(cfg, pp=pp)
+    sims = [
+        PipelineSimulator(_make_sched(pp, pages), pp, cost),
+        PipelineSimulator(_make_sched(pp, pages), pp,
+                          cost.scaled(slow_factor)),
+    ]
+    router = ReplicaRouter(sims, policy=policy,
+                           weights=BalanceWeights(),
+                           capacities=[1.0, 1.0 / slow_factor])
+    cluster = SimCluster(sims, router)
+    arrivals = sample_requests(get_workload(workload), num_requests, rate,
+                               seed=seed)
+    cluster.run(arrivals)
+    return cluster
+
+
+def run(verbose: bool = True, rates=(30.0, 60.0, 90.0), **kw):
+    rows = []
+    for rate in rates:
+        tail95 = {}
+        for policy in ("rr", "balanced"):
+            c = run_cluster(policy, rate, **kw)
+            tail95[policy] = c.ttft_quantile(0.95)
+            rows.append(csv_row(
+                f"fig_router_{policy}_rate{rate:g}_thpt_tok_s",
+                c.throughput(),
+                f"routed={'/'.join(map(str, c.router.routed_counts))}"))
+            rows.append(csv_row(
+                f"fig_router_{policy}_rate{rate:g}_ttft_mean_s",
+                c.mean_ttft()))
+            rows.append(csv_row(
+                f"fig_router_{policy}_rate{rate:g}_ttft_p95_s",
+                c.ttft_quantile(0.95)))
+            rows.append(csv_row(
+                f"fig_router_{policy}_rate{rate:g}_ttft_p99_s",
+                c.ttft_quantile(0.99)))
+        rows.append(csv_row(
+            f"fig_router_p95_ttft_rr_over_balanced_rate{rate:g}",
+            tail95["rr"] / max(tail95["balanced"], 1e-9),
+            "global balance sheds load off the slow replica"))
+    if verbose:
+        for r in rows:
+            print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

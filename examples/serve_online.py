@@ -2,6 +2,11 @@
 SLO report — the paper's cloud scenario end-to-end (decoupled frontend,
 non-blocking engine; paper §3.3).
 
+Runs TWO data-parallel engine replicas behind the globally-balanced
+`ReplicaRouter` (DESIGN.md §1.3): the frontend submits by balance score and
+steps both replicas from one worker thread.  Set REPLICAS=1 for the
+single-engine layout.
+
     PYTHONPATH=src python examples/serve_online.py
 """
 import asyncio
@@ -19,6 +24,9 @@ from repro.models import transformer as tfm
 from repro.models.serve import ServeDims
 from repro.runtime.engine import PipelineEngine
 from repro.runtime.frontend import AsyncFrontend
+from repro.runtime.router import ReplicaRouter
+
+REPLICAS = 2
 
 
 async def client(fe, rng, cfg, results, i):
@@ -41,17 +49,20 @@ async def main():
                          axis_types=(jax.sharding.AxisType.Auto,) * 3)
     dims = ServeDims(Sp=1, C=16, Sd=8, pages=512, page=8, Bp=32, Bd=32,
                      slots=16)
+    th = ThrottleConfig(num_iters_T=2, max_prefill_tokens=16,
+                        min_prefill_tokens=4, pipeline_depth=cfg.plan.pp)
     with jax.set_mesh(mesh):
         params = tfm.init_params(cfg, jax.random.key(0), dtype=jnp.float32)
         params = jax.tree.map(
             lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
             params, tfm.param_pspecs(cfg),
             is_leaf=lambda x: isinstance(x, P))
-        engine = PipelineEngine(
-            cfg, dims, params, mesh,
-            ThrottleConfig(num_iters_T=2, max_prefill_tokens=16,
-                           min_prefill_tokens=4, pipeline_depth=cfg.plan.pp))
-    fe = AsyncFrontend(engine)
+        # replicas share the read-only parameter tree
+        engines = [PipelineEngine(cfg, dims, params, mesh, th)
+                   for _ in range(REPLICAS)]
+    target = engines[0] if len(engines) == 1 \
+        else ReplicaRouter(engines, policy="balanced")
+    fe = AsyncFrontend(target)
     runner = asyncio.create_task(fe.run())
 
     rng = np.random.default_rng(0)
@@ -69,6 +80,10 @@ async def main():
     print(f"{len(results)} streamed requests | TTFT p50={np.median(ttft)*1e3:.0f}ms "
           f"p99={np.quantile(ttft, 0.99)*1e3:.0f}ms | "
           f"E2E p50={np.median(e2e)*1e3:.0f}ms")
+    if isinstance(target, ReplicaRouter):
+        print(f"routing ({target.policy.value}): "
+              f"{'/'.join(map(str, target.routed_counts))} across "
+              f"{len(engines)} replicas")
     slo = np.mean((ttft < 2.0) & (e2e < 10.0))
     print(f"SLO attainment (TTFT<2s, E2E<10s): {slo:.0%}")
 

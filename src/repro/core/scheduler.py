@@ -21,7 +21,7 @@ from __future__ import annotations
 import itertools
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.kv_manager import PagedKVManager
 from repro.core.request import Request, RequestState
@@ -118,6 +118,10 @@ class PipelineScheduler:
         self._batches: Dict[int, ScheduledBatch] = {}
         self._batch_counter = itertools.count()
         self.stats = SchedulerStats()
+        # Notified whenever a request loses its resident state (preemption or
+        # batch abort) so the execution layer can release per-request
+        # resources (state slots, caches) tied to residency.
+        self.on_preempt: Optional[Callable[[Request], None]] = None
 
     # ---------------------------------------------------------------- intake
     def add_request(self, req: Request) -> None:
@@ -152,6 +156,19 @@ class PipelineScheduler:
     def has_work(self) -> bool:
         return bool(self.waiting or self.running_prefill or self.running_decode
                     or self._in_flight)
+
+    # ----------------------------------------------------------- batch lookup
+    def get_batch(self, batch_id: int) -> Optional[ScheduledBatch]:
+        """In-flight micro-batch by id; None once completed or aborted.
+
+        This is the public API the execution layer uses to resolve ring
+        entries back to their sequences — batches stay resolvable from
+        `schedule()` until the matching `complete()`/`abort_batch()`."""
+        return self._batches.get(batch_id)
+
+    def active_batch_ids(self) -> List[int]:
+        """Ids of all in-flight micro-batches, in scheduling order."""
+        return list(self._batches)
 
     # ---------------------------------------------------------------- schedule
     def schedule(self, now: float = 0.0) -> ScheduledBatch:
@@ -226,6 +243,8 @@ class PipelineScheduler:
         req.state = RequestState.WAITING
         self.waiting.appendleft(req)   # recompute with priority
         self.stats.preemptions += 1
+        if self.on_preempt is not None:
+            self.on_preempt(req)
 
     # ---------------------------------------------------------------- prefill
     def _schedule_prefill(self, now: float, num_decode: int) -> List[ScheduledSeq]:
@@ -368,6 +387,8 @@ class PipelineScheduler:
             if req not in self.waiting:
                 self.waiting.appendleft(req)
             self.stats.preemptions += 1
+            if self.on_preempt is not None:
+                self.on_preempt(req)
             affected.append(req)
         return affected
 

@@ -24,10 +24,13 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.distributed.optimizer import AdamConfig, AdamState, adam_update
+from repro.jax_compat import ensure_jax_compat
 from repro.launch.mesh import manual_axes
 from repro.models import serve as serve_lib
 from repro.models import transformer as tfm
 from repro.models.serve import ServeDims
+
+ensure_jax_compat()   # this module calls jax.shard_map (modern surface)
 
 
 # ----------------------------------------------------------------------------

@@ -1,0 +1,88 @@
+"""Version compatibility for the JAX surface this repo is written against.
+
+The runtime targets the post-0.6 "explicit sharding" API surface
+(`jax.set_mesh`, `jax.sharding.AxisType`, `jax.make_mesh(axis_types=...)`,
+`jax.shard_map`).  Some deployment containers pin an older jax (0.4.x) where
+those names are missing but the underlying machinery
+(`jax.experimental.shard_map`, mesh context managers) exists and — as the
+engine-equivalence suite verifies — is numerically identical for our
+programs.
+
+`ensure_jax_compat()` installs forward-compatible aliases onto the jax
+module when (and only when) they are missing, so every call site keeps using
+the modern spelling.  It is invoked from ``repro/__init__.py`` — importing
+anything under `repro` makes the surface uniform.  On a current jax it is a
+no-op.
+"""
+
+from __future__ import annotations
+
+import enum
+import inspect
+
+_installed = False
+_shimmed: list = []
+
+
+def is_shimmed() -> bool:
+    """True when any alias was installed — i.e. the underlying jax predates
+    the surface this repo targets.  Tests that need *native* newer-jax
+    machinery (e.g. partial-auto shard_map lowering, which old XLA's SPMD
+    partitioner rejects with 'PartitionId unsupported') gate on this."""
+    ensure_jax_compat()
+    return bool(_shimmed)
+
+
+def ensure_jax_compat() -> None:
+    global _installed
+    if _installed:
+        return
+    _installed = True
+    import jax
+
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+        _shimmed.append("AxisType")
+
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _make_mesh = jax.make_mesh
+
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None,
+                      devices=None):
+            # old jax has no axis-type annotations; Auto axes are simply
+            # "not named in shard_map", which the shard_map alias handles
+            return _make_mesh(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = make_mesh
+        _shimmed.append("make_mesh")
+
+    if not hasattr(jax, "set_mesh"):
+        # Mesh is itself a context manager establishing the active mesh
+        jax.set_mesh = lambda mesh: mesh
+        _shimmed.append("set_mesh")
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                      axis_names=None, check_vma=None, **kw):
+            # new API: `axis_names` = manual axes; old API: everything
+            # manual except `auto`.  `check_vma` replaced `check_rep`.
+            auto = frozenset(mesh.axis_names) - frozenset(
+                axis_names if axis_names is not None else mesh.axis_names)
+            # a size-1 auto axis partitions nothing: treat it as manual —
+            # old XLA's partial-auto SPMD path chokes on PartitionId, and
+            # fully-manual lowering is semantically identical here
+            auto = frozenset(a for a in auto if mesh.shape[a] > 1)
+            check = bool(check_vma) if check_vma is not None else True
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check,
+                              auto=auto)
+
+        jax.shard_map = shard_map
+        _shimmed.append("shard_map")

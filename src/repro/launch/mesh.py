@@ -11,6 +11,10 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.jax_compat import ensure_jax_compat
+
+ensure_jax_compat()   # uses jax.make_mesh(axis_types=) / AxisType
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)

@@ -1,12 +1,17 @@
-"""Serving launcher: build a gLLM engine for any --arch and serve a synthetic
-workload, reporting the paper's metrics.
+"""Serving launcher: build a gLLM engine (or a multi-replica router) for any
+--arch and serve a synthetic workload, reporting the paper's metrics.
 
 On this CPU container, --reduced (default) builds the same-family reduced
 config so the engine actually executes; on a real TPU slice, --full uses the
 published config on the production mesh factoring from the arch's plan.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
-        --requests 12 --rate 4 [--policy gllm|sarathi|no_wt|no_ut]
+        --requests 12 --rate 4 [--policy gllm|sarathi|no_wt|no_ut] \
+        [--replicas 2 --route balanced|rr]
+
+With --replicas N, N data-parallel engine replicas (sharing one read-only
+parameter tree) are fronted by a `ReplicaRouter` that places each request by
+global balance score (DESIGN.md §1.3).
 """
 
 from __future__ import annotations
@@ -19,7 +24,7 @@ import numpy as np
 
 
 def build_engine(arch: str, *, reduced: bool = True, policy: str = "gllm",
-                 seed: int = 0):
+                 seed: int = 0, replicas: int = 1, route: str = "balanced"):
     import jax
     import jax.numpy as jnp
     from jax.sharding import NamedSharding
@@ -33,6 +38,7 @@ def build_engine(arch: str, *, reduced: bool = True, policy: str = "gllm",
     from repro.models import transformer as tfm
     from repro.models.serve import ServeDims
     from repro.runtime.engine import PipelineEngine
+    from repro.runtime.router import ReplicaRouter
 
     cfg = get_config(arch)
     if reduced:
@@ -61,8 +67,13 @@ def build_engine(arch: str, *, reduced: bool = True, policy: str = "gllm",
             lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
             params, tfm.param_pspecs(cfg),
             is_leaf=lambda x: isinstance(x, P))
-        engine = PipelineEngine(cfg, dims, params, mesh, th)
-    return cfg, engine
+        # replicas share the (read-only) parameter tree; each owns its KV
+        # pool, caches, scheduler, and TickLoop
+        engines = [PipelineEngine(cfg, dims, params, mesh, th)
+                   for _ in range(max(replicas, 1))]
+    if len(engines) == 1:
+        return cfg, engines[0]
+    return cfg, ReplicaRouter(engines, policy=route)
 
 
 def main() -> None:
@@ -73,14 +84,22 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--policy", default="gllm",
                     choices=["gllm", "sarathi", "no_wt", "no_ut"])
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel engine replicas behind the router")
+    ap.add_argument("--route", default="balanced", choices=["balanced", "rr"],
+                    help="request placement policy across replicas")
     ap.add_argument("--full", action="store_true",
                     help="published config on the production mesh (TPU)")
     args = ap.parse_args()
 
     from repro.core import SamplingParams
+    from repro.runtime.router import ReplicaRouter
 
     cfg, engine = build_engine(args.arch, reduced=not args.full,
-                               policy=args.policy)
+                               policy=args.policy, replicas=args.replicas,
+                               route=args.route)
+    replicas = engine.replicas if isinstance(engine, ReplicaRouter) \
+        else [engine]
     rng = np.random.default_rng(0)
     t0 = time.time()
     reqs = []
@@ -88,7 +107,7 @@ def main() -> None:
         n = int(np.clip(rng.lognormal(3.0, 0.8), 4, 300))
         enc = None
         if cfg.is_encoder_decoder:
-            enc = rng.normal(size=(engine.dims.Te, cfg.d_model)) \
+            enc = rng.normal(size=(replicas[0].dims.Te, cfg.d_model)) \
                 .astype(np.float32) * 0.05
         reqs.append(engine.add_request(
             list(rng.integers(0, cfg.vocab_size, n)),
@@ -97,13 +116,20 @@ def main() -> None:
     wall = time.time() - t0
     toks = sum(r.num_output_tokens for r in reqs)
     ttfts = [r.metrics.ttft() for r in reqs if r.metrics.ttft() is not None]
-    pad = engine.stats.padded_prefill / max(
-        1, engine.stats.ticks * max(engine.dims.Sp, 1) * max(engine.dims.C, 1))
+    ticks = sum(e.stats.ticks for e in replicas)
+    preempt = sum(e.scheduler.stats.preemptions for e in replicas)
+    pad = sum(e.stats.padded_prefill for e in replicas) / max(
+        1, sum(e.stats.ticks * max(e.dims.Sp, 1) * max(e.dims.C, 1)
+               for e in replicas))
+    routed = ""
+    if isinstance(engine, ReplicaRouter):
+        routed = (f" routed={'/'.join(map(str, engine.routed_counts))}"
+                  f" ({engine.policy.value})")
     print(f"[{args.arch} | {args.policy}] {len(reqs)} requests, {toks} tokens "
-          f"in {wall:.1f}s; ticks={engine.stats.ticks} "
+          f"in {wall:.1f}s; ticks={ticks} "
           f"TTFT_mean={np.mean(ttfts)*1e3:.0f}ms "
-          f"preemptions={engine.scheduler.stats.preemptions} "
-          f"prefill-bucket padding={pad:.1%}")
+          f"preemptions={preempt} "
+          f"prefill-bucket padding={pad:.1%}{routed}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,188 @@
+"""Shared serving-runtime core: the ring/schedule/complete cycle (DESIGN.md §1).
+
+Every serving scenario in this repo — the exact JAX engine, the calibrated
+discrete-event simulator, the benchmark drivers — runs the same loop: form a
+micro-batch, push it into a depth-S pipeline ring, execute one tick, retire
+the micro-batch that exits the ring.  `TickLoop` owns that cycle once;
+*what a tick costs and produces* is delegated to an `ExecutionBackend`:
+
+  * `JaxBackend` (runtime/engine.py)   — the jitted SPMD serve tick; tokens
+    are real, the clock is the wall clock.
+  * `SimBackend` (runtime/simulator.py) — the roofline cost model; tokens are
+    placeholders, the clock is virtual time.
+
+This is the same policy/execution split Sarathi-Serve and TD-Pipe use, and it
+is what lets `ReplicaRouter` (runtime/router.py) front N replicas of either
+kind without touching the tick loop.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Deque, List, Optional, Sequence, Tuple
+
+from repro.core import PipelineScheduler, Request, ScheduledBatch
+
+
+@dataclass
+class ExecResult:
+    """Outcome of one pipeline tick, as seen by the exiting micro-batch.
+
+    `tokens` has one sampled token per token-producing seq of the exiting
+    batch, in batch order (prefill entries first, then decode) — exactly the
+    currency `PipelineScheduler.complete` expects.  `completed_at` is the
+    backend-clock time the exiting batch finished its last stage (for the
+    engine this is "now"; the simulator reports the modeled completion time).
+    """
+
+    tokens: List[int] = field(default_factory=list)
+    completed_at: float = 0.0
+
+
+class ExecutionBackend:
+    """Executes micro-batches for a `TickLoop`.
+
+    Subclasses override `depth`, `prepare`, and `execute`; the remaining
+    hooks default to no-ops.  `scheduler` is attached by the TickLoop so the
+    backend can resolve batch ids via the public `get_batch` API.
+    """
+
+    scheduler: PipelineScheduler
+
+    @property
+    def depth(self) -> int:
+        """Pipeline depth S = number of in-flight micro-batches (ring size)."""
+        raise NotImplementedError
+
+    def clock(self) -> float:
+        """Current time on this backend's clock (wall or virtual)."""
+        return 0.0
+
+    def prepare(self, batch: Optional[ScheduledBatch]) -> Any:
+        """Host-side per-batch payload computed at schedule time (one tick
+        ahead of execution — the engine's dual-phase metadata path).  `batch`
+        is None for a bubble tick."""
+        return None
+
+    def execute(self, ring: Sequence[Tuple[Optional[int], Any]],
+                exiting_id: Optional[int], now: float) -> ExecResult:
+        """Advance the pipeline by one tick.  `ring[0]` is the micro-batch
+        entering stage 0 this tick; `exiting_id` identifies the batch leaving
+        the last stage (None for a bubble)."""
+        raise NotImplementedError
+
+    def finish_request(self, req: Request) -> None:
+        """A request fully completed: release backend-held per-request state."""
+
+    def reset(self, now: float) -> None:
+        """Fault recovery: all in-flight work was lost; restart at `now`."""
+
+
+class TickLoop:
+    """The single schedule→execute→complete cycle (paper §3.3 driver loop).
+
+    One `step()`:
+      1. asks the scheduler for this tick's micro-batch (empty = bubble),
+      2. rotates it into the depth-S ring (the batch entering stage 0),
+      3. has the backend execute one pipeline tick,
+      4. retires the batch exiting the ring: applies its sampled tokens,
+         streams them, and releases finished requests.
+
+    A request scheduled at tick t is retired at tick t+S-1 (same tick for a
+    depth-1 pipeline) — the pipeline-parallel in-flight window the
+    scheduler's exclusion rule (one resident micro-batch per request) is
+    built around.
+    """
+
+    def __init__(self, scheduler: PipelineScheduler, backend: ExecutionBackend,
+                 on_token: Optional[Callable[[Request, int], None]] = None
+                 ) -> None:
+        self.scheduler = scheduler
+        self.backend = backend
+        backend.scheduler = scheduler
+        S = backend.depth
+        self.ring: Deque[Tuple[Optional[int], Any]] = deque(
+            [(None, backend.prepare(None)) for _ in range(S)], maxlen=S)
+        self.on_token = on_token
+        self.finished: List[Request] = []
+        self.last_tick_empty = False
+
+    # ------------------------------------------------------------------ state
+    @property
+    def busy(self) -> bool:
+        """True while any real micro-batch is still in the ring."""
+        return any(bid is not None for bid, _ in self.ring)
+
+    @property
+    def has_work(self) -> bool:
+        return self.scheduler.has_work or self.busy
+
+    # ------------------------------------------------------------------- tick
+    def step(self, now: Optional[float] = None) -> List[Request]:
+        """One pipeline tick.  Returns requests finishing this tick."""
+        if now is None:
+            now = self.backend.clock()
+        batch = self.scheduler.schedule(now)
+        if batch.is_empty:
+            # nothing resident this tick: retire the empty batch immediately
+            self.scheduler.complete(batch.batch_id, [], now)
+            entry: Tuple[Optional[int], Any] = (None, self.backend.prepare(None))
+        else:
+            entry = (batch.batch_id, self.backend.prepare(batch))
+        self.last_tick_empty = batch.is_empty
+        # Rotate: the new batch enters stage 0; the entry reaching the ring's
+        # tail is the one executing its LAST stage this tick — its results
+        # materialize when `execute` returns.  (For depth 1 that is this
+        # tick's own batch: schedule, execute, retire in one step.)
+        self.ring.appendleft(entry)
+        exiting_id, _ = self.ring[-1]
+
+        result = self.backend.execute(tuple(self.ring), exiting_id, now)
+
+        if exiting_id is None:
+            return []
+        finished = self._retire(exiting_id, result.tokens,
+                                result.completed_at)
+        # the retired entry is never read again (the next push would drop
+        # it); clear it so `busy` reflects only live work
+        self.ring[-1] = (None, self.backend.prepare(None))
+        return finished
+
+    def drain(self, now_fn: Callable[[], float],
+              max_ticks: int = 100000) -> List[Request]:
+        out: List[Request] = []
+        t = 0
+        while self.has_work and t < max_ticks:
+            out.extend(self.step(now_fn()))
+            t += 1
+        return out
+
+    # ----------------------------------------------------------------- retire
+    def _retire(self, batch_id: int, tokens: Sequence[int],
+                now: float) -> List[Request]:
+        batch = self.scheduler.get_batch(batch_id)
+        if batch is None:
+            return []
+        producing = [s.request for s in batch.seqs if s.produces_token]
+        finished = self.scheduler.complete(batch_id, tokens, now)
+        if self.on_token is not None:
+            for req, tok in zip(producing, tokens):
+                self.on_token(req, int(tok))
+        for req in finished:
+            self.backend.finish_request(req)
+            self.finished.append(req)
+        return finished
+
+    # ------------------------------------------------------------ fault paths
+    def abort_inflight(self) -> List[Request]:
+        """A worker died: every in-flight micro-batch's results are lost.
+        Requests recover by recompute via `scheduler.abort_batch`."""
+        affected: List[Request] = []
+        for bid, _ in list(self.ring):
+            if bid is not None:
+                affected.extend(self.scheduler.abort_batch(bid))
+        S = self.ring.maxlen or self.backend.depth
+        self.ring.clear()
+        self.ring.extend((None, self.backend.prepare(None)) for _ in range(S))
+        return affected

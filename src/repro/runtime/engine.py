@@ -2,29 +2,29 @@
 adapted to JAX.
 
 Roles (paper -> here):
-  * driver worker   -> `PipelineEngine` host logic: owns the scheduler, the
-    paged-KV page tables and state slots, builds per-tick metadata, streams
-    results to the frontend.
-  * ordinary worker -> the SPMD serving tick (`build_serve_tick`): each mesh
-    `stage` shard executes its resident micro-batch; activations move by
-    collective-permute (the NCCL path), metadata is computed host-side one
-    tick ahead (the ZeroMQ dual-phase path) and overlaps device compute
-    because jit dispatch is asynchronous.
+  * driver worker   -> the shared `TickLoop` (runtime/core.py): owns the
+    schedule→execute→complete cycle and the depth-S micro-batch ring.
+  * ordinary worker -> `JaxBackend`: the SPMD serving tick
+    (`build_serve_tick`); each mesh `stage` shard executes its resident
+    micro-batch; activations move by collective-permute (the NCCL path),
+    metadata is computed host-side one tick ahead (the ZeroMQ dual-phase
+    path) and overlaps device compute because jit dispatch is asynchronous.
   * frontend        -> `AsyncFrontend` (asyncio): decoupled request intake /
     token streaming.
 
-The engine is exact (it runs the real model); it is used by the examples,
+`PipelineEngine` is the user-facing handle binding scheduler + KV + backend
++ loop; it is exact (it runs the real model) and is used by the examples,
 integration tests, and the output-equivalence benchmark.  Scale experiments
-run on the calibrated discrete-event simulator instead (runtime/simulator.py).
+run the *same* TickLoop over the calibrated roofline `SimBackend` instead
+(runtime/simulator.py).
 """
 
 from __future__ import annotations
 
-import dataclasses
+import itertools
 import time
-from collections import deque
-from dataclasses import dataclass, field
-from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +42,7 @@ from repro.core import (
 from repro.models import serve as serve_lib
 from repro.models import transformer as tfm
 from repro.models.serve import ServeDims
+from repro.runtime.core import ExecResult, ExecutionBackend, TickLoop
 
 
 class SlotAllocator:
@@ -76,21 +77,18 @@ class EngineStats:
     scheduled_decode: int = 0
 
 
-class PipelineEngine:
-    """Single-process engine (mesh may be 1 device for CPU runs — the SPMD
-    tick is identical; only the mesh size changes)."""
+class JaxBackend(ExecutionBackend):
+    """ExecutionBackend running the exact jitted SPMD serve tick.
 
-    def __init__(
-        self,
-        cfg: ArchConfig,
-        dims: ServeDims,
-        params,
-        mesh,
-        throttle: ThrottleConfig,
-        *,
-        num_pages: Optional[int] = None,
-        dtype=None,
-    ) -> None:
+    Owns everything device-side: params, paged KV tensors, recurrent-state
+    caches, the inter-stage activation carry, and the per-request host state
+    (state slots, encoder embeddings).  `prepare` builds the tick metadata at
+    schedule time; `execute` stacks the ring's metadata, dispatches the tick,
+    and reads back the sampled tokens of the exiting micro-batch.
+    """
+
+    def __init__(self, cfg: ArchConfig, dims: ServeDims, params, mesh,
+                 kv: PagedKVManager, *, dtype=None) -> None:
         from repro.distributed.pipeline import build_serve_tick
 
         self.cfg = cfg
@@ -98,15 +96,10 @@ class PipelineEngine:
         self.mesh = mesh
         self.params = params
         self.dtype = dtype or jnp.dtype(cfg.dtype)
-        self.kv = PagedKVManager(num_pages or dims.pages, dims.page)
-        self.scheduler = PipelineScheduler(
-            throttle, self.kv,
-            max_model_len=dims.page * max(dims.Bp, dims.Bd),
-            max_prefill_seqs=max(dims.Sp, 0),
-            max_chunk_tokens=max(dims.C, 1),
-            max_decode_seqs=dims.Sd)
+        self.kv = kv
         self.slots = SlotAllocator(dims.slots)
         self.enc_embeds: Dict[str, np.ndarray] = {}
+        self.stats = EngineStats()
 
         tick, specs = build_serve_tick(cfg, mesh, dims)
         self._tick = jax.jit(tick, donate_argnums=(1, 2))
@@ -120,92 +113,79 @@ class PipelineEngine:
                 "xp": jnp.zeros((S, dims.Sp, W, cfg.d_model), self.dtype),
                 "xd": jnp.zeros((S, dims.Sd, 1, cfg.d_model), self.dtype),
             }
-        self.ring: Deque[Tuple[Optional[int], dict]] = deque(
-            [(None, serve_lib.zero_meta(dims))] * S, maxlen=S)
-        self.stats = EngineStats()
-        self.finished: List[Request] = []
-        self._now_fn: Callable[[], float] = time.monotonic
-        # streaming hook: called as on_token(request, token_id) per new token
-        self.on_token: Optional[Callable[[Request, int], None]] = None
+        self._seed = 0
 
-    # ------------------------------------------------------------------ API
-    def add_request(self, prompt: Sequence[int],
-                    sampling: Optional[SamplingParams] = None,
-                    request_id: Optional[str] = None,
-                    enc_embeds: Optional[np.ndarray] = None) -> Request:
-        rid = request_id or f"req-{len(self.scheduler.waiting)}-{self.stats.ticks}"
-        req = Request(rid, list(prompt), sampling or SamplingParams())
-        req.metrics.arrival_time = self._now_fn()
-        if self.cfg.is_encoder_decoder:
-            Te, d = self.dims.Te, self.cfg.d_model
-            if enc_embeds is None:
-                enc_embeds = np.zeros((Te, d), np.float32)
-            self.enc_embeds[rid] = np.asarray(enc_embeds, np.float32)[:Te]
-        self.scheduler.add_request(req)
-        return req
-
+    # --------------------------------------------------------------- protocol
     @property
-    def has_work(self) -> bool:
-        return self.scheduler.has_work
+    def depth(self) -> int:
+        return self.cfg.plan.pp
 
-    # ----------------------------------------------------------------- tick
-    def step(self) -> List[Request]:
-        """One pipeline tick.  Returns requests finishing this tick."""
-        now = self._now_fn()
-        batch = self.scheduler.schedule(now)
-        if batch.is_empty:
-            # nothing resident this tick: retire the empty batch immediately
-            self.scheduler.complete(batch.batch_id, [], now)
-            self.ring.appendleft((None, self._zero_meta_np()))
-        else:
-            self.ring.appendleft((batch.batch_id, self._build_meta(batch)))
-        exiting_id, _ = self.ring[-1] if len(self.ring) == self.ring.maxlen \
-            else (None, None)
+    def clock(self) -> float:
+        return time.monotonic()
 
+    def prepare(self, batch: Optional[ScheduledBatch]) -> dict:
+        if batch is None:
+            return self._zero_meta_np()
+        return self._build_meta(batch)
+
+    def execute(self, ring: Sequence[Tuple[Optional[int], Any]],
+                exiting_id: Optional[int], now: float) -> ExecResult:
         meta_dev = {
-            k: jnp.asarray(np.stack([m[1][k] for m in self.ring], axis=0))
+            k: jnp.asarray(np.stack([m[1][k] for m in ring], axis=0))
             for k in self._zero_meta_np()
         }
-        fresh = self._build_fresh(batch)
+        entering = (self.scheduler.get_batch(ring[0][0])
+                    if ring[0][0] is not None else None)
+        fresh = self._build_fresh(entering)
         sampling = self._build_sampling(exiting_id)
         self.carry, self.caches, tokens, top_lp = self._tick(
             self.params, self.caches, self.carry, meta_dev, fresh, sampling)
 
+        dims = self.dims
+        n_p = entering.num_prefill_tokens if entering is not None else 0
+        n_d = entering.num_decode_tokens if entering is not None else 0
         self.stats.ticks += 1
-        self.stats.scheduled_prefill += batch.num_prefill_tokens
-        self.stats.scheduled_decode += batch.num_decode_tokens
-        self.stats.padded_prefill += \
-            self.dims.Sp * self.dims.C - batch.num_prefill_tokens
-        self.stats.padded_decode += self.dims.Sd - batch.num_decode_tokens
+        self.stats.scheduled_prefill += n_p
+        self.stats.scheduled_decode += n_d
+        self.stats.padded_prefill += dims.Sp * dims.C - n_p
+        self.stats.padded_decode += dims.Sd - n_d
 
-        finished: List[Request] = []
+        toks: List[int] = []
         if exiting_id is not None:
-            finished = self._complete(exiting_id, np.asarray(tokens), now)
-        return finished
+            exiting = self.scheduler.get_batch(exiting_id)
+            if exiting is not None:
+                host = np.asarray(tokens)
+                for i, seq in enumerate(exiting.prefill):
+                    if seq.produces_token:
+                        toks.append(int(host[i]))
+                for j, seq in enumerate(exiting.decode):
+                    toks.append(int(host[dims.Sp + j]))
+        self.stats.tokens_out += len(toks)
+        return ExecResult(tokens=toks, completed_at=now)
 
-    def drain(self, max_ticks: int = 100000) -> List[Request]:
-        out = []
-        t = 0
-        while (self.scheduler.has_work or self._ring_busy()) and t < max_ticks:
-            out.extend(self.step())
-            t += 1
-        return out
+    def finish_request(self, req: Request) -> None:
+        self.slots.release(req.request_id)
+        self.enc_embeds.pop(req.request_id, None)
 
-    def _ring_busy(self) -> bool:
-        return any(bid is not None for bid, _ in self.ring)
+    def release_resident_state(self, req: Request) -> None:
+        """Preemption/abort recovery: the request lost residency, so its
+        state slot can be reassigned (recompute rebuilds recurrent state from
+        scratch).  Encoder embeddings are kept — recompute needs them."""
+        self.slots.release(req.request_id)
 
+    # -------------------------------------------------------------- internals
     def _build_sampling(self, exiting_id):
         """Per-row temperatures for the micro-batch exiting this tick."""
         rows = self.dims.Sp + self.dims.Sd
         temps = np.zeros(rows, np.float32)
-        batch = (self.scheduler._batches.get(exiting_id)
+        batch = (self.scheduler.get_batch(exiting_id)
                  if exiting_id is not None else None)
         if batch is not None:
             for i, seq in enumerate(batch.prefill):
                 temps[i] = seq.request.sampling.temperature
             for j, seq in enumerate(batch.decode):
                 temps[self.dims.Sp + j] = seq.request.sampling.temperature
-        self._seed = (getattr(self, "_seed", 0) + 1) % (2**31)
+        self._seed = (self._seed + 1) % (2**31)
         return {"temps": jnp.asarray(temps),
                 "seed": jnp.asarray(self._seed, jnp.uint32)}
 
@@ -214,32 +194,6 @@ class PipelineEngine:
             self._zm = {k: np.asarray(v)
                         for k, v in serve_lib.zero_meta(self.dims).items()}
         return self._zm
-
-    # ------------------------------------------------------------- internals
-    def _complete(self, batch_id: int, tokens: np.ndarray,
-                  now: float) -> List[Request]:
-        batch = self.scheduler._batches.get(batch_id)
-        if batch is None:
-            return []
-        toks: List[int] = []
-        producing = []
-        for i, seq in enumerate(batch.prefill):
-            if seq.produces_token:
-                toks.append(int(tokens[i]))
-                producing.append(seq.request)
-        for j, seq in enumerate(batch.decode):
-            toks.append(int(tokens[self.dims.Sp + j]))
-            producing.append(seq.request)
-        finished = self.scheduler.complete(batch_id, toks, now)
-        if self.on_token is not None:
-            for req, tok in zip(producing, toks):
-                self.on_token(req, tok)
-        for req in finished:
-            self.slots.release(req.request_id)
-            self.enc_embeds.pop(req.request_id, None)
-            self.finished.append(req)
-        self.stats.tokens_out += len(toks)
-        return finished
 
     def _build_meta(self, batch: ScheduledBatch) -> dict:
         dims = self.dims
@@ -271,24 +225,26 @@ class PipelineEngine:
             m["d_valid"][s] = 1
         return m
 
-    def _build_fresh(self, batch: ScheduledBatch) -> dict:
+    def _build_fresh(self, batch: Optional[ScheduledBatch]) -> dict:
         dims, cfg = self.dims, self.cfg
+        prefill = batch.prefill if batch is not None else []
+        decode = batch.decode if batch is not None else []
         W = dims.prefill_width
         xp = np.zeros((max(dims.Sp, 0), W, cfg.d_model), np.float32)
         xd = np.zeros((dims.Sd, 1, cfg.d_model), np.float32)
         p_tok = np.zeros((max(dims.Sp, 0), max(dims.C, 1)), np.int32)
         d_tok = np.zeros((dims.Sd, 1), np.int32)
-        for s, seq in enumerate(batch.prefill):
+        for s, seq in enumerate(prefill):
             toks = seq.request.effective_prompt[
                 seq.start_pos : seq.start_pos + seq.num_tokens]
             p_tok[s, : len(toks)] = toks
-        for s, seq in enumerate(batch.decode):
+        for s, seq in enumerate(decode):
             d_tok[s, 0] = seq.request.effective_prompt[seq.start_pos]
         if dims.Sp:
             emb = np.asarray(self._embed(self.params,
                                          jnp.asarray(p_tok)), np.float32)
             xp[:, dims.Te : dims.Te + emb.shape[1], :] = emb[:, : dims.C]
-            for s, seq in enumerate(batch.prefill):
+            for s, seq in enumerate(prefill):
                 enc = self.enc_embeds.get(seq.request.request_id)
                 if enc is not None:
                     xp[s, : enc.shape[0], :] = enc
@@ -298,6 +254,107 @@ class PipelineEngine:
                 np.float32)[:, 0, :]
         return {"xp": jnp.asarray(xp, self.dtype),
                 "xd": jnp.asarray(xd, self.dtype)}
+
+
+class PipelineEngine:
+    """Single-process engine (mesh may be 1 device for CPU runs — the SPMD
+    tick is identical; only the mesh size changes).  Binds scheduler + KV +
+    `JaxBackend` under the shared `TickLoop`."""
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        dims: ServeDims,
+        params,
+        mesh,
+        throttle: ThrottleConfig,
+        *,
+        num_pages: Optional[int] = None,
+        dtype=None,
+    ) -> None:
+        self.cfg = cfg
+        self.dims = dims
+        self.mesh = mesh
+        self.params = params
+        self.kv = PagedKVManager(num_pages or dims.pages, dims.page)
+        self.scheduler = PipelineScheduler(
+            throttle, self.kv,
+            max_model_len=dims.page * max(dims.Bp, dims.Bd),
+            max_prefill_seqs=max(dims.Sp, 0),
+            max_chunk_tokens=max(dims.C, 1),
+            max_decode_seqs=dims.Sd)
+        self.backend = JaxBackend(cfg, dims, params, mesh, self.kv,
+                                  dtype=dtype)
+        self.loop = TickLoop(self.scheduler, self.backend)
+        # state slots are tied to residency: free them when the scheduler
+        # evicts a request (preemption or batch abort), not only on finish
+        self.scheduler.on_preempt = self.backend.release_resident_state
+        self._now_fn: Callable[[], float] = time.monotonic
+
+    # ----------------------------------------------------- delegated surfaces
+    @property
+    def slots(self) -> SlotAllocator:
+        return self.backend.slots
+
+    @property
+    def enc_embeds(self) -> Dict[str, np.ndarray]:
+        return self.backend.enc_embeds
+
+    @property
+    def stats(self) -> EngineStats:
+        return self.backend.stats
+
+    @property
+    def finished(self) -> List[Request]:
+        return self.loop.finished
+
+    @property
+    def on_token(self) -> Optional[Callable[[Request, int], None]]:
+        return self.loop.on_token
+
+    @on_token.setter
+    def on_token(self, fn: Optional[Callable[[Request, int], None]]) -> None:
+        # streaming hook: called as on_token(request, token_id) per new token
+        self.loop.on_token = fn
+
+    # ------------------------------------------------------------------ API
+    # process-wide: ids must stay unique across router replicas (the
+    # frontend keys token streams by request id)
+    _req_counter = itertools.count()
+
+    def add_request(self, prompt: Sequence[int],
+                    sampling: Optional[SamplingParams] = None,
+                    request_id: Optional[str] = None,
+                    enc_embeds: Optional[np.ndarray] = None) -> Request:
+        rid = request_id or f"req-{next(PipelineEngine._req_counter)}"
+        req = Request(rid, list(prompt), sampling or SamplingParams())
+        req.metrics.arrival_time = self._now_fn()
+        if self.cfg.is_encoder_decoder:
+            Te, d = self.dims.Te, self.cfg.d_model
+            if enc_embeds is None:
+                enc_embeds = np.zeros((Te, d), np.float32)
+            self.enc_embeds[rid] = np.asarray(enc_embeds, np.float32)[:Te]
+        self.scheduler.add_request(req)
+        return req
+
+    @property
+    def has_work(self) -> bool:
+        return self.scheduler.has_work
+
+    @property
+    def busy(self) -> bool:
+        return self.loop.busy
+
+    def _ring_busy(self) -> bool:   # back-compat alias
+        return self.loop.busy
+
+    # ----------------------------------------------------------------- tick
+    def step(self) -> List[Request]:
+        """One pipeline tick.  Returns requests finishing this tick."""
+        return self.loop.step(self._now_fn())
+
+    def drain(self, max_ticks: int = 100000) -> List[Request]:
+        return self.loop.drain(self._now_fn, max_ticks)
 
     # -------------------------------------------------------- checkpointing
     def snapshot_state(self) -> dict:

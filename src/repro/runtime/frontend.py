@@ -1,35 +1,56 @@
 """Decoupled asynchronous frontend (paper §3.3 design principle 2).
 
-Request intake and token streaming run on the asyncio loop; the engine's
+Request intake and token streaming run on the asyncio loop; the engines'
 blocking device steps run on a worker thread, so user interaction never
 stalls model execution (and vice versa).  This is the JAX-native analogue of
 gLLM's separate frontend process + ZeroMQ sockets.
+
+The frontend fronts either a single `PipelineEngine` or a `ReplicaRouter`
+over N engine replicas — submissions are placed by the router's global
+balance score, and all replicas are stepped from the same worker thread.
 """
 
 from __future__ import annotations
 
 import asyncio
-from typing import AsyncIterator, Dict, List, Optional, Sequence
+import itertools
+from typing import AsyncIterator, Dict, List, Optional, Sequence, Union
 
 from repro.core import Request, SamplingParams
 from repro.runtime.engine import PipelineEngine
+from repro.runtime.router import ReplicaRouter
 
 
 class AsyncFrontend:
-    def __init__(self, engine: PipelineEngine) -> None:
-        self.engine = engine
+    def __init__(self, engine: Union[PipelineEngine, ReplicaRouter]) -> None:
+        if isinstance(engine, ReplicaRouter):
+            self.router = engine
+        else:
+            self.router = ReplicaRouter([engine])
+        self.engine = engine                      # as handed in (back-compat)
         self._streams: Dict[str, asyncio.Queue] = {}
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._stop = False
-        engine.on_token = self._on_token
+        for replica in self.router.replicas:
+            replica.on_token = self._on_token
+
+    _rid_counter = itertools.count()
 
     # ------------------------------------------------------------- intake
     async def submit(self, prompt: Sequence[int],
                      sampling: Optional[SamplingParams] = None,
                      request_id: Optional[str] = None) -> str:
-        req = self.engine.add_request(prompt, sampling, request_id)
-        self._streams[req.request_id] = asyncio.Queue()
-        return req.request_id
+        rid = request_id or f"fe-{next(AsyncFrontend._rid_counter)}"
+        # register the stream BEFORE the engine can see the request: the
+        # worker thread may step the moment add_request lands, and tokens
+        # emitted before the queue exists would be lost
+        self._streams[rid] = asyncio.Queue()
+        try:
+            self.router.add_request(prompt, sampling, rid)
+        except Exception:
+            self._streams.pop(rid, None)
+            raise
+        return rid
 
     async def stream(self, request_id: str) -> AsyncIterator[int]:
         q = self._streams[request_id]
@@ -59,8 +80,8 @@ class AsyncFrontend:
         """Engine loop: blocking ticks on a thread; intake stays responsive."""
         self._loop = asyncio.get_running_loop()
         while not self._stop:
-            if self.engine.has_work or self.engine._ring_busy():
-                await asyncio.to_thread(self.engine.step)
+            if self.router.has_work or self.router.busy:
+                await asyncio.to_thread(self.router.step)
             else:
                 await asyncio.sleep(idle_sleep)
 

@@ -1,0 +1,223 @@
+"""Globally-balanced multi-replica routing (DESIGN.md §1.3).
+
+gLLM's thesis is that *global* state — pending prefill tokens (#WP), decode
+population (#RD), KV idle rate — should drive scheduling.  Token Throttling
+applies that inside one replica; `ReplicaRouter` applies the same principle
+one level up: it fronts N independent `TickLoop` replicas (real engines or
+simulators, possibly heterogeneous in speed or pipeline depth) and routes
+each arriving request to the replica whose global balance score is lowest.
+
+The score is computed from exactly the scheduler signals Token Throttling
+uses, so imbalance is *discovered* — a slow or KV-saturated replica
+accumulates #WP/#RD backlog and sheds load without any static capacity
+configuration (weights can still be supplied when capacities are known).
+
+`SimCluster` drives N `PipelineSimulator` replicas in causally-consistent
+virtual time: before each routing decision every replica is advanced to the
+arrival instant, so the router sees the state a real frontend would.
+"""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+from typing import Any, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import Request, SamplingParams
+
+
+class RoutingPolicy(enum.Enum):
+    ROUND_ROBIN = "rr"
+    BALANCED = "balanced"
+
+
+@dataclass(frozen=True)
+class BalanceWeights:
+    """Converts the scheduler's global signals into one load scalar.
+
+    A decode-resident request represents future work (its remaining output
+    tokens) — `decode_tokens` is the prefill-token-equivalent charged per
+    resident decode; calibrate it to ~E[remaining output length] of the
+    workload (the default suits chat-style ~240-token outputs).
+    `kv_pressure` inflates the score of replicas near KV exhaustion, where
+    admission would trigger the UT guard or preemption churn (paper
+    Fig. 15's no-UT pathology, avoided cluster-wide).
+    """
+
+    decode_tokens: float = 128.0
+    kv_pressure: float = 4.0
+
+
+@dataclass(frozen=True)
+class ReplicaSnapshot:
+    """The router's view of one replica at a routing instant."""
+
+    waiting_prefill_tokens: int
+    running_decode: int
+    kv_free_rate: float
+
+    @staticmethod
+    def of(replica) -> "ReplicaSnapshot":
+        sched = replica.scheduler
+        return ReplicaSnapshot(
+            waiting_prefill_tokens=sched.num_waiting_prefill_tokens,
+            running_decode=sched.num_running_decode,
+            kv_free_rate=sched.kv.kv_free_rate,
+        )
+
+
+def balance_score(snap: ReplicaSnapshot, prompt_tokens: int,
+                  weights: BalanceWeights, capacity: float = 1.0) -> float:
+    """Estimated completion burden of placing `prompt_tokens` on a replica:
+    pending work (incl. the candidate request) per unit capacity, inflated
+    by KV pressure.  Lower is better."""
+    load = (snap.waiting_prefill_tokens + prompt_tokens
+            + weights.decode_tokens * snap.running_decode)
+    pressure = 1.0 + weights.kv_pressure * (1.0 - snap.kv_free_rate)
+    return load * pressure / max(capacity, 1e-9)
+
+
+class ReplicaRouter:
+    """Fronts N serving replicas; routes by global balance score.
+
+    A replica is anything exposing `scheduler` (a `PipelineScheduler`);
+    engine replicas additionally expose `add_request`/`step`/`has_work`/
+    `busy` so the router can serve as a drop-in engine for `AsyncFrontend`
+    and the launchers.
+    """
+
+    def __init__(
+        self,
+        replicas: Sequence[Any],
+        policy: str | RoutingPolicy = RoutingPolicy.BALANCED,
+        *,
+        weights: Optional[BalanceWeights] = None,
+        capacities: Optional[Sequence[float]] = None,
+    ) -> None:
+        if not replicas:
+            raise ValueError("ReplicaRouter needs at least one replica")
+        self.replicas = list(replicas)
+        self.policy = RoutingPolicy(policy)
+        self.weights = weights or BalanceWeights()
+        n = len(self.replicas)
+        self.capacities = list(capacities) if capacities is not None \
+            else [1.0] * n
+        if len(self.capacities) != n:
+            raise ValueError("one capacity per replica")
+        self._rr_next = 0
+        self.routed_counts = [0] * n
+
+    # ---------------------------------------------------------------- routing
+    def scores(self, prompt_tokens: int = 0) -> List[float]:
+        return [balance_score(ReplicaSnapshot.of(r), prompt_tokens,
+                              self.weights, c)
+                for r, c in zip(self.replicas, self.capacities)]
+
+    def select(self, prompt_tokens: int = 0) -> int:
+        """Index of the replica the next request should land on."""
+        if self.policy is RoutingPolicy.ROUND_ROBIN:
+            i = self._rr_next
+            self._rr_next = (self._rr_next + 1) % len(self.replicas)
+        else:
+            s = self.scores(prompt_tokens)
+            i = int(np.argmin(s))
+        self.routed_counts[i] += 1
+        return i
+
+    # ------------------------------------------------- engine-cluster surface
+    def add_request(self, prompt: Sequence[int],
+                    sampling: Optional[SamplingParams] = None,
+                    request_id: Optional[str] = None, **kw) -> Request:
+        i = self.select(len(prompt))
+        return self.replicas[i].add_request(prompt, sampling, request_id,
+                                            **kw)
+
+    @property
+    def scheduler(self):
+        """Single-replica compatibility: the scheduler when fronting one
+        replica (ambiguous otherwise)."""
+        if len(self.replicas) != 1:
+            raise AttributeError(
+                "ReplicaRouter fronts multiple replicas; inspect "
+                ".replicas[i].scheduler")
+        return self.replicas[0].scheduler
+
+    @property
+    def has_work(self) -> bool:
+        return any(r.has_work for r in self.replicas)
+
+    @property
+    def busy(self) -> bool:
+        return any(r.busy for r in self.replicas)
+
+    def step(self) -> List[Request]:
+        """One tick on every replica that has work (the single-process
+        analogue of N independent driver loops)."""
+        out: List[Request] = []
+        for r in self.replicas:
+            if r.has_work or r.busy:
+                out.extend(r.step())
+        return out
+
+    def drain(self, max_ticks: int = 100000) -> List[Request]:
+        out: List[Request] = []
+        t = 0
+        while (self.has_work or self.busy) and t < max_ticks:
+            out.extend(self.step())
+            t += 1
+        return out
+
+    @property
+    def finished(self) -> List[Request]:
+        out: List[Request] = []
+        for r in self.replicas:
+            out.extend(r.finished)
+        return out
+
+
+class SimCluster:
+    """N `PipelineSimulator` replicas behind a `ReplicaRouter`, driven in
+    causally-consistent virtual time: each arrival first advances every
+    replica to the arrival instant, then routes on the resulting state."""
+
+    def __init__(self, sims: Sequence[Any], router: ReplicaRouter) -> None:
+        self.sims = list(sims)
+        self.router = router
+
+    def run(self, arrivals: Iterable[Tuple[float, List[int], int]],
+            until: float = float("inf")) -> List[Request]:
+        """arrivals: (time, prompt_tokens, output_len), any order.
+        Returns all finished requests across replicas."""
+        for t, prompt, out_len in sorted(arrivals, key=lambda a: a[0]):
+            if t > until:
+                break
+            for sim in self.sims:
+                sim.run_until(t)
+            i = self.router.select(len(prompt))
+            self.sims[i].inject_request(t, prompt, out_len)
+        for sim in self.sims:
+            sim.run(until)
+        return self.finished
+
+    @property
+    def finished(self) -> List[Request]:
+        out: List[Request] = []
+        for sim in self.sims:
+            out.extend(sim.metrics.finished)
+        return out
+
+    # ------------------------------------------------------------- aggregates
+    def ttft_quantile(self, q: float) -> float:
+        vals = [r.metrics.ttft() for r in self.finished
+                if r.metrics.ttft() is not None]
+        return float(np.quantile(vals, q)) if vals else 0.0
+
+    def mean_ttft(self) -> float:
+        vals = [r.metrics.ttft() for r in self.finished
+                if r.metrics.ttft() is not None]
+        return float(np.mean(vals)) if vals else 0.0
+
+    def throughput(self) -> float:
+        return float(sum(s.metrics.throughput() for s in self.sims))

@@ -2,15 +2,16 @@
 
 Reproduces the paper's evaluation methodology at cluster scale on a CPU-only
 box: the *real* `PipelineScheduler` (Token Throttling or Sarathi policy — the
-actual policy code, not a model of it) drives an event-driven pipeline whose
-per-stage latency comes from a roofline cost model calibrated with the v5e
-constants used in §Roofline.
+actual policy code, not a model of it) drives the shared `TickLoop`
+(runtime/core.py) over a `SimBackend` whose per-stage latency comes from a
+roofline cost model calibrated with the v5e constants used in §Roofline.
 
 Stage semantics match the SPMD tick: a micro-batch occupies one stage at a
 time; stage s starts batch b when (a) stage s-1 finished b and (b) stage s
 finished its previous batch.  Inter-batch imbalance therefore creates exactly
 the bubbles of paper Fig. 3, and Token Throttling's equalized token counts
-remove them.
+remove them.  The depth-S ring bounds in-flight micro-batches to the pipeline
+depth, exactly like the engine.
 
 Also models: driver host overhead (serialized for the vLLM-like runtime,
 overlapped for the gLLM runtime — paper §3.4's 17% input-prep cost), pod
@@ -22,7 +23,7 @@ from __future__ import annotations
 import heapq
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -35,6 +36,7 @@ from repro.core import (
     ThrottleConfig,
 )
 from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
+from repro.runtime.core import ExecResult, ExecutionBackend, TickLoop
 
 
 @dataclass
@@ -71,6 +73,14 @@ class CostModel:
         if tokens and self.comm_bytes_per_token:
             t_comm += self.comm_latency
         return max(t_comp, t_mem) + t_comm + self.fixed_us * 1e-6
+
+    def scaled(self, factor: float) -> "CostModel":
+        """A uniformly `factor`x slower copy (heterogeneous-replica modeling:
+        older silicon, thermal throttling, fewer chips per stage)."""
+        import dataclasses
+        return dataclasses.replace(
+            self, mfu=self.mfu / factor, hbm_eff=self.hbm_eff / factor,
+            fixed_us=self.fixed_us * factor)
 
 
 def cost_model_for(cfg, *, chips_per_stage: int = 1, pp: int = None
@@ -156,10 +166,101 @@ class SimMetrics:
         return ok / max(1, len(self.finished))
 
 
-class PipelineSimulator:
-    """Event-driven PP serving simulator around the real scheduler."""
+class SimBackend(ExecutionBackend):
+    """ExecutionBackend whose tick cost comes from the roofline model.
 
-    ARRIVAL, STAGE_DONE, DRIVER, FAIL, RECOVER = range(5)
+    Sampled tokens are placeholders (0): the simulator studies *scheduling*,
+    not model outputs.  The backend keeps a virtual clock; `execute` cascades
+    the entering micro-batch through the per-stage `stage_free_at` frontier
+    and reports the exiting batch's modeled completion time.
+    """
+
+    def __init__(
+        self,
+        pp: int,
+        cost: CostModel,
+        runtime: RuntimeModel = None,
+        *,
+        straggler_stage: Optional[int] = None,
+        straggler_factor: float = 1.0,
+        metrics: Optional[SimMetrics] = None,
+    ) -> None:
+        self.pp = pp
+        self.cost = cost
+        self.runtime = runtime or RuntimeModel.gllm()
+        self.straggler = (straggler_stage, straggler_factor)
+        self.stage_free_at = [0.0] * pp
+        self.time = 0.0
+        self.metrics = metrics or SimMetrics()
+        self._completion_time: Dict[int, float] = {}
+
+    # --------------------------------------------------------------- protocol
+    @property
+    def depth(self) -> int:
+        return self.pp
+
+    def clock(self) -> float:
+        return self.time
+
+    def execute(self, ring: Sequence[Tuple[Optional[int], Any]],
+                exiting_id: Optional[int], now: float) -> ExecResult:
+        self.time = max(self.time, now)
+        entering_id = ring[0][0]
+        if entering_id is not None:
+            batch = self.scheduler.get_batch(entering_id)
+            t = now + self.runtime.overhead_serial
+            for s in range(self.pp):
+                start = max(t, self.stage_free_at[s])
+                dt = self._batch_time(s, batch)
+                if s == self.pp - 1:
+                    if self.stage_free_at[s] < start and \
+                            self.metrics.sim_time > 0:
+                        self.metrics.bubble_time += \
+                            start - self.stage_free_at[s]
+                    self.metrics.busy_time += dt
+                self.stage_free_at[s] = start + dt
+                t = start + dt
+            self._completion_time[entering_id] = t
+        self.metrics.sim_time = max(self.metrics.sim_time, self.time)
+
+        if exiting_id is None:
+            return ExecResult([], now)
+        done_at = self._completion_time.pop(exiting_id, now)
+        exiting = self.scheduler.get_batch(exiting_id)
+        n = sum(1 for s in exiting.seqs if s.produces_token) \
+            if exiting is not None else 0
+        self.metrics.total_output_tokens += n
+        # the driver cannot act on this completion before it happened
+        self.time = max(self.time, done_at)
+        self.metrics.sim_time = max(self.metrics.sim_time, self.time)
+        return ExecResult([0] * n, done_at)
+
+    def reset(self, now: float) -> None:
+        self._completion_time.clear()
+        self.stage_free_at = [now] * self.pp
+        self.time = max(self.time, now)
+        self.metrics.sim_time = max(self.metrics.sim_time, self.time)
+
+    # -------------------------------------------------------------- internals
+    def _batch_time(self, stage: int, batch: ScheduledBatch) -> float:
+        p_ctx = max((s.start_pos + s.num_tokens for s in batch.prefill),
+                    default=0)
+        d_ctx = int(np.mean([s.start_pos for s in batch.decode])) \
+            if batch.decode else 0
+        dt = self.cost.stage_time(batch.num_prefill_tokens,
+                                  batch.num_decode_tokens, p_ctx, d_ctx)
+        st, fac = self.straggler
+        if st is not None and stage == st:
+            dt *= fac
+        return dt
+
+
+class PipelineSimulator:
+    """PP serving simulator: the shared TickLoop over a `SimBackend`.
+
+    Arrival/failure injection and virtual-time advancement live here; the
+    schedule→execute→complete cycle is the same code the real engine runs.
+    """
 
     def __init__(
         self,
@@ -173,123 +274,97 @@ class PipelineSimulator:
     ) -> None:
         self.sched = scheduler
         self.pp = pp
-        self.cost = cost
-        self.runtime = runtime
-        self.straggler = (straggler_stage, straggler_factor)
-        self._events: List[Tuple[float, int, int, object]] = []
-        self._eid = itertools.count()
-        self.stage_free_at = [0.0] * pp
-        self.stage_queue: List[List[Tuple[ScheduledBatch, float]]] = \
-            [[] for _ in range(pp)]
-        self.metrics = SimMetrics()
-        self._driver_pending = False
-        self._failed_until = -1.0
+        self.backend = SimBackend(pp, cost, runtime,
+                                  straggler_stage=straggler_stage,
+                                  straggler_factor=straggler_factor)
+        self.loop = TickLoop(scheduler, self.backend)
+        self.metrics = self.backend.metrics
+        self._arrivals: List[Tuple[float, int, List[int], int]] = []
+        self._failures: List[Tuple[float, float]] = []
+        self._seq = itertools.count(1)
 
-    # ------------------------------------------------------------------ events
-    def _push(self, t: float, kind: int, payload=None):
-        heapq.heappush(self._events, (t, kind, next(self._eid), payload))
+    @property
+    def scheduler(self) -> PipelineScheduler:   # replica-router signal surface
+        return self.sched
 
+    # ------------------------------------------------------------------ intake
     def add_workload(self, arrivals: List[Tuple[float, List[int], int]]):
         """arrivals: (time, prompt_tokens, output_len)."""
         for t, prompt, out_len in arrivals:
-            self._push(t, self.ARRIVAL, (prompt, out_len))
+            self.inject_request(t, prompt, out_len)
+
+    def inject_request(self, t: float, prompt: List[int], out_len: int
+                       ) -> None:
+        heapq.heappush(self._arrivals, (t, next(self._seq), prompt, out_len))
 
     def inject_failure(self, at: float, downtime: float):
-        self._push(at, self.FAIL, downtime)
+        heapq.heappush(self._failures, (at, downtime))
 
     # ------------------------------------------------------------------- run
     def run(self, until: float = float("inf"), max_events: int = 5_000_000
             ) -> SimMetrics:
-        self._push(0.0, self.DRIVER)
-        n = 0
-        last_stage_busy_since = None
-        while self._events and n < max_events:
-            t, kind, _, payload = heapq.heappop(self._events)
-            if t > until and kind == self.ARRIVAL:
-                continue
-            n += 1
-            self.metrics.sim_time = max(self.metrics.sim_time, t)
-            if kind == self.ARRIVAL:
-                prompt, out_len = payload
-                rid = f"r{n}"
-                req = Request(rid, prompt,
-                              SamplingParams(max_new_tokens=out_len))
-                req.metrics.arrival_time = t
-                self.metrics.total_input_tokens += len(prompt)
-                self.sched.add_request(req)
-                self._kick_driver(t)
-            elif kind == self.DRIVER:
-                self._driver_pending = False
-                self._try_schedule(t)
-            elif kind == self.STAGE_DONE:
-                stage, batch = payload
-                self._stage_done(t, stage, batch)
-            elif kind == self.FAIL:
-                self._failed_until = t + payload
-                self._push(self._failed_until, self.RECOVER)
-                # in-flight micro-batches lost: abort + recompute on recovery
-                for bid in list(self.sched._batches):
-                    self.sched.abort_batch(bid)
-                self._events = [e for e in self._events
-                                if e[1] != self.STAGE_DONE]
-                heapq.heapify(self._events)
-                self.stage_free_at = [self._failed_until] * self.pp
-            elif kind == self.RECOVER:
-                self._kick_driver(t)
+        for _ in range(max_events):
+            if not self._advance(until):
+                break
         return self.metrics
 
-    # -------------------------------------------------------------- pipeline
-    def _kick_driver(self, t: float):
-        if not self._driver_pending:
-            self._driver_pending = True
-            self._push(max(t, self.stage_free_at[0]), self.DRIVER)
+    def run_until(self, t: float, max_events: int = 5_000_000) -> SimMetrics:
+        """Advance virtual time until the next tick would start after `t`
+        (or the replica goes idle).  Used by the multi-replica cluster driver
+        to keep replicas causally consistent at each routing decision."""
+        for _ in range(max_events):
+            if self._next_tick_time() > t or not self._advance(float("inf")):
+                break
+        return self.metrics
 
-    def _try_schedule(self, t: float):
-        if t < self._failed_until:
-            return
-        if self.stage_free_at[0] > t:
-            self._kick_driver(t)
-            return
-        batch = self.sched.schedule(t)
-        if batch.is_empty:
-            # nothing schedulable right now; wake on the next arrival or
-            # micro-batch completion (both kick the driver)
-            self.sched.complete(batch.batch_id, [], t)
-            return
-        t0 = t + self.runtime.overhead_serial
-        self._start_stage(t0, 0, batch)
-        self._kick_driver(t0)
+    # -------------------------------------------------------------- internals
+    def _next_tick_time(self) -> float:
+        return max(self.backend.time, self.backend.stage_free_at[0])
 
-    def _batch_time(self, stage: int, batch: ScheduledBatch) -> float:
-        p_ctx = max((s.start_pos + s.num_tokens for s in batch.prefill),
-                    default=0)
-        d_ctx = int(np.mean([s.start_pos for s in batch.decode])) \
-            if batch.decode else 0
-        dt = self.cost.stage_time(batch.num_prefill_tokens,
-                                  batch.num_decode_tokens, p_ctx, d_ctx)
-        st, fac = self.straggler
-        if st is not None and stage == st:
-            dt *= fac
-        return dt
-
-    def _start_stage(self, t: float, stage: int, batch: ScheduledBatch):
-        start = max(t, self.stage_free_at[stage])
-        dt = self._batch_time(stage, batch)
-        if stage == self.pp - 1:
-            if self.stage_free_at[stage] < start and self.metrics.sim_time > 0:
-                self.metrics.bubble_time += start - self.stage_free_at[stage]
-            self.metrics.busy_time += dt
-        self.stage_free_at[stage] = start + dt
-        self._push(start + dt, self.STAGE_DONE, (stage, batch))
-
-    def _stage_done(self, t: float, stage: int, batch: ScheduledBatch):
-        if stage + 1 < self.pp:
-            self._start_stage(t, stage + 1, batch)
-        else:
-            toks = [0] * sum(1 for s in batch.seqs if s.produces_token)
-            finished = self.sched.complete(batch.batch_id, toks, t)
-            self.metrics.total_output_tokens += len(toks)
+    def _advance(self, until: float) -> bool:
+        """One driver action: apply a due failure, or run one tick, or jump
+        virtual time to the next arrival.  Returns False when fully idle."""
+        t = self._next_tick_time()
+        if self._failures and self._failures[0][0] <= t:
+            at, downtime = heapq.heappop(self._failures)
+            self._apply_failure(at, downtime)
+            return True
+        self._admit_arrivals(t, until)
+        if self.sched.has_work or self.loop.busy:
+            was_busy = self.loop.busy
+            finished = self.loop.step(t)
             self.metrics.finished.extend(finished)
-            self._kick_driver(t)   # completions free in-flight requests
-        if stage == 0:
-            self._kick_driver(t)
+            if self.loop.last_tick_empty and not was_busy:
+                # an idle pipeline scheduled nothing (e.g. admission gated on
+                # the KV threshold): only an arrival can unblock us
+                return self._jump_to_next_arrival(until)
+            return True
+        return self._jump_to_next_arrival(until)
+
+    def _admit_arrivals(self, t: float, until: float) -> None:
+        while self._arrivals and self._arrivals[0][0] <= t:
+            at, _, prompt, out_len = heapq.heappop(self._arrivals)
+            if at > until:
+                continue            # past the measurement horizon: dropped
+            req = Request(f"r{next(self._seq)}", prompt,
+                          SamplingParams(max_new_tokens=out_len))
+            req.metrics.arrival_time = at
+            self.metrics.total_input_tokens += len(prompt)
+            self.metrics.sim_time = max(self.metrics.sim_time, at)
+            self.sched.add_request(req)
+
+    def _jump_to_next_arrival(self, until: float) -> bool:
+        while self._arrivals:
+            at = self._arrivals[0][0]
+            if at > until:
+                heapq.heappop(self._arrivals)
+                continue
+            self.backend.time = max(self.backend.time, at)
+            self._admit_arrivals(self.backend.time, until)
+            return True
+        return False
+
+    def _apply_failure(self, at: float, downtime: float) -> None:
+        # in-flight micro-batches lost: abort + recompute on recovery
+        self.loop.abort_inflight()
+        self.backend.reset(at + downtime)

@@ -1,0 +1,226 @@
+"""Shared runtime core: TickLoop/ExecutionBackend semantics, and the
+ReplicaRouter's globally-balanced multi-replica routing (DESIGN.md §1)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    PagedKVManager,
+    PipelineScheduler,
+    PrefillPolicy,
+    Request,
+    SamplingParams,
+    ThrottleConfig,
+)
+from repro.data.workload import SHAREGPT, sample_requests
+from repro.runtime.core import ExecResult, ExecutionBackend, TickLoop
+from repro.runtime.router import (
+    BalanceWeights,
+    ReplicaRouter,
+    ReplicaSnapshot,
+    RoutingPolicy,
+    SimCluster,
+    balance_score,
+)
+from repro.runtime.simulator import (
+    PipelineSimulator,
+    RuntimeModel,
+    cost_model_for,
+)
+
+CFG = get_config("qwen2.5-14b")
+
+
+def make_sched(pp=3, pages=4096, policy=PrefillPolicy.GLLM):
+    th = ThrottleConfig(pipeline_depth=pp, policy=policy)
+    kv = PagedKVManager(num_pages=pages, page_size=16)
+    return PipelineScheduler(th, kv, max_model_len=pages * 16)
+
+
+class RecordingBackend(ExecutionBackend):
+    """Toy backend: constant token 9, records the ring at each tick."""
+
+    def __init__(self, pp):
+        self.pp = pp
+        self.rings = []
+        self.finished_reqs = []
+
+    @property
+    def depth(self):
+        return self.pp
+
+    def execute(self, ring, exiting_id, now):
+        self.rings.append([bid for bid, _ in ring])
+        if exiting_id is None:
+            return ExecResult([], now)
+        batch = self.scheduler.get_batch(exiting_id)
+        n = sum(1 for s in batch.seqs if s.produces_token)
+        return ExecResult([9] * n, now)
+
+    def finish_request(self, req):
+        self.finished_reqs.append(req.request_id)
+
+
+class TestTickLoop:
+    def test_ring_depth_and_retirement_delay(self):
+        """A batch scheduled at tick t exits at tick t+depth-1: it spends one
+        tick per pipeline stage, finishing its last stage on the final one."""
+        pp = 3
+        sched = make_sched(pp=pp)
+        be = RecordingBackend(pp)
+        loop = TickLoop(sched, be)
+        r = Request("a", [1] * 4, SamplingParams(max_new_tokens=1))
+        sched.add_request(r)
+        assert not loop.busy
+        loop.step(0.0)                       # schedules the prefill
+        first_id = be.rings[-1][0]
+        assert first_id is not None and loop.busy
+        for k in range(pp - 2):              # mid-pipeline, bubbles behind it
+            loop.step(float(k + 1))
+            assert not r.is_finished
+        finished = loop.step(float(pp - 1))  # last stage: exits the ring
+        assert r.is_finished and finished == [r]
+        assert not loop.busy
+        assert loop.finished == [r]
+        assert be.finished_reqs == ["a"]
+        assert r.output_token_ids == [9]
+
+    def test_depth_one_retires_same_tick(self):
+        sched = make_sched(pp=1)
+        be = RecordingBackend(1)
+        loop = TickLoop(sched, be)
+        r = Request("a", [1] * 4, SamplingParams(max_new_tokens=1))
+        sched.add_request(r)
+        assert loop.step(0.0) == [r]
+        assert r.is_finished
+
+    def test_streaming_hook_and_drain(self):
+        pp = 2
+        sched = make_sched(pp=pp)
+        be = RecordingBackend(pp)
+        streamed = []
+        loop = TickLoop(sched, be,
+                        on_token=lambda req, tok: streamed.append(
+                            (req.request_id, tok)))
+        reqs = [Request(f"r{i}", [1] * 5, SamplingParams(max_new_tokens=3))
+                for i in range(3)]
+        for r in reqs:
+            sched.add_request(r)
+        clock = iter(range(10000))
+        loop.drain(lambda: float(next(clock)))
+        assert all(r.is_finished for r in reqs)
+        assert not loop.busy and not sched.has_work
+        assert len(streamed) == sum(r.num_output_tokens for r in reqs)
+        assert all(tok == 9 for _, tok in streamed)
+
+    def test_abort_inflight_requeues_and_clears_ring(self):
+        pp = 4
+        sched = make_sched(pp=pp)
+        be = RecordingBackend(pp)
+        loop = TickLoop(sched, be)
+        r = Request("a", [1] * 40, SamplingParams(max_new_tokens=4))
+        sched.add_request(r)
+        loop.step(0.0)
+        assert loop.busy
+        affected = loop.abort_inflight()
+        assert r in affected and not loop.busy
+        assert sched.active_batch_ids() == []
+        assert r in sched.waiting
+        loop.drain(lambda: 1.0)
+        assert r.is_finished
+
+
+class TestSimulatorOnCore:
+    """The simulator runs the same TickLoop as the engine."""
+
+    def test_sim_is_a_tickloop(self):
+        sched = make_sched(pp=4)
+        sim = PipelineSimulator(sched, 4, cost_model_for(CFG, pp=4))
+        assert isinstance(sim.loop, TickLoop)
+        assert sim.backend.depth == 4
+        sim.add_workload(sample_requests(SHAREGPT, 40, 20.0, seed=0))
+        m = sim.run()
+        assert len(m.finished) == 40
+        assert m.ttft() > 0 and m.throughput() > 0
+
+    def test_run_until_is_causal(self):
+        """run_until(t) never starts a tick after t."""
+        sched = make_sched(pp=4)
+        sim = PipelineSimulator(sched, 4, cost_model_for(CFG, pp=4))
+        sim.add_workload(sample_requests(SHAREGPT, 60, 30.0, seed=1))
+        sim.run_until(0.5)
+        assert sim._next_tick_time() > 0.5 or not (
+            sim.sched.has_work or sim.loop.busy)
+        done_early = len(sim.metrics.finished)
+        sim.run()
+        assert len(sim.metrics.finished) == 60
+        assert len(sim.metrics.finished) >= done_early
+
+
+def _hetero_cluster(policy, *, slow_factor=2.5, pp=4, pages=4096,
+                    capacities=None):
+    """Two replicas, one `slow_factor`x slower.  Without `capacities` the
+    router must discover the imbalance from scheduler backlog alone; with
+    them it also normalizes load by known relative speed."""
+    cost = cost_model_for(CFG, pp=pp)
+    sims = [
+        PipelineSimulator(make_sched(pp=pp, pages=pages), pp, cost),
+        PipelineSimulator(make_sched(pp=pp, pages=pages), pp,
+                          cost.scaled(slow_factor)),
+    ]
+    router = ReplicaRouter(sims, policy=policy, capacities=capacities)
+    return SimCluster(sims, router)
+
+
+class TestReplicaRouter:
+    def test_round_robin_alternates(self):
+        sims = [PipelineSimulator(make_sched(), 3, cost_model_for(CFG, pp=3))
+                for _ in range(3)]
+        router = ReplicaRouter(sims, policy="rr")
+        assert [router.select(10) for _ in range(6)] == [0, 1, 2, 0, 1, 2]
+        assert router.routed_counts == [2, 2, 2]
+
+    def test_balance_score_prefers_idle_and_kv_free(self):
+        idle = ReplicaSnapshot(0, 0, 1.0)
+        busy = ReplicaSnapshot(4000, 0, 1.0)
+        starved = ReplicaSnapshot(0, 0, 0.05)
+        w = BalanceWeights()
+        assert balance_score(idle, 100, w) < balance_score(busy, 100, w)
+        assert balance_score(idle, 100, w) < balance_score(starved, 100, w)
+        # decode population counts as pending work
+        decoding = ReplicaSnapshot(0, 64, 1.0)
+        assert balance_score(idle, 100, w) < balance_score(decoding, 100, w)
+
+    def test_balanced_routing_sheds_load_off_slow_replica(self):
+        cluster = _hetero_cluster(RoutingPolicy.BALANCED)
+        arrivals = sample_requests(SHAREGPT, 150, 30.0, seed=0)
+        cluster.run(arrivals)
+        fast, slow = cluster.router.routed_counts
+        assert fast + slow == 150
+        assert fast > slow          # backlog signal diverted load
+
+    def test_global_balance_beats_round_robin_on_tail_ttft(self):
+        """ISSUE acceptance: skewed (heavy-tailed lognormal, Poisson-bursty)
+        arrivals onto heterogeneous replicas at a rate that saturates the
+        slow replica under round-robin — balance-score routing beats
+        round-robin on tail TTFT (and mean TTFT, and throughput)."""
+        results = {}
+        for policy in ("rr", "balanced"):
+            cluster = _hetero_cluster(policy, capacities=[1.0, 1 / 2.5])
+            arrivals = sample_requests(SHAREGPT, 150, 60.0, seed=0)
+            finished = cluster.run(arrivals)
+            assert len(finished) == 150
+            results[policy] = cluster
+        assert results["balanced"].ttft_quantile(0.95) < \
+            results["rr"].ttft_quantile(0.95)
+        assert results["balanced"].mean_ttft() < results["rr"].mean_ttft()
+        assert results["balanced"].throughput() > results["rr"].throughput()
+
+    def test_single_replica_router_is_transparent(self):
+        sim = PipelineSimulator(make_sched(), 3, cost_model_for(CFG, pp=3))
+        router = ReplicaRouter([sim])
+        assert router.scheduler is sim.sched
+        assert router.select(10) == 0

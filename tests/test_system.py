@@ -19,14 +19,14 @@ from repro.runtime.engine import PipelineEngine
 from repro.runtime.frontend import AsyncFrontend
 
 
-def make_engine(arch="qwen1.5-0.5b", **th_kw):
+def make_engine(arch="qwen1.5-0.5b", dims_kw=None, **th_kw):
     cfg = make_reduced(get_config(arch)).with_plan(pp=1, tp=1,
                                                    ep_over_data=False)
     cfg = dataclasses.replace(cfg, dtype="float32")
     mesh = jax.make_mesh((1, 1, 1), ("data", "stage", "tensor"),
                          axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    dims = ServeDims(Sp=1, C=16, Sd=8, pages=256, page=8, Bp=32, Bd=32,
-                     slots=16)
+    dims = ServeDims(**{**dict(Sp=1, C=16, Sd=8, pages=256, page=8, Bp=32,
+                               Bd=32, slots=16), **(dims_kw or {})})
     with jax.set_mesh(mesh):
         params = tfm.init_params(cfg, jax.random.key(0), dtype=jnp.float32)
         pspecs = tfm.param_pspecs(cfg)
@@ -106,6 +106,45 @@ def test_throttling_reduces_padding_variance_vs_sarathi():
         busy = [c for c in counts if c > 0]
         stats[pol] = np.std(busy) if busy else 0.0
     assert stats[PrefillPolicy.GLLM] <= stats[PrefillPolicy.SARATHI] + 1e-9
+
+
+def test_state_slots_released_on_preemption():
+    """Regression: state slots are tied to residency.  A preempted request
+    (KV pressure, recompute recovery) must release its slot while it waits —
+    otherwise waiting requests pin slots and the allocator exhausts."""
+    cfg, eng = make_engine(dims_kw=dict(pages=10))
+    rng = np.random.default_rng(3)
+    reqs = [eng.add_request(list(rng.integers(0, cfg.vocab_size, 16)),
+                            SamplingParams(max_new_tokens=18))
+            for _ in range(3)]
+    steps = 0
+    while (eng.has_work or eng.busy) and steps < 900:
+        eng.step()
+        steps += 1
+        waiting = {r.request_id for r in eng.scheduler.waiting}
+        leaked = set(eng.slots.owner) & waiting
+        assert not leaked, f"preempted requests holding slots: {leaked}"
+    assert eng.scheduler.stats.preemptions >= 1, "test needs KV pressure"
+    assert all(r.is_finished for r in reqs)
+    # every slot back in the pool after the drain
+    assert eng.slots.owner == {}
+    assert sorted(eng.slots.free) == list(range(eng.dims.slots))
+
+
+def test_state_slots_released_on_abort_batch():
+    """Regression: abort_batch (worker-death recovery) releases the slots of
+    the affected in-flight requests."""
+    cfg, eng = make_engine()
+    r = eng.add_request([1] * 30, SamplingParams(max_new_tokens=4))
+    batch = eng.scheduler.schedule(0.0)
+    eng.backend.prepare(batch)            # tick metadata assigns the slot
+    assert r.request_id in eng.slots.owner
+    eng.scheduler.abort_batch(batch.batch_id)
+    assert r.request_id not in eng.slots.owner
+    assert r in eng.scheduler.waiting
+    eng.drain(max_ticks=300)              # recompute completes normally
+    assert r.is_finished
+    assert eng.slots.owner == {}
 
 
 def test_temperature_sampling_changes_outputs():

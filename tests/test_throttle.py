@@ -3,8 +3,13 @@
 import math
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:      # pragma: no cover - exercised on minimal installs
+    HAS_HYPOTHESIS = False
 
 from repro.core.throttle import (
     PrefillPolicy,
@@ -66,38 +71,69 @@ class TestEquations:
             prefill_budget(2000, 0.5, cfg)
 
 
-class TestProperties:
-    @given(wp=st.integers(0, 10**7), kv=st.floats(0.0, 1.0),
-           policy=st.sampled_from([PrefillPolicy.GLLM, PrefillPolicy.NO_WT,
-                                   PrefillPolicy.NO_UT]))
-    @settings(max_examples=300, deadline=None)
-    def test_budget_bounds(self, wp, kv, policy):
-        cfg = ThrottleConfig(policy=policy)
-        b = prefill_budget(wp, kv, cfg)
-        assert 0 <= b <= cfg.max_prefill_tokens
-        assert b <= max(wp, 0)                       # never over-schedule
-        if wp == 0:
-            assert b == 0
-        if policy is not PrefillPolicy.NO_UT and kv <= cfg.kv_threshold:
-            assert b == 0                            # threshold safeguard
+if HAS_HYPOTHESIS:
+    class TestProperties:
+        @given(wp=st.integers(0, 10**7), kv=st.floats(0.0, 1.0),
+               policy=st.sampled_from([PrefillPolicy.GLLM,
+                                       PrefillPolicy.NO_WT,
+                                       PrefillPolicy.NO_UT]))
+        @settings(max_examples=300, deadline=None)
+        def test_budget_bounds(self, wp, kv, policy):
+            cfg = ThrottleConfig(policy=policy)
+            b = prefill_budget(wp, kv, cfg)
+            assert 0 <= b <= cfg.max_prefill_tokens
+            assert b <= max(wp, 0)                   # never over-schedule
+            if wp == 0:
+                assert b == 0
+            if policy is not PrefillPolicy.NO_UT and kv <= cfg.kv_threshold:
+                assert b == 0                        # threshold safeguard
 
-    @given(wp=st.integers(1, 10**6), kv=st.floats(0.06, 1.0))
-    @settings(max_examples=200, deadline=None)
-    def test_budget_monotone_in_kv_free(self, wp, kv):
+        @given(wp=st.integers(1, 10**6), kv=st.floats(0.06, 1.0))
+        @settings(max_examples=200, deadline=None)
+        def test_budget_monotone_in_kv_free(self, wp, kv):
+            cfg = ThrottleConfig()
+            lo = prefill_budget(wp, kv * 0.9, cfg)
+            hi = prefill_budget(wp, kv, cfg)
+            assert hi >= lo                          # more free KV, >= budget
+
+        @given(rd=st.integers(0, 10**6), pp=st.integers(1, 64))
+        @settings(max_examples=200, deadline=None)
+        def test_decode_budget_covers_pool(self, rd, pp):
+            cfg = ThrottleConfig(pipeline_depth=pp)
+            b = decode_budget(rd, cfg)
+            # pp micro-batches at budget b must cover the decode pool exactly
+            assert b * pp >= rd
+            assert rd == 0 or b * pp < rd + pp       # and without waste > pp
+else:
+    # fallback spot-checks without hypothesis (requirements-dev.txt)
+    @pytest.mark.parametrize("wp,kv", [(0, 0.5), (1000, 0.0), (10**6, 1.0),
+                                       (5000, 0.3)])
+    def test_budget_bounds(wp, kv):
+        for policy in (PrefillPolicy.GLLM, PrefillPolicy.NO_WT,
+                       PrefillPolicy.NO_UT):
+            cfg = ThrottleConfig(policy=policy)
+            b = prefill_budget(wp, kv, cfg)
+            assert 0 <= b <= cfg.max_prefill_tokens
+            assert b <= max(wp, 0)
+            if wp == 0:
+                assert b == 0
+            if policy is not PrefillPolicy.NO_UT and kv <= cfg.kv_threshold:
+                assert b == 0
+
+    @pytest.mark.parametrize("wp,kv", [(100, 0.2), (10**5, 0.8), (777, 0.06)])
+    def test_budget_monotone_in_kv_free(wp, kv):
         cfg = ThrottleConfig()
-        lo = prefill_budget(wp, kv * 0.9, cfg)
-        hi = prefill_budget(wp, kv, cfg)
-        assert hi >= lo                              # more free KV, >= budget
+        assert prefill_budget(wp, kv, cfg) >= prefill_budget(wp, kv * 0.9, cfg)
 
-    @given(rd=st.integers(0, 10**6), pp=st.integers(1, 64))
-    @settings(max_examples=200, deadline=None)
-    def test_decode_budget_covers_pool(self, rd, pp):
+    @pytest.mark.parametrize("rd,pp", [(0, 4), (1, 8), (129, 4), (10**5, 64)])
+    def test_decode_budget_covers_pool(rd, pp):
         cfg = ThrottleConfig(pipeline_depth=pp)
         b = decode_budget(rd, cfg)
-        # pp micro-batches at budget b must cover the decode pool exactly
         assert b * pp >= rd
-        assert rd == 0 or b * pp < rd + pp           # and without waste > pp
+        assert rd == 0 or b * pp < rd + pp
 
+
+class TestConfigValidation:
     def test_invalid_configs_rejected(self):
         with pytest.raises(ValueError):
             ThrottleConfig(kv_threshold=1.5)
