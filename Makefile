@@ -1,16 +1,21 @@
 # Developer / CI entry points.
 #
-#   make dev-deps   install test-only dependencies (pytest, hypothesis)
-#   make test       tier-1 suite (works without dev-deps; property tests
-#                   skip themselves when hypothesis is missing)
-#   make ci         dev-deps + tier-1
-#   make bench      fast benchmark sweep (CSV rows on stdout)
+#   make dev-deps     install test-only dependencies (pytest, hypothesis)
+#   make test         tier-1 suite (works without dev-deps; property tests
+#                     skip themselves when hypothesis is missing)
+#   make trace-check  strict-replay the checked-in golden traces (jax-free):
+#                     any batching change in scheduler/throttle fails here
+#   make ci           dev-deps + tier-1 + golden traces
+#   make bench        fast benchmark sweep (CSV rows on stdout)
 
 PY ?= python
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
-.PHONY: dev-deps test ci bench
+TRACE_FIXTURES := tests/fixtures/traces/prefill_heavy.trace.jsonl \
+                  tests/fixtures/traces/decode_saturated.trace.jsonl
+
+.PHONY: dev-deps test trace-check ci bench
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -18,7 +23,10 @@ dev-deps:
 test:
 	$(PY) -m pytest -x -q
 
-ci: dev-deps test
+trace-check:
+	$(PY) -m repro.runtime.trace check $(TRACE_FIXTURES)
+
+ci: dev-deps test trace-check
 
 bench:
 	$(PY) -m benchmarks.run --fast

@@ -1,13 +1,31 @@
 """Multi-replica routing: round-robin vs global-balance (DESIGN.md §1.3).
 
-A data-parallel cluster of PP replicas — one of them slower (older silicon /
-thermal throttling, modeled by a uniformly scaled cost model) — serves
+A data-parallel cluster of PP replicas — one of them handicapped — serves
 skewed ShareGPT-style arrivals on the `SimBackend`.  Round-robin splits
-requests evenly and saturates the slow replica; balance-score routing reads
+requests evenly and saturates the weak replica; balance-score routing reads
 each replica's global state (#WP, #RD, KV free rate — the same signals
 Token Throttling uses inside a replica) and sheds load before queues build.
 
-Metrics per (rate, policy): throughput, mean/p95/p99 TTFT.
+Heterogeneity is modeled four ways (the ROADMAP's asymmetric cases):
+
+  slow       uniformly scaled cost model (older silicon / thermal throttle)
+  straggler  ONE pipeline stage `slow_factor`x slower (bad chip, hot spot):
+             the whole ring drains at the straggler's rate (paper Fig. 3's
+             bubbles made permanent)
+  kv         smaller KV pool on one replica: the UT term throttles admission
+             earlier and preemption churn starts sooner
+  depth      deeper pipeline on one replica (same silicon, pp doubled):
+             per-stage fixed overheads double and eq. 4 spreads decode over
+             twice the micro-batches
+
+For `kv` and `depth` the router discovers the imbalance from scheduler
+signals alone (capacities stay 1.0: both replicas have the same silicon).
+For `slow` and `straggler` the per-case defaults also pass the known
+relative speed as a capacity hint — admission-time polling alone reacts a
+queue-buildup too late to beat round-robin on tail TTFT at moderate load
+(the ROADMAP's periodic-rebalance item is the discovery-only fix).
+
+Metrics per (hetero, rate, policy): throughput, mean/p95/p99 TTFT.
 """
 
 from __future__ import annotations
@@ -21,6 +39,19 @@ from repro.data.workload import get_workload, sample_requests
 from repro.runtime.router import BalanceWeights, ReplicaRouter, SimCluster
 from repro.runtime.simulator import PipelineSimulator, cost_model_for
 
+HETERO_CASES = ("slow", "straggler", "kv", "depth")
+
+# Per-case severity + capacity hints (see module docstring).  A straggler
+# stage gates the whole ring, so its packed-pipeline capacity is
+# 1/slow_factor; with decode bubbles the effective ratio sits nearer
+# sum-of-stages, hence the softer hint.
+CASE_DEFAULTS = {
+    "slow": dict(slow_factor=2.5, capacities=[1.0, 0.4]),
+    "straggler": dict(slow_factor=4.0, capacities=[1.0, 0.5]),
+    "kv": dict(slow_factor=2.5, capacities=None),
+    "depth": dict(slow_factor=2.5, capacities=None),
+}
+
 
 def _make_sched(pp: int, pages: int) -> PipelineScheduler:
     th = ThrottleConfig(pipeline_depth=pp, policy=PrefillPolicy.GLLM)
@@ -28,51 +59,86 @@ def _make_sched(pp: int, pages: int) -> PipelineScheduler:
     return PipelineScheduler(th, kv, max_model_len=pages * 16)
 
 
+def make_hetero_pair(hetero: str, *, cfg, pp: int = 4, pages: int = 8192,
+                     slow_factor: float = 2.5):
+    """(fast replica, handicapped replica) for one heterogeneity model."""
+    cost = cost_model_for(cfg, pp=pp)
+    fast = PipelineSimulator(_make_sched(pp, pages), pp, cost)
+    if hetero == "slow":
+        weak = PipelineSimulator(_make_sched(pp, pages), pp,
+                                 cost.scaled(slow_factor))
+    elif hetero == "straggler":
+        weak = PipelineSimulator(_make_sched(pp, pages), pp, cost,
+                                 straggler_stage=pp // 2,
+                                 straggler_factor=slow_factor)
+    elif hetero == "kv":
+        # pool must still admit the largest sampled request (pressure, not
+        # rejection), yet stay strictly smaller than the fast replica's —
+        # the floor must never erase or invert the handicap
+        small = max(pages // 8, 1024)
+        if small >= pages:
+            raise ValueError(
+                f"kv heterogeneity needs pages > {small} so the weak "
+                f"replica's pool stays strictly smaller (got pages={pages})")
+        weak = PipelineSimulator(_make_sched(pp, small), pp, cost)
+    elif hetero == "depth":
+        deep = 2 * pp
+        weak = PipelineSimulator(_make_sched(deep, pages), deep,
+                                 cost_model_for(cfg, pp=deep))
+    else:
+        raise ValueError(f"unknown heterogeneity case {hetero!r}")
+    return [fast, weak]
+
+
 def run_cluster(policy: str, rate: float, *, arch: str = "qwen2.5-14b",
                 workload: str = "sharegpt", num_requests: int = 200,
-                pp: int = 4, pages: int = 8192, slow_factor: float = 2.5,
-                seed: int = 0) -> SimCluster:
+                pp: int = 4, pages: int = 8192, slow_factor: float = None,
+                hetero: str = "slow", capacities: object = "auto",
+                seed: int = 0, trace_dir: str = None) -> SimCluster:
+    defaults = CASE_DEFAULTS[hetero]
+    if slow_factor is None:
+        slow_factor = defaults["slow_factor"]
+    if capacities == "auto":
+        capacities = defaults["capacities"]
     cfg = get_config(arch)
-    cost = cost_model_for(cfg, pp=pp)
-    sims = [
-        PipelineSimulator(_make_sched(pp, pages), pp, cost),
-        PipelineSimulator(_make_sched(pp, pages), pp,
-                          cost.scaled(slow_factor)),
-    ]
-    router = ReplicaRouter(sims, policy=policy,
-                           weights=BalanceWeights(),
-                           capacities=[1.0, 1.0 / slow_factor])
-    cluster = SimCluster(sims, router)
+    sims = make_hetero_pair(hetero, cfg=cfg, pp=pp, pages=pages,
+                            slow_factor=slow_factor)
+    router = ReplicaRouter(sims, policy=policy, weights=BalanceWeights(),
+                           capacities=capacities)
+    cluster = SimCluster(sims, router, trace_dir=trace_dir)
     arrivals = sample_requests(get_workload(workload), num_requests, rate,
                                seed=seed)
     cluster.run(arrivals)
     return cluster
 
 
-def run(verbose: bool = True, rates=(30.0, 60.0, 90.0), **kw):
+def run(verbose: bool = True, rates=(30.0, 60.0, 90.0),
+        hetero_cases=HETERO_CASES, **kw):
     rows = []
-    for rate in rates:
-        tail95 = {}
-        for policy in ("rr", "balanced"):
-            c = run_cluster(policy, rate, **kw)
-            tail95[policy] = c.ttft_quantile(0.95)
+    for hetero in hetero_cases:
+        tag = "" if hetero == "slow" else f"{hetero}_"   # legacy row names
+        for rate in rates:
+            tail95 = {}
+            for policy in ("rr", "balanced"):
+                c = run_cluster(policy, rate, hetero=hetero, **kw)
+                tail95[policy] = c.ttft_quantile(0.95)
+                rows.append(csv_row(
+                    f"fig_router_{tag}{policy}_rate{rate:g}_thpt_tok_s",
+                    c.throughput(),
+                    f"routed={'/'.join(map(str, c.router.routed_counts))}"))
+                rows.append(csv_row(
+                    f"fig_router_{tag}{policy}_rate{rate:g}_ttft_mean_s",
+                    c.mean_ttft()))
+                rows.append(csv_row(
+                    f"fig_router_{tag}{policy}_rate{rate:g}_ttft_p95_s",
+                    c.ttft_quantile(0.95)))
+                rows.append(csv_row(
+                    f"fig_router_{tag}{policy}_rate{rate:g}_ttft_p99_s",
+                    c.ttft_quantile(0.99)))
             rows.append(csv_row(
-                f"fig_router_{policy}_rate{rate:g}_thpt_tok_s",
-                c.throughput(),
-                f"routed={'/'.join(map(str, c.router.routed_counts))}"))
-            rows.append(csv_row(
-                f"fig_router_{policy}_rate{rate:g}_ttft_mean_s",
-                c.mean_ttft()))
-            rows.append(csv_row(
-                f"fig_router_{policy}_rate{rate:g}_ttft_p95_s",
-                c.ttft_quantile(0.95)))
-            rows.append(csv_row(
-                f"fig_router_{policy}_rate{rate:g}_ttft_p99_s",
-                c.ttft_quantile(0.99)))
-        rows.append(csv_row(
-            f"fig_router_p95_ttft_rr_over_balanced_rate{rate:g}",
-            tail95["rr"] / max(tail95["balanced"], 1e-9),
-            "global balance sheds load off the slow replica"))
+                f"fig_router_{tag}p95_ttft_rr_over_balanced_rate{rate:g}",
+                tail95["rr"] / max(tail95["balanced"], 1e-9),
+                "global balance sheds load off the weak replica"))
     if verbose:
         for r in rows:
             print(r)

@@ -19,7 +19,29 @@ def main() -> int:
                     help="substring filter (e.g. fig10, table1)")
     ap.add_argument("--fast", action="store_true",
                     help="smaller sweeps for CI")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record a reference sim trace (ShareGPT, gLLM "
+                    "policy) to PATH and exit — the input of "
+                    "`python -m repro.runtime.trace fit`")
+    ap.add_argument("--trace-replay", default=None, metavar="PATH",
+                    help="strict-replay PATH, report its metrics, and exit "
+                    "— turns any recorded run into a regression check")
     args = ap.parse_args()
+
+    if args.trace_out is not None:
+        from repro.data.workload import SHAREGPT, sample_requests
+        from repro.runtime.simulator import record_sim_trace
+        n, rate = (60, 20.0) if args.fast else (200, 30.0)
+        sim = record_sim_trace(args.trace_out,
+                               sample_requests(SHAREGPT, n, rate, seed=0))
+        print(f"# recorded {sim.sched.stats.ticks} ticks "
+              f"({len(sim.metrics.finished)} requests) -> {args.trace_out}")
+        return 0
+    if args.trace_replay is not None:
+        from repro.runtime.trace import Trace, replay_trace
+        report = replay_trace(Trace.load(args.trace_replay))
+        print(f"# {report.summary()} — decisions match the recording")
+        return 0
 
     from benchmarks import (fig01_volatility, fig10_latency_throughput,
                             fig12_scalability, fig14_slo, fig15_ablation,

@@ -8,7 +8,15 @@ steps both replicas from one worker thread.  Set REPLICAS=1 for the
 single-engine layout.
 
     PYTHONPATH=src python examples/serve_online.py
+
+With --trace-out every replica's ticks and the router's placements are
+recorded to replayable JSONL traces (DESIGN.md §8) — re-examine the run
+offline, with no accelerator, via:
+
+    PYTHONPATH=src python examples/serve_online.py --trace-out /tmp/online
+    PYTHONPATH=src python -m repro.runtime.trace replay /tmp/online.replica0
 """
+import argparse
 import asyncio
 import dataclasses
 import time
@@ -41,7 +49,7 @@ async def client(fe, rng, cfg, results, i):
     results.append((first, time.monotonic() - t0, n))
 
 
-async def main():
+async def main(trace_out=None):
     cfg = make_reduced(get_config("qwen1.5-0.5b")).with_plan(
         pp=1, tp=1, ep_over_data=False)
     cfg = dataclasses.replace(cfg, dtype="float32")
@@ -57,11 +65,18 @@ async def main():
             lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
             params, tfm.param_pspecs(cfg),
             is_leaf=lambda x: isinstance(x, P))
-        # replicas share the read-only parameter tree
-        engines = [PipelineEngine(cfg, dims, params, mesh, th)
-                   for _ in range(REPLICAS)]
+        # replicas share the read-only parameter tree; with --trace-out each
+        # records its own replayable tick trace
+        engines = [
+            PipelineEngine(
+                cfg, dims, params, mesh, th,
+                trace_path=None if trace_out is None
+                else f"{trace_out}.replica{i}")
+            for i in range(REPLICAS)]
+    router_trace = None if trace_out is None else f"{trace_out}.router"
     target = engines[0] if len(engines) == 1 \
-        else ReplicaRouter(engines, policy="balanced")
+        else ReplicaRouter(engines, policy="balanced",
+                           trace_path=router_trace)
     fe = AsyncFrontend(target)
     runner = asyncio.create_task(fe.run())
 
@@ -86,7 +101,20 @@ async def main():
               f"{len(engines)} replicas")
     slo = np.mean((ttft < 2.0) & (e2e < 10.0))
     print(f"SLO attainment (TTFT<2s, E2E<10s): {slo:.0%}")
+    if trace_out is not None:
+        if isinstance(target, ReplicaRouter):
+            target.close_trace()
+        for i, eng in enumerate(engines):
+            eng.recorder.close()
+            print(f"trace: {trace_out}.replica{i} "
+                  f"({eng.recorder.num_ticks} ticks)")
+        print(f"replay with: python -m repro.runtime.trace replay "
+              f"{trace_out}.replica0")
 
 
 if __name__ == "__main__":
-    asyncio.run(main())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record per-replica tick traces (PATH.replicaN) "
+                    "plus the router's placement stream (PATH.router)")
+    asyncio.run(main(trace_out=ap.parse_args().trace_out))

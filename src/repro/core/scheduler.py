@@ -87,6 +87,11 @@ class SchedulerStats:
     scheduled_prefill_tokens: List[int] = field(default_factory=list)
     scheduled_decode_tokens: List[int] = field(default_factory=list)
     kv_free_rate: List[float] = field(default_factory=list)
+    # Raw throttle decisions per tick (eqs. 3/4 outputs, or the Sarathi
+    # equivalents), before capacity clamps — the golden-trace regression
+    # surface for core/throttle.py + this scheduler (tests/test_trace.py).
+    prefill_budgets: List[int] = field(default_factory=list)
+    decode_budgets: List[int] = field(default_factory=list)
     preemptions: int = 0
 
 
@@ -118,6 +123,8 @@ class PipelineScheduler:
         self._batches: Dict[int, ScheduledBatch] = {}
         self._batch_counter = itertools.count()
         self.stats = SchedulerStats()
+        self._last_prefill_budget = 0
+        self._last_decode_budget = 0
         # Notified whenever a request loses its resident state (preemption or
         # batch abort) so the execution layer can release per-request
         # resources (state slots, caches) tied to residency.
@@ -184,6 +191,8 @@ class PipelineScheduler:
         self.stats.scheduled_prefill_tokens.append(batch.num_prefill_tokens)
         self.stats.scheduled_decode_tokens.append(batch.num_decode_tokens)
         self.stats.kv_free_rate.append(self.kv.kv_free_rate)
+        self.stats.prefill_budgets.append(self._last_prefill_budget)
+        self.stats.decode_budgets.append(self._last_decode_budget)
         return batch
 
     # ----------------------------------------------------------------- decode
@@ -194,6 +203,7 @@ class PipelineScheduler:
             quota = len(available)                     # decode-first, all of it
         else:
             quota = decode_budget(self.num_running_decode, self.cfg)
+        self._last_decode_budget = quota               # raw eq. 4 decision
         quota = min(quota, len(available), self.max_batch_seqs,
                     self.max_decode_seqs)
 
@@ -254,6 +264,7 @@ class PipelineScheduler:
             budget = prefill_budget(
                 self.num_waiting_prefill_tokens, self.kv.kv_free_rate, self.cfg
             )
+        self._last_prefill_budget = budget             # raw eq. 3 decision
         if budget <= 0:
             return []
 

@@ -24,7 +24,8 @@ import numpy as np
 
 
 def build_engine(arch: str, *, reduced: bool = True, policy: str = "gllm",
-                 seed: int = 0, replicas: int = 1, route: str = "balanced"):
+                 seed: int = 0, replicas: int = 1, route: str = "balanced",
+                 trace_out: str = None):
     import jax
     import jax.numpy as jnp
     from jax.sharding import NamedSharding
@@ -69,11 +70,20 @@ def build_engine(arch: str, *, reduced: bool = True, policy: str = "gllm",
             is_leaf=lambda x: isinstance(x, P))
         # replicas share the (read-only) parameter tree; each owns its KV
         # pool, caches, scheduler, and TickLoop
-        engines = [PipelineEngine(cfg, dims, params, mesh, th)
-                   for _ in range(max(replicas, 1))]
+        n = max(replicas, 1)
+
+        def _tp(i):
+            if trace_out is None:
+                return None
+            return trace_out if n == 1 else f"{trace_out}.replica{i}"
+
+        engines = [PipelineEngine(cfg, dims, params, mesh, th,
+                                  trace_path=_tp(i)) for i in range(n)]
     if len(engines) == 1:
         return cfg, engines[0]
-    return cfg, ReplicaRouter(engines, policy=route)
+    router_trace = None if trace_out is None else f"{trace_out}.router"
+    return cfg, ReplicaRouter(engines, policy=route,
+                              trace_path=router_trace)
 
 
 def main() -> None:
@@ -90,14 +100,29 @@ def main() -> None:
                     help="request placement policy across replicas")
     ap.add_argument("--full", action="store_true",
                     help="published config on the production mesh (TPU)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record a replayable tick trace of the run "
+                    "(per-replica PATH.replicaN + PATH.router when N>1)")
+    ap.add_argument("--trace-replay", default=None, metavar="PATH",
+                    help="strict-replay a recorded trace through the "
+                    "scheduler instead of serving (no accelerator needed)")
     args = ap.parse_args()
+
+    if args.trace_replay is not None:
+        # replay needs only the scheduler + the recorded events — it never
+        # builds the model, so it runs on any box
+        from repro.runtime.trace import Trace, replay_trace
+        report = replay_trace(Trace.load(args.trace_replay))
+        print(f"[replay {args.trace_replay}] {report.summary()} — "
+              f"decisions match the recording")
+        return
 
     from repro.core import SamplingParams
     from repro.runtime.router import ReplicaRouter
 
     cfg, engine = build_engine(args.arch, reduced=not args.full,
                                policy=args.policy, replicas=args.replicas,
-                               route=args.route)
+                               route=args.route, trace_out=args.trace_out)
     replicas = engine.replicas if isinstance(engine, ReplicaRouter) \
         else [engine]
     rng = np.random.default_rng(0)
@@ -130,6 +155,11 @@ def main() -> None:
           f"TTFT_mean={np.mean(ttfts)*1e3:.0f}ms "
           f"preemptions={preempt} "
           f"prefill-bucket padding={pad:.1%}{routed}")
+    if args.trace_out is not None:
+        if isinstance(engine, ReplicaRouter):
+            engine.close_trace()
+        for e in replicas:
+            e.recorder.close()
 
 
 if __name__ == "__main__":

@@ -34,10 +34,16 @@ class ExecResult:
     currency `PipelineScheduler.complete` expects.  `completed_at` is the
     backend-clock time the exiting batch finished its last stage (for the
     engine this is "now"; the simulator reports the modeled completion time).
+
+    `stage_times` optionally attributes the *entering* micro-batch's service
+    time per pipeline stage — backends that can't split time per stage
+    (the live engine) leave it None; the simulator and trace replay fill it,
+    and `CostModel.fit_from_trace` calibrates against it.
     """
 
     tokens: List[int] = field(default_factory=list)
     completed_at: float = 0.0
+    stage_times: Optional[List[float]] = None
 
 
 class ExecutionBackend:

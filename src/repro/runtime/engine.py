@@ -271,6 +271,7 @@ class PipelineEngine:
         *,
         num_pages: Optional[int] = None,
         dtype=None,
+        trace_path: Optional[str] = None,
     ) -> None:
         self.cfg = cfg
         self.dims = dims
@@ -285,7 +286,25 @@ class PipelineEngine:
             max_decode_seqs=dims.Sd)
         self.backend = JaxBackend(cfg, dims, params, mesh, self.kv,
                                   dtype=dtype)
-        self.loop = TickLoop(self.scheduler, self.backend)
+        # with --trace-out, every tick of the live engine is logged to a
+        # replayable JSONL trace (runtime/trace.py); the recorder is a
+        # transparent shim around the backend.  The AsyncFrontend submits
+        # from the asyncio thread while a worker thread ticks, so traced
+        # engines serialize intake against the tick — otherwise a request's
+        # `req` record could land after the tick that batched it and strict
+        # replay of our own output would diverge.  Untraced engines keep the
+        # lock-free path.
+        self.recorder = None
+        self._trace_lock = None
+        loop_backend = self.backend
+        if trace_path is not None:
+            import threading
+
+            from repro.runtime.trace import TraceRecorder
+            self.recorder = TraceRecorder(self.backend, trace_path)
+            self._trace_lock = threading.Lock()
+            loop_backend = self.recorder
+        self.loop = TickLoop(self.scheduler, loop_backend)
         # state slots are tied to residency: free them when the scheduler
         # evicts a request (preemption or batch abort), not only on finish
         self.scheduler.on_preempt = self.backend.release_resident_state
@@ -334,7 +353,12 @@ class PipelineEngine:
             if enc_embeds is None:
                 enc_embeds = np.zeros((Te, d), np.float32)
             self.enc_embeds[rid] = np.asarray(enc_embeds, np.float32)[:Te]
-        self.scheduler.add_request(req)
+        if self._trace_lock is None:
+            self.scheduler.add_request(req)
+        else:
+            with self._trace_lock:
+                self.scheduler.add_request(req)
+                self.recorder.record_arrival(req)
         return req
 
     @property
@@ -351,10 +375,20 @@ class PipelineEngine:
     # ----------------------------------------------------------------- tick
     def step(self) -> List[Request]:
         """One pipeline tick.  Returns requests finishing this tick."""
-        return self.loop.step(self._now_fn())
+        if self._trace_lock is None:
+            return self.loop.step(self._now_fn())
+        with self._trace_lock:
+            return self.loop.step(self._now_fn())
 
     def drain(self, max_ticks: int = 100000) -> List[Request]:
-        return self.loop.drain(self._now_fn, max_ticks)
+        if self._trace_lock is None:
+            return self.loop.drain(self._now_fn, max_ticks)
+        out: List[Request] = []
+        for _ in range(max_ticks):          # lock per tick, not per drain
+            if not (self.has_work or self.busy):
+                break
+            out.extend(self.step())
+        return out
 
     # -------------------------------------------------------- checkpointing
     def snapshot_state(self) -> dict:

@@ -41,13 +41,18 @@ class BalanceWeights:
     tokens) — `decode_tokens` is the prefill-token-equivalent charged per
     resident decode; calibrate it to ~E[remaining output length] of the
     workload (the default suits chat-style ~240-token outputs).
-    `kv_pressure` inflates the score of replicas near KV exhaustion, where
-    admission would trigger the UT guard or preemption churn (paper
-    Fig. 15's no-UT pathology, avoided cluster-wide).
+    `kv_pressure` inflates the score of replicas close to the UT stall
+    point, where admission would trigger the throttle guard or
+    preemption-recompute churn (paper Fig. 15's no-UT pathology, avoided
+    cluster-wide).  The pressure is *threshold-relative* — it engages below
+    `kv_activation_margin` times the replica's own KV threshold — so a
+    structurally smaller pool is not penalized while it still has headroom
+    (the asymmetric-KV heterogeneity case of fig_router_balance.py).
     """
 
     decode_tokens: float = 128.0
     kv_pressure: float = 4.0
+    kv_activation_margin: float = 4.0
 
 
 @dataclass(frozen=True)
@@ -57,6 +62,7 @@ class ReplicaSnapshot:
     waiting_prefill_tokens: int
     running_decode: int
     kv_free_rate: float
+    kv_threshold: float = 0.05      # the replica scheduler's UT stall point
 
     @staticmethod
     def of(replica) -> "ReplicaSnapshot":
@@ -65,6 +71,7 @@ class ReplicaSnapshot:
             waiting_prefill_tokens=sched.num_waiting_prefill_tokens,
             running_decode=sched.num_running_decode,
             kv_free_rate=sched.kv.kv_free_rate,
+            kv_threshold=sched.cfg.kv_threshold,
         )
 
 
@@ -72,10 +79,13 @@ def balance_score(snap: ReplicaSnapshot, prompt_tokens: int,
                   weights: BalanceWeights, capacity: float = 1.0) -> float:
     """Estimated completion burden of placing `prompt_tokens` on a replica:
     pending work (incl. the candidate request) per unit capacity, inflated
-    by KV pressure.  Lower is better."""
+    by proximity to the KV stall point.  Lower is better."""
     load = (snap.waiting_prefill_tokens + prompt_tokens
             + weights.decode_tokens * snap.running_decode)
-    pressure = 1.0 + weights.kv_pressure * (1.0 - snap.kv_free_rate)
+    activation = min(1.0, weights.kv_activation_margin * snap.kv_threshold)
+    shortfall = max(0.0, activation - snap.kv_free_rate) / max(activation,
+                                                               1e-9)
+    pressure = 1.0 + weights.kv_pressure * shortfall
     return load * pressure / max(capacity, 1e-9)
 
 
@@ -95,6 +105,7 @@ class ReplicaRouter:
         *,
         weights: Optional[BalanceWeights] = None,
         capacities: Optional[Sequence[float]] = None,
+        trace_path: Optional[str] = None,
     ) -> None:
         if not replicas:
             raise ValueError("ReplicaRouter needs at least one replica")
@@ -108,6 +119,31 @@ class ReplicaRouter:
             raise ValueError("one capacity per replica")
         self._rr_next = 0
         self.routed_counts = [0] * n
+        self._trace = None
+        if trace_path is not None:
+            self.open_trace(trace_path)
+
+    # ---------------------------------------------------------------- tracing
+    def open_trace(self, sink) -> None:
+        """Log every placement decision (per-replica scores + chosen index)
+        to a `gllm-route` JSONL stream — the routing counterpart of the
+        per-replica tick traces (runtime/trace.py)."""
+        from repro.runtime.trace import (ROUTE_SCHEMA, SCHEMA_MAJOR,
+                                         SCHEMA_MINOR, TraceWriter)
+        assert self._trace is None, "router trace already open"
+        self._trace = TraceWriter(sink)
+        self._trace.write({
+            "kind": "header",
+            "schema": ROUTE_SCHEMA,
+            "version": [SCHEMA_MAJOR, SCHEMA_MINOR],
+            "replicas": len(self.replicas),
+            "policy": self.policy.value,
+            "capacities": list(self.capacities),
+        })
+
+    def close_trace(self) -> None:
+        if self._trace is not None:
+            self._trace.close()
 
     # ---------------------------------------------------------------- routing
     def scores(self, prompt_tokens: int = 0) -> List[float]:
@@ -117,13 +153,17 @@ class ReplicaRouter:
 
     def select(self, prompt_tokens: int = 0) -> int:
         """Index of the replica the next request should land on."""
+        scores: Optional[List[float]] = None
         if self.policy is RoutingPolicy.ROUND_ROBIN:
             i = self._rr_next
             self._rr_next = (self._rr_next + 1) % len(self.replicas)
         else:
-            s = self.scores(prompt_tokens)
-            i = int(np.argmin(s))
+            scores = self.scores(prompt_tokens)
+            i = int(np.argmin(scores))
         self.routed_counts[i] += 1
+        if self._trace is not None:
+            self._trace.write({"kind": "route", "n": prompt_tokens,
+                               "scores": scores, "replica": i})
         return i
 
     # ------------------------------------------------- engine-cluster surface
@@ -182,9 +222,21 @@ class SimCluster:
     causally-consistent virtual time: each arrival first advances every
     replica to the arrival instant, then routes on the resulting state."""
 
-    def __init__(self, sims: Sequence[Any], router: ReplicaRouter) -> None:
+    def __init__(self, sims: Sequence[Any], router: ReplicaRouter,
+                 *, trace_dir: Optional[str] = None) -> None:
         self.sims = list(sims)
         self.router = router
+        if trace_dir is not None:
+            # one tick trace per replica + the router's placement stream —
+            # together they capture the whole cluster run for offline replay
+            import os
+            os.makedirs(trace_dir, exist_ok=True)
+            for i, sim in enumerate(self.sims):
+                sim.attach_trace(
+                    os.path.join(trace_dir, f"replica{i}.trace.jsonl"))
+            if router._trace is None:
+                router.open_trace(
+                    os.path.join(trace_dir, "router.trace.jsonl"))
 
     def run(self, arrivals: Iterable[Tuple[float, List[int], int]],
             until: float = float("inf")) -> List[Request]:

@@ -30,6 +30,7 @@ import numpy as np
 from repro.core import (
     PagedKVManager,
     PipelineScheduler,
+    PrefillPolicy,
     Request,
     SamplingParams,
     ScheduledBatch,
@@ -81,6 +82,68 @@ class CostModel:
         return dataclasses.replace(
             self, mfu=self.mfu / factor, hbm_eff=self.hbm_eff / factor,
             fixed_us=self.fixed_us * factor)
+
+    @classmethod
+    def fit_from_trace(cls, trace, base: "CostModel", *, iters: int = 60
+                       ) -> "CostModel":
+        """Calibrate the roofline efficiencies from a recorded trace.
+
+        The structural constants (FLOPs/bytes per token per stage) come from
+        `base` — they are architecture facts, not free parameters; what a
+        trace identifies is how efficiently the hardware achieved them:
+        `mfu`, `hbm_eff`, and the fixed per-tick floor.  Fitting alternates
+        regime assignment (compute- vs memory-bound under the current
+        parameters) with per-regime least squares, exactly the structure of
+        `stage_time`.  A trace that never visits one regime leaves that
+        regime's efficiency at the base value (it is unidentifiable).
+
+        Closes the sim-vs-engine loop: `calibration_error(trace, fitted)`
+        (runtime/trace.py) bounds how well the returned model reproduces the
+        recorded per-tick latencies.
+        """
+        import dataclasses
+
+        from repro.runtime.trace import tick_samples
+
+        samples = tick_samples(trace)
+        if not samples:
+            raise ValueError("trace has no ticks with stage latencies")
+        F = np.empty(len(samples))      # compute seconds at mfu = 1
+        M = np.empty(len(samples))      # memory seconds at hbm_eff = 1
+        comm = np.empty(len(samples))
+        y = np.empty(len(samples))      # observed per-stage service time
+        for i, s in enumerate(samples):
+            tokens = s.prefill_tokens + s.decode_tokens
+            F[i] = tokens * base.flops_per_token_stage / (
+                PEAK_FLOPS * base.chips_per_stage)
+            kv_bytes = (s.prefill_tokens * 0.5 * s.prefill_ctx
+                        + s.decode_tokens * s.decode_ctx
+                        ) * base.kv_bytes_per_ctx_token
+            M[i] = (base.param_bytes_stage + kv_bytes) / (
+                HBM_BW * base.chips_per_stage)
+            comm[i] = tokens * base.comm_bytes_per_token / base.net_bw
+            if tokens and base.comm_bytes_per_token:
+                comm[i] += base.comm_latency
+            y[i] = s.stage_time
+
+        mfu, hbm_eff = base.mfu, base.hbm_eff
+        fixed = base.fixed_us * 1e-6
+        for _ in range(iters):
+            resid = np.maximum(y - comm - fixed, 1e-12)
+            compute_bound = F / mfu >= M / hbm_eff
+            for mask, num in ((compute_bound, F), (~compute_bound, M)):
+                if mask.any():
+                    denom = float((num[mask] * resid[mask]).sum())
+                    if denom > 0:
+                        eff = float((num[mask] ** 2).sum()) / denom
+                        if num is F:
+                            mfu = eff
+                        else:
+                            hbm_eff = eff
+            fixed = max(0.0, float(np.mean(
+                y - comm - np.maximum(F / mfu, M / hbm_eff))))
+        return dataclasses.replace(base, mfu=mfu, hbm_eff=hbm_eff,
+                                   fixed_us=fixed * 1e6)
 
 
 def cost_model_for(cfg, *, chips_per_stage: int = 1, pp: int = None
@@ -206,12 +269,15 @@ class SimBackend(ExecutionBackend):
                 exiting_id: Optional[int], now: float) -> ExecResult:
         self.time = max(self.time, now)
         entering_id = ring[0][0]
+        stage_times: Optional[List[float]] = None
         if entering_id is not None:
             batch = self.scheduler.get_batch(entering_id)
+            stage_times = []
             t = now + self.runtime.overhead_serial
             for s in range(self.pp):
                 start = max(t, self.stage_free_at[s])
                 dt = self._batch_time(s, batch)
+                stage_times.append(dt)
                 if s == self.pp - 1:
                     if self.stage_free_at[s] < start and \
                             self.metrics.sim_time > 0:
@@ -224,7 +290,7 @@ class SimBackend(ExecutionBackend):
         self.metrics.sim_time = max(self.metrics.sim_time, self.time)
 
         if exiting_id is None:
-            return ExecResult([], now)
+            return ExecResult([], now, stage_times=stage_times)
         done_at = self._completion_time.pop(exiting_id, now)
         exiting = self.scheduler.get_batch(exiting_id)
         n = sum(1 for s in exiting.seqs if s.produces_token) \
@@ -233,7 +299,7 @@ class SimBackend(ExecutionBackend):
         # the driver cannot act on this completion before it happened
         self.time = max(self.time, done_at)
         self.metrics.sim_time = max(self.metrics.sim_time, self.time)
-        return ExecResult([0] * n, done_at)
+        return ExecResult([0] * n, done_at, stage_times=stage_times)
 
     def reset(self, now: float) -> None:
         self._completion_time.clear()
@@ -271,17 +337,35 @@ class PipelineSimulator:
         *,
         straggler_stage: Optional[int] = None,
         straggler_factor: float = 1.0,
+        trace_path: Optional[str] = None,
     ) -> None:
         self.sched = scheduler
         self.pp = pp
         self.backend = SimBackend(pp, cost, runtime,
                                   straggler_stage=straggler_stage,
                                   straggler_factor=straggler_factor)
-        self.loop = TickLoop(scheduler, self.backend)
+        self.recorder = None
+        loop_backend = self.backend
+        if trace_path is not None:
+            from repro.runtime.trace import TraceRecorder
+            self.recorder = TraceRecorder(self.backend, trace_path)
+            loop_backend = self.recorder
+        self.loop = TickLoop(scheduler, loop_backend)
         self.metrics = self.backend.metrics
         self._arrivals: List[Tuple[float, int, List[int], int]] = []
         self._failures: List[Tuple[float, float]] = []
         self._seq = itertools.count(1)
+
+    def attach_trace(self, trace_path) -> None:
+        """Start recording this replica's ticks (before any work has run —
+        used by `SimCluster` which receives already-built simulators)."""
+        from repro.runtime.trace import TraceRecorder
+        assert self.recorder is None, "trace already attached"
+        assert self.backend.time == 0.0 and not self.loop.busy, \
+            "attach_trace before the simulator runs"
+        self.recorder = TraceRecorder(self.backend, trace_path)
+        self.recorder.scheduler = self.sched
+        self.loop.backend = self.recorder
 
     @property
     def scheduler(self) -> PipelineScheduler:   # replica-router signal surface
@@ -352,6 +436,8 @@ class PipelineSimulator:
             self.metrics.total_input_tokens += len(prompt)
             self.metrics.sim_time = max(self.metrics.sim_time, at)
             self.sched.add_request(req)
+            if self.recorder is not None:
+                self.recorder.record_arrival(req)
 
     def _jump_to_next_arrival(self, until: float) -> bool:
         while self._arrivals:
@@ -366,5 +452,45 @@ class PipelineSimulator:
 
     def _apply_failure(self, at: float, downtime: float) -> None:
         # in-flight micro-batches lost: abort + recompute on recovery
+        # (reset goes through the loop's backend so a TraceRecorder sees it)
         self.loop.abort_inflight()
-        self.backend.reset(at + downtime)
+        self.loop.backend.reset(at + downtime)
+
+
+def record_sim_trace(
+    trace_path,
+    arrivals: List[Tuple[float, List[int], int]],
+    *,
+    arch: str = "qwen2.5-14b",
+    pp: int = 4,
+    pages: int = 2048,
+    page_size: int = 16,
+    policy: PrefillPolicy = PrefillPolicy.GLLM,
+    runtime: RuntimeModel = None,
+    straggler_stage: Optional[int] = None,
+    straggler_factor: float = 1.0,
+    fail_at: Optional[float] = None,
+    downtime: float = 1.0,
+) -> PipelineSimulator:
+    """Run a traced simulation of `arrivals` — the canonical way to mint a
+    golden trace (tests/fixtures/traces/make_fixtures.py) or a calibration
+    trace (`benchmarks.run --trace-out`).  Returns the finished simulator;
+    the trace is at `trace_path` (or in `sim.recorder` for in-memory sinks).
+    """
+    from repro.configs import get_config
+
+    cfg = get_config(arch)
+    th = ThrottleConfig(pipeline_depth=pp, policy=policy)
+    kv = PagedKVManager(num_pages=pages, page_size=page_size)
+    sched = PipelineScheduler(th, kv, max_model_len=pages * page_size)
+    sim = PipelineSimulator(sched, pp, cost_model_for(cfg, pp=pp), runtime,
+                            straggler_stage=straggler_stage,
+                            straggler_factor=straggler_factor,
+                            trace_path=trace_path)
+    sim.add_workload(arrivals)
+    if fail_at is not None:
+        sim.inject_failure(fail_at, downtime)
+    sim.run()
+    if sim.recorder is not None:
+        sim.recorder.close()
+    return sim

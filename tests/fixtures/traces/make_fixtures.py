@@ -1,0 +1,64 @@
+"""Mint the checked-in golden traces (run from the repo root):
+
+    PYTHONPATH=src python tests/fixtures/traces/make_fixtures.py
+
+Two regimes, both `SimBackend` runs with fixed seeds so regeneration is
+byte-identical (tests/test_trace.py asserts it):
+
+  * prefill_heavy    — long prompts, tiny outputs: Token Throttling's WT term
+    dominates, micro-batches are prefill chunks.
+  * decode_saturated — short prompts, long outputs on a deliberately tight KV
+    pool: the UT term and threshold gate admission, preemption-by-recompute
+    fires, decode population saturates eq. 4.
+
+Any change to core/throttle.py or core/scheduler.py that alters batching
+makes strict replay of these files diverge — regenerate and review the
+fixture diff to accept the new behavior.
+"""
+
+from __future__ import annotations
+
+import os
+
+from repro.data.workload import WorkloadSpec, sample_requests
+from repro.runtime.simulator import record_sim_trace
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+PREFILL_HEAVY = WorkloadSpec("prefill-heavy", mean_input=220.0,
+                             mean_output=6.0, sigma=0.7,
+                             max_input=512, max_output=12)
+DECODE_SATURATED = WorkloadSpec("decode-saturated", mean_input=24.0,
+                                mean_output=80.0, sigma=0.5,
+                                max_input=64, max_output=120)
+
+FIXTURES = {
+    # burst arrivals: #WP spikes so the WT term schedules multi-hundred-token
+    # prefill chunks — ticks that are genuinely compute-bound (the regime
+    # CostModel.fit_from_trace needs to see to identify mfu)
+    "prefill_heavy.trace.jsonl": dict(
+        spec=PREFILL_HEAVY, n=28, rate=200.0, pages=512, seed=7),
+    "decode_saturated.trace.jsonl": dict(
+        spec=DECODE_SATURATED, n=20, rate=60.0, pages=80, seed=7),
+}
+
+
+def generate(path: str, *, spec: WorkloadSpec, n: int, rate: float,
+             pages: int, seed: int):
+    return record_sim_trace(path, sample_requests(spec, n, rate, seed=seed),
+                            pages=pages)
+
+
+def main() -> None:
+    for name, kw in FIXTURES.items():
+        path = os.path.join(HERE, name)
+        sim = generate(path, **kw)
+        st = sim.sched.stats
+        print(f"{name}: {st.ticks} ticks, {len(sim.metrics.finished)} "
+              f"requests, {st.preemptions} preemptions, "
+              f"min KV-free {min(st.kv_free_rate):.3f}, "
+              f"{os.path.getsize(path)} bytes")
+
+
+if __name__ == "__main__":
+    main()
