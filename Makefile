@@ -5,7 +5,9 @@
 #                     skip themselves when hypothesis is missing)
 #   make trace-check  strict-replay the checked-in golden traces (jax-free):
 #                     any batching change in scheduler/throttle fails here
-#   make ci           dev-deps + tier-1 + golden traces
+#   make rebalance-check  sim-only control-plane smoke: steal+migrate must
+#                     beat admission-only p95 TTFT on the straggler cluster
+#   make ci           dev-deps + tier-1 + golden traces + rebalance smoke
 #   make bench        fast benchmark sweep (CSV rows on stdout)
 
 PY ?= python
@@ -15,7 +17,7 @@ export PYTHONPATH
 TRACE_FIXTURES := tests/fixtures/traces/prefill_heavy.trace.jsonl \
                   tests/fixtures/traces/decode_saturated.trace.jsonl
 
-.PHONY: dev-deps test trace-check ci bench
+.PHONY: dev-deps test trace-check rebalance-check ci bench
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -26,7 +28,10 @@ test:
 trace-check:
 	$(PY) -m repro.runtime.trace check $(TRACE_FIXTURES)
 
-ci: dev-deps test trace-check
+rebalance-check:
+	$(PY) -m benchmarks.fig_rebalance --check
+
+ci: dev-deps test trace-check rebalance-check
 
 bench:
 	$(PY) -m benchmarks.run --fast

@@ -36,18 +36,28 @@ from benchmarks.common import csv_row
 from repro.configs import get_config
 from repro.core import PagedKVManager, PipelineScheduler, PrefillPolicy, ThrottleConfig
 from repro.data.workload import get_workload, sample_requests
-from repro.runtime.router import BalanceWeights, ReplicaRouter, SimCluster
+from repro.runtime.router import (
+    BalanceWeights,
+    ReplicaCapacity,
+    ReplicaRouter,
+    SimCluster,
+)
 from repro.runtime.simulator import PipelineSimulator, cost_model_for
 
 HETERO_CASES = ("slow", "straggler", "kv", "depth")
 
-# Per-case severity + capacity hints (see module docstring).  A straggler
-# stage gates the whole ring, so its packed-pipeline capacity is
-# 1/slow_factor; with decode bubbles the effective ratio sits nearer
-# sum-of-stages, hence the softer hint.
+# Per-case severity + capacity hints (see module docstring), stated as the
+# hardware facts the operator actually knows — `ReplicaCapacity` derives the
+# score divisor.  A straggler stage gates the whole ring: a packed pipeline
+# drains one micro-batch per straggler beat, so relative throughput is
+# pp / (pp - 1 + slow_factor) (ReplicaCapacity.straggler).
 CASE_DEFAULTS = {
-    "slow": dict(slow_factor=2.5, capacities=[1.0, 0.4]),
-    "straggler": dict(slow_factor=4.0, capacities=[1.0, 0.5]),
+    "slow": dict(slow_factor=2.5,
+                 capacities=[ReplicaCapacity(),
+                             ReplicaCapacity.scaled(2.5)]),
+    "straggler": dict(slow_factor=4.0,
+                      capacities=[ReplicaCapacity(pipeline_depth=4),
+                                  ReplicaCapacity.straggler(4, 4.0)]),
     "kv": dict(slow_factor=2.5, capacities=None),
     "depth": dict(slow_factor=2.5, capacities=None),
 }

@@ -45,13 +45,16 @@ def main() -> int:
 
     from benchmarks import (fig01_volatility, fig10_latency_throughput,
                             fig12_scalability, fig14_slo, fig15_ablation,
-                            fig16_sensitivity, fig_router_balance,
-                            roofline_report, table1_equivalence)
+                            fig16_sensitivity, fig_rebalance,
+                            fig_router_balance, roofline_report,
+                            table1_equivalence)
 
     suites = [
         ("fig01_volatility", fig01_volatility.run, {}),
         ("fig_router_balance", fig_router_balance.run,
          {"rates": (60.0,), "num_requests": 100} if args.fast else {}),
+        ("fig_rebalance", fig_rebalance.run,
+         {"rates": (45.0,), "num_requests": 100} if args.fast else {}),
         ("fig10_latency_throughput", fig10_latency_throughput.run,
          {"rates": (8.0, 60.0)} if args.fast else {}),
         ("fig13_cross_node", fig10_latency_throughput.run,

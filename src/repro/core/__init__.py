@@ -1,6 +1,6 @@
 """gLLM core: Token Throttling scheduling + paged KV management."""
 
-from repro.core.kv_manager import PagedKVManager
+from repro.core.kv_manager import KVExport, PagedKVManager
 from repro.core.request import Request, RequestMetrics, RequestState, SamplingParams
 from repro.core.scheduler import (
     PipelineScheduler,
@@ -18,6 +18,7 @@ from repro.core.throttle import (
 )
 
 __all__ = [
+    "KVExport",
     "PagedKVManager",
     "Request",
     "RequestMetrics",

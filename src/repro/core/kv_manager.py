@@ -7,14 +7,35 @@ pages); the *page ids* are global and identical on every stage, so one host-side
 allocator serves the whole pipeline.
 
 Supports: allocation/free, copy-on-extend block tables, preemption reclaim,
-optional prefix caching (hash-chained full pages with refcounts), and the
-KV idle-rate signal consumed by Token Throttling's UT term.
+optional prefix caching (hash-chained full pages with refcounts), the
+KV idle-rate signal consumed by Token Throttling's UT term, and per-request
+export/import for live migration across replicas (DESIGN.md §9): `export_kv`
+captures a request's resident token positions, `import_kv` re-maps them onto
+freshly-allocated slots of another manager (page geometries may differ —
+the mapping is per token, not per page).
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class KVExport:
+    """Portable description of one request's resident KV (host side).
+
+    `slots` is the source (page, slot) per resident token, in sequence
+    order — exactly the index list a device-side gather needs.  The actual
+    cache bytes are moved by the execution backend
+    (`ExecutionBackend.export_kv_pages`/`import_kv_pages`); this object only
+    carries the *addressing* so the destination can re-map slots.
+    """
+
+    request_id: str
+    num_tokens: int
+    page_size: int
+    slots: Tuple[Tuple[int, int], ...]
 
 
 def hash_page(parent_hash: int, token_ids: Tuple[int, ...]) -> int:
@@ -118,6 +139,29 @@ class PagedKVManager:
             return
         for pid in table:
             self._release_page(pid)
+
+    # -------------------------------------------------------------- migration
+    def export_kv(self, request_id: str) -> KVExport:
+        """Addressing of a resident request's KV, for live migration."""
+        if request_id not in self._block_tables:
+            raise KeyError(f"request {request_id} has no resident KV")
+        table = self._block_tables[request_id]
+        n = self._num_tokens[request_id]
+        slots = tuple((table[i // self.page_size], i % self.page_size)
+                      for i in range(n))
+        return KVExport(request_id=request_id, num_tokens=n,
+                        page_size=self.page_size, slots=slots)
+
+    def import_kv(self, export: KVExport) -> List[Tuple[int, int]]:
+        """Allocate fresh pages for a migrated-in request and return the
+        destination (page, slot) per token — the scatter addresses matching
+        `export.slots` gather addresses one-to-one.  Raises MemoryError when
+        the pool cannot hold the request (callers should `can_allocate`
+        first and fall back to recompute)."""
+        rid = export.request_id
+        if self.has_request(rid):
+            raise ValueError(f"request {rid} already resident here")
+        return self.allocate(rid, export.num_tokens)
 
     # ---------------------------------------------------------- prefix caching
     def match_prefix(self, token_ids: Sequence[int]) -> Tuple[int, List[int]]:

@@ -208,37 +208,51 @@ class PipelineScheduler:
                     self.max_decode_seqs)
 
         out: List[ScheduledSeq] = []
+        scheduled: set = set()
         for req in available:
             if len(out) >= quota:
                 break
-            if not self._ensure_decode_page(req):
+            if req.state is not RequestState.DECODING:
+                # victimized by an earlier iteration's page hunt this very
+                # tick: its KV is gone and it is back in the waiting queue —
+                # scheduling it now would resurrect a zero-context decode
+                continue
+            if not self._ensure_decode_page(req, protected=scheduled):
                 continue  # could not allocate even after preemption: defer
             slots = self.kv.allocate(req.request_id, 1)
             out.append(ScheduledSeq(req, req.seq_len, 1, False, slots))
+            scheduled.add(req.request_id)
         return out
 
-    def _ensure_decode_page(self, req: Request) -> bool:
-        """Make room for one decode token, preempting if necessary (§3.1.3)."""
+    def _ensure_decode_page(self, req: Request,
+                            protected: frozenset = frozenset()) -> bool:
+        """Make room for one decode token, preempting if necessary (§3.1.3).
+        `protected` requests (already in the batch being formed, with slots
+        allocated) must not be victimized — freeing their pages would tear
+        the very slots this tick is about to write."""
         while not self.kv.can_allocate(req.request_id, 1):
-            victim = self._pick_preemption_victim(exclude=req.request_id)
+            victim = self._pick_preemption_victim(
+                exclude={req.request_id} | set(protected))
             if victim is None:
                 return False
             self._preempt(victim)
         return True
 
-    def _pick_preemption_victim(self, exclude: str) -> Optional[Request]:
+    def _pick_preemption_victim(self, exclude) -> Optional[Request]:
         """Latest-arrival resident request that is not in flight.
 
         Partially-prefilled requests are victims *first*: a stalled chunked
         prefill holding pages while decode is starved is otherwise a
         deadlock (decode can only preempt decode, prefill can only shrink).
         Then latest-arrival decode requests (vLLM recompute policy)."""
+        if isinstance(exclude, str):
+            exclude = {exclude}
         for req in reversed(self.running_prefill):
-            if req.request_id == exclude or req.request_id in self._in_flight:
+            if req.request_id in exclude or req.request_id in self._in_flight:
                 continue
             return req
         for req in reversed(self.running_decode):
-            if req.request_id == exclude or req.request_id in self._in_flight:
+            if req.request_id in exclude or req.request_id in self._in_flight:
                 continue
             return req
         return None
@@ -371,6 +385,67 @@ class PipelineScheduler:
         remaining = sum(1 for _ in it)
         assert remaining == 0, f"{remaining} unconsumed sampled tokens"
         return finished
+
+    # -------------------------------------------------------------- migration
+    def drain_request(self, request_id: str) -> Optional[Request]:
+        """Remove a request from this scheduler for live migration.
+
+        Only requests *not* in an in-flight micro-batch can be drained (a
+        resident micro-batch's KV writes are still materializing on device);
+        returns None for those — the control plane retries next pass.  The
+        request's KV stays resident: the migrator exports/frees it
+        explicitly (`PagedKVManager.export_kv`), so a failed transfer can
+        re-adopt locally without losing state.
+        """
+        if request_id in self._in_flight:
+            return None
+        for group in (self.running_decode, self.running_prefill):
+            for req in group:
+                if req.request_id == request_id:
+                    group.remove(req)
+                    return req
+        for req in self.waiting:
+            if req.request_id == request_id:
+                self.waiting.remove(req)
+                return req
+        return None
+
+    def adopt_request(self, req: Request) -> None:
+        """Admit a drained request at its *current position* (no recompute).
+
+        The caller must have imported the request's KV first
+        (`PagedKVManager.import_kv`): every token counted by
+        `req.num_prefilled` needs resident KV here.  The request resumes in
+        the queue its progress implies — decoding, mid-prefill, or waiting.
+        """
+        rid = req.request_id
+        if req.is_finished:
+            raise ValueError(f"request {rid} already finished")
+        resident = self.kv.num_tokens(rid)
+        if resident != req.num_prefilled:
+            raise ValueError(
+                f"request {rid}: {req.num_prefilled} prefilled tokens but "
+                f"{resident} with resident KV — import_kv before adopt")
+        # Placement follows the drained state: a DECODING request keeps one
+        # KV slot unwritten (its next decode step consumes the newest
+        # sampled token), so progress counters alone cannot distinguish it
+        # from a nearly-done prefill.
+        if req.state is RequestState.DECODING:
+            self.running_decode.append(req)
+        elif req.num_prefilled > 0:
+            req.state = RequestState.PREFILLING
+            self.running_prefill.append(req)
+        else:
+            req.state = RequestState.WAITING
+            self.waiting.append(req)
+
+    def steal_candidates(self) -> List[Request]:
+        """Waiting requests a rebalancer may take, cheapest-first: stolen
+        from the *tail* (last arrivals — FCFS order of the remainder is
+        preserved).  Requests that already hold KV here (an adopted prefix-
+        cache head) are skipped: stealing them would strand pages."""
+        return [r for r in reversed(self.waiting)
+                if not self.kv.has_request(r.request_id)]
 
     # ----------------------------------------------------------- fault paths
     def abort_batch(self, batch_id: int) -> List[Request]:

@@ -7,11 +7,15 @@ published config on the production mesh factoring from the arch's plan.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
         --requests 12 --rate 4 [--policy gllm|sarathi|no_wt|no_ut] \
-        [--replicas 2 --route balanced|rr]
+        [--replicas 2 --route balanced|rr] \
+        [--rebalance-interval 0.25 [--migrate]]
 
 With --replicas N, N data-parallel engine replicas (sharing one read-only
 parameter tree) are fronted by a `ReplicaRouter` that places each request by
-global balance score (DESIGN.md §1.3).
+global balance score (DESIGN.md §1.3).  --rebalance-interval turns on the
+periodic control plane (steal waiting requests off saturated replicas);
+--migrate additionally allows live migration of running decode requests —
+KV pages move across replicas with no recompute (DESIGN.md §9).
 """
 
 from __future__ import annotations
@@ -25,6 +29,7 @@ import numpy as np
 
 def build_engine(arch: str, *, reduced: bool = True, policy: str = "gllm",
                  seed: int = 0, replicas: int = 1, route: str = "balanced",
+                 rebalance_interval: float = None, migrate: bool = False,
                  trace_out: str = None):
     import jax
     import jax.numpy as jnp
@@ -39,7 +44,7 @@ def build_engine(arch: str, *, reduced: bool = True, policy: str = "gllm",
     from repro.models import transformer as tfm
     from repro.models.serve import ServeDims
     from repro.runtime.engine import PipelineEngine
-    from repro.runtime.router import ReplicaRouter
+    from repro.runtime.router import RebalancePolicy, ReplicaRouter
 
     cfg = get_config(arch)
     if reduced:
@@ -82,7 +87,11 @@ def build_engine(arch: str, *, reduced: bool = True, policy: str = "gllm",
     if len(engines) == 1:
         return cfg, engines[0]
     router_trace = None if trace_out is None else f"{trace_out}.router"
-    return cfg, ReplicaRouter(engines, policy=route,
+    rebalance = None
+    if rebalance_interval is not None:
+        rebalance = RebalancePolicy(interval=rebalance_interval,
+                                    migrate=migrate)
+    return cfg, ReplicaRouter(engines, policy=route, rebalance=rebalance,
                               trace_path=router_trace)
 
 
@@ -98,6 +107,13 @@ def main() -> None:
                     help="data-parallel engine replicas behind the router")
     ap.add_argument("--route", default="balanced", choices=["balanced", "rr"],
                     help="request placement policy across replicas")
+    ap.add_argument("--rebalance-interval", type=float, default=None,
+                    metavar="SECONDS",
+                    help="run the periodic control plane: steal waiting "
+                    "requests off saturated replicas every SECONDS")
+    ap.add_argument("--migrate", action="store_true",
+                    help="with --rebalance-interval: also live-migrate "
+                    "running decode requests (KV moves, no recompute)")
     ap.add_argument("--full", action="store_true",
                     help="published config on the production mesh (TPU)")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
@@ -122,7 +138,10 @@ def main() -> None:
 
     cfg, engine = build_engine(args.arch, reduced=not args.full,
                                policy=args.policy, replicas=args.replicas,
-                               route=args.route, trace_out=args.trace_out)
+                               route=args.route,
+                               rebalance_interval=args.rebalance_interval,
+                               migrate=args.migrate,
+                               trace_out=args.trace_out)
     replicas = engine.replicas if isinstance(engine, ReplicaRouter) \
         else [engine]
     rng = np.random.default_rng(0)
@@ -150,6 +169,10 @@ def main() -> None:
     if isinstance(engine, ReplicaRouter):
         routed = (f" routed={'/'.join(map(str, engine.routed_counts))}"
                   f" ({engine.policy.value})")
+        if engine.rebalance_policy is not None:
+            rs = engine.rebalance_stats
+            routed += (f" rebalance[stolen={rs.stolen} "
+                       f"migrated={rs.migrated}]")
     print(f"[{args.arch} | {args.policy}] {len(reqs)} requests, {toks} tokens "
           f"in {wall:.1f}s; ticks={ticks} "
           f"TTFT_mean={np.mean(ttfts)*1e3:.0f}ms "

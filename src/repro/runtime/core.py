@@ -84,6 +84,49 @@ class ExecutionBackend:
     def reset(self, now: float) -> None:
         """Fault recovery: all in-flight work was lost; restart at `now`."""
 
+    # ------------------------------------------------- live migration (§9)
+    # The router's control plane moves a *running* request between replicas:
+    # the source backend gathers the request's device-resident bytes (KV
+    # pages + per-request state), the destination scatters them into its own
+    # pools at freshly-allocated addresses.  Backends without real device
+    # state (the simulator, trace replay) keep the no-op defaults — the
+    # host-side addressing (`PagedKVManager.export_kv/import_kv`) is the
+    # shared protocol; these hooks move only the payload.
+
+    def export_kv_pages(self, request_id: str,
+                        slots: Sequence[Tuple[int, int]]) -> Any:
+        """Gather the KV cache content at `slots` ((page, slot) per resident
+        token, sequence order).  Returns an opaque payload for
+        `import_kv_pages` on the destination backend; None when the backend
+        holds no real bytes."""
+        return None
+
+    def import_kv_pages(self, request_id: str, payload: Any,
+                        slots: Sequence[Tuple[int, int]]) -> None:
+        """Scatter a payload from `export_kv_pages` into this backend's KV
+        pools at `slots` (the destination addressing from `import_kv`)."""
+
+    def export_request_state(self, req: Request) -> Any:
+        """Detach non-KV per-request device state (encoder caches, state
+        slots) for migration; releases it locally."""
+        return None
+
+    def import_request_state(self, req: Request, state: Any,
+                             resident: bool = True) -> None:
+        """Attach state from `export_request_state` on the destination.
+        `resident=False` means the request arrives *non-resident* (it will
+        recompute from scratch — a stolen waiting request, or a migration
+        that fell back to recompute): attach only state that must survive a
+        recompute (e.g. encoder embeddings), not residency-scoped state
+        like recurrent slots, which recompute rebuilds anyway."""
+
+    def migration_cost(self, num_tokens: int) -> float:
+        """Modeled wall-clock seconds to move `num_tokens` of KV off this
+        backend (interconnect transfer).  Real backends pay the cost in the
+        copy itself and report 0; the simulator models it so migration
+        thresholds are tunable in sim."""
+        return 0.0
+
 
 class TickLoop:
     """The single schedule→execute→complete cycle (paper §3.3 driver loop).

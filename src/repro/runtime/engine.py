@@ -173,6 +173,77 @@ class JaxBackend(ExecutionBackend):
         scratch).  Encoder embeddings are kept — recompute needs them."""
         self.slots.release(req.request_id)
 
+    # ------------------------------------------------- live migration (§9)
+    # Paged "kv" cache leaves are (stage, repeat, pages, page, ...): one
+    # fancy-indexed gather/scatter on the (page, slot) axes moves a request's
+    # whole context across every stage and layer.  Slot-indexed leaves
+    # (recurrent conv/ssm/wkv state, encoder hidden caches) move by state
+    # slot.  On one host this is an array copy; across hosts the same
+    # payloads are what would go over the interconnect.
+
+    _SLOT_LEAF_AXIS = {"conv": 2, "ssm": 2, "tm_x": 2, "cm_x": 2, "wkv": 2,
+                       "h": 1}
+
+    def export_kv_pages(self, request_id: str,
+                        slots: Sequence[Tuple[int, int]]) -> dict:
+        pg = jnp.asarray([p for p, _ in slots], jnp.int32)
+        off = jnp.asarray([o for _, o in slots], jnp.int32)
+        payload = {}
+        for gk, grp in self.caches.items():
+            for name, arr in grp.items():
+                if name == "kv":
+                    payload[f"{gk}/{name}"] = arr[:, :, pg, off]
+        return payload
+
+    def import_kv_pages(self, request_id: str, payload: dict,
+                        slots: Sequence[Tuple[int, int]]) -> None:
+        if payload is None:
+            return
+        pg = jnp.asarray([p for p, _ in slots], jnp.int32)
+        off = jnp.asarray([o for _, o in slots], jnp.int32)
+        for gk, grp in self.caches.items():
+            for name, arr in grp.items():
+                if name == "kv":
+                    vals = jnp.asarray(payload[f"{gk}/{name}"], arr.dtype)
+                    grp[name] = arr.at[:, :, pg, off].set(vals)
+
+    def export_request_state(self, req: Request) -> dict:
+        state: Dict[str, Any] = {"enc": self.enc_embeds.pop(req.request_id,
+                                                            None),
+                                 "slot_leaves": {}}
+        s = self.slots.owner.get(req.request_id)
+        if s is not None:
+            for gk, grp in self.caches.items():
+                for name, arr in grp.items():
+                    ax = self._SLOT_LEAF_AXIS.get(name)
+                    if ax is not None:
+                        state["slot_leaves"][f"{gk}/{name}"] = \
+                            jnp.take(arr, s, axis=ax)
+            self.slots.release(req.request_id)
+        return state
+
+    def import_request_state(self, req: Request, state: Optional[dict],
+                             resident: bool = True) -> None:
+        if state is None:
+            return
+        if state.get("enc") is not None:
+            self.enc_embeds[req.request_id] = state["enc"]
+        # residency-scoped state: a non-resident arrival recomputes from
+        # scratch, so scattering stale recurrent state (and burning a slot)
+        # would only be overwritten
+        leaves = state.get("slot_leaves") or {} if resident else {}
+        if not leaves:
+            return
+        s = self.slots.get(req.request_id)
+        for gk, grp in self.caches.items():
+            for name, arr in grp.items():
+                key = f"{gk}/{name}"
+                if key in leaves:
+                    idx = [slice(None)] * arr.ndim
+                    idx[self._SLOT_LEAF_AXIS[name]] = s
+                    grp[name] = arr.at[tuple(idx)].set(
+                        jnp.asarray(leaves[key], arr.dtype))
+
     # -------------------------------------------------------------- internals
     def _build_sampling(self, exiting_id):
         """Per-row temperatures for the micro-batch exiting this tick."""

@@ -1,4 +1,4 @@
-"""Globally-balanced multi-replica routing (DESIGN.md §1.3).
+"""Globally-balanced multi-replica routing + control plane (DESIGN.md §1.3, §9).
 
 gLLM's thesis is that *global* state — pending prefill tokens (#WP), decode
 population (#RD), KV idle rate — should drive scheduling.  Token Throttling
@@ -10,22 +10,38 @@ each arriving request to the replica whose global balance score is lowest.
 The score is computed from exactly the scheduler signals Token Throttling
 uses, so imbalance is *discovered* — a slow or KV-saturated replica
 accumulates #WP/#RD backlog and sheds load without any static capacity
-configuration (weights can still be supplied when capacities are known).
+configuration (`ReplicaCapacity` hints can still be supplied when
+capacities are known).
+
+Admission-time placement alone reacts a queue-buildup too late: a replica
+that saturates *after* placement keeps its backlog while neighbors idle.
+With a `RebalancePolicy` the router becomes a periodic **control plane**
+(§9): each interval it re-polls every replica's balance score and, when the
+spread exceeds the trigger, first *steals* waiting requests from the
+saturated queue (cheap — no state moves) and, if imbalance persists,
+**live-migrates** running decode requests — draining them from the source
+scheduler, shipping their KV pages (and recurrent state) through the
+backend migration hooks, and re-admitting them at their current position
+with no recompute.
 
 `SimCluster` drives N `PipelineSimulator` replicas in causally-consistent
-virtual time: before each routing decision every replica is advanced to the
-arrival instant, so the router sees the state a real frontend would.
+virtual time: before each routing decision (and each control-plane tick)
+every replica is advanced to that instant, so the router sees the state a
+real frontend would; migration pays the modeled KV-transfer latency.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import enum
+import heapq
+import itertools
 from dataclasses import dataclass
 from typing import Any, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import Request, SamplingParams
+from repro.core import KVExport, Request, SamplingParams
 
 
 class RoutingPolicy(enum.Enum):
@@ -40,14 +56,16 @@ class BalanceWeights:
     A decode-resident request represents future work (its remaining output
     tokens) — `decode_tokens` is the prefill-token-equivalent charged per
     resident decode; calibrate it to ~E[remaining output length] of the
-    workload (the default suits chat-style ~240-token outputs).
-    `kv_pressure` inflates the score of replicas close to the UT stall
-    point, where admission would trigger the throttle guard or
-    preemption-recompute churn (paper Fig. 15's no-UT pathology, avoided
-    cluster-wide).  The pressure is *threshold-relative* — it engages below
-    `kv_activation_margin` times the replica's own KV threshold — so a
-    structurally smaller pool is not penalized while it still has headroom
-    (the asymmetric-KV heterogeneity case of fig_router_balance.py).
+    workload (the default suits chat-style ~240-token outputs; with a
+    `RebalancePolicy` the router calibrates it online from an EWMA of
+    observed output lengths).  `kv_pressure` inflates the score of replicas
+    close to the UT stall point, where admission would trigger the throttle
+    guard or preemption-recompute churn (paper Fig. 15's no-UT pathology,
+    avoided cluster-wide).  The pressure is *threshold-relative* — it
+    engages below `kv_activation_margin` times the replica's own KV
+    threshold — so a structurally smaller pool is not penalized while it
+    still has headroom (the asymmetric-KV heterogeneity case of
+    fig_router_balance.py).
     """
 
     decode_tokens: float = 128.0
@@ -56,22 +74,117 @@ class BalanceWeights:
 
 
 @dataclass(frozen=True)
+class ReplicaCapacity:
+    """Static capacity hint for one replica, stated as hardware facts.
+
+    The router only consumes the derived `scalar()` (throughput relative to
+    a 1.0 reference replica), but callers declare what they actually know —
+    relative FLOPs, KV pool size, pipeline depth — and the constructors
+    derive the scalar, so benchmark configs stay in the language of the
+    heterogeneity they model (fig_router_balance's slow / straggler cases).
+    """
+
+    rel_flops: float = 1.0
+    kv_pool_pages: Optional[int] = None
+    pipeline_depth: Optional[int] = None
+
+    @staticmethod
+    def scaled(slow_factor: float, **kw) -> "ReplicaCapacity":
+        """Uniformly `slow_factor`x slower silicon."""
+        return ReplicaCapacity(rel_flops=1.0 / slow_factor, **kw)
+
+    @staticmethod
+    def straggler(pp: int, slow_factor: float, **kw) -> "ReplicaCapacity":
+        """One of `pp` stages is `slow_factor`x slower.  A fully *packed*
+        ring is gated by the slow stage alone (1/slow_factor), but serving
+        pipelines spend much of their time decode-bubbled, where per-batch
+        latency — the sum of stages, (pp-1+f)/pp relative — is what gates
+        throughput; this hint uses that sum-of-stages ratio,
+        pp / (pp - 1 + slow_factor), which fig_router_balance validates
+        empirically.  Use `scaled(slow_factor)` for a pipeline you expect
+        to stay packed."""
+        return ReplicaCapacity(rel_flops=pp / (pp - 1 + slow_factor),
+                               pipeline_depth=pp, **kw)
+
+    def scalar(self) -> float:
+        return self.rel_flops
+
+
+@dataclass(frozen=True)
+class RebalancePolicy:
+    """Control-plane knobs: when to act and how much state to move.
+
+    A pass triggers when max/min balance score exceeds `trigger_ratio`
+    (with an absolute `min_score_gap` floor so near-idle clusters don't
+    ping-pong).  Steals are cheap (waiting requests carry no device state),
+    so up to `steal_batch` happen first; live migrations move KV over the
+    interconnect, so they carry hysteresis: they fire only past the higher
+    `migrate_trigger_ratio` (imbalance that stealing alone could not clear),
+    are rationed to `migrate_batch` per pass, prefer requests with the most
+    output still to generate (durable relief per transfer; at least
+    `min_remaining_tokens`), and each request moves at most
+    `max_request_migrations` times — without that cap a relieved replica
+    looks attractive again next pass and the same KV bounces back and
+    forth.  `calibrate_decode_weight` keeps `BalanceWeights.decode_tokens`
+    tracking an EWMA of observed output lengths (charged at half: the
+    expected *remaining* length of a request in steady state).
+    """
+
+    interval: float = 0.25
+    trigger_ratio: float = 1.5
+    min_score_gap: float = 256.0
+    steal_batch: int = 8
+    migrate: bool = True
+    migrate_trigger_ratio: float = 2.5
+    migrate_batch: int = 2
+    min_remaining_tokens: int = 16
+    max_request_migrations: int = 1
+    calibrate_decode_weight: bool = True
+    ewma_alpha: float = 0.01
+
+
+def remaining_decode_growth(sched) -> int:
+    """KV tokens the resident decode population will still append before
+    finishing (bounded by each request's max_new_tokens) — the forward-
+    looking half of every KV projection below."""
+    return sum(r.sampling.max_new_tokens - r.num_output_tokens
+               for r in sched.running_decode)
+
+
+def kv_activation(weights: BalanceWeights, kv_threshold: float) -> float:
+    """Free-rate level below which the pressure term engages: a margin
+    above the replica scheduler's own UT stall point."""
+    return min(1.0, weights.kv_activation_margin * kv_threshold)
+
+
+@dataclass(frozen=True)
 class ReplicaSnapshot:
-    """The router's view of one replica at a routing instant."""
+    """The router's view of one replica at a routing instant.
+
+    `projected_kv_free` looks past the instantaneous idle rate: resident
+    decodes keep appending KV until they finish, so a structurally small
+    pool that *looks* idle can be minutes from the UT stall.  The projection
+    subtracts `remaining_decode_growth` — the KV-aware signal both
+    admission and the rebalance control plane score against.
+    """
 
     waiting_prefill_tokens: int
     running_decode: int
     kv_free_rate: float
     kv_threshold: float = 0.05      # the replica scheduler's UT stall point
+    projected_kv_free: Optional[float] = None
 
     @staticmethod
     def of(replica) -> "ReplicaSnapshot":
         sched = replica.scheduler
+        pool = sched.kv.num_pages * sched.kv.page_size
+        growth = remaining_decode_growth(sched)
         return ReplicaSnapshot(
             waiting_prefill_tokens=sched.num_waiting_prefill_tokens,
             running_decode=sched.num_running_decode,
             kv_free_rate=sched.kv.kv_free_rate,
             kv_threshold=sched.cfg.kv_threshold,
+            projected_kv_free=sched.kv.kv_free_rate - growth / pool,
         )
 
 
@@ -82,20 +195,39 @@ def balance_score(snap: ReplicaSnapshot, prompt_tokens: int,
     by proximity to the KV stall point.  Lower is better."""
     load = (snap.waiting_prefill_tokens + prompt_tokens
             + weights.decode_tokens * snap.running_decode)
-    activation = min(1.0, weights.kv_activation_margin * snap.kv_threshold)
-    shortfall = max(0.0, activation - snap.kv_free_rate) / max(activation,
-                                                               1e-9)
+    activation = kv_activation(weights, snap.kv_threshold)
+    free = snap.kv_free_rate
+    if snap.projected_kv_free is not None:
+        # decode residents keep growing their KV: pressure engages on where
+        # the pool is *heading*, not only where it is
+        free = min(free, snap.projected_kv_free)
+    shortfall = max(0.0, activation - free) / max(activation, 1e-9)
     pressure = 1.0 + weights.kv_pressure * shortfall
     return load * pressure / max(capacity, 1e-9)
+
+
+@dataclass
+class RebalanceStats:
+    passes: int = 0
+    stolen: int = 0
+    migrated: int = 0
+    migrated_tokens: int = 0        # KV tokens shipped over the interconnect
+    migration_fallbacks: int = 0    # destination pool shrank in transit
 
 
 class ReplicaRouter:
     """Fronts N serving replicas; routes by global balance score.
 
-    A replica is anything exposing `scheduler` (a `PipelineScheduler`);
+    A replica is anything exposing `scheduler` (a `PipelineScheduler`) and
+    `backend` (an `ExecutionBackend` — the migration hooks live there);
     engine replicas additionally expose `add_request`/`step`/`has_work`/
     `busy` so the router can serve as a drop-in engine for `AsyncFrontend`
     and the launchers.
+
+    With `rebalance=RebalancePolicy(...)` the router runs the periodic
+    control plane: step-driven replicas (engines) get control ticks from
+    `step()` on the backend clock; `SimCluster` drives them explicitly in
+    virtual time via `next_control_event`/`control_tick`.
     """
 
     def __init__(
@@ -104,7 +236,8 @@ class ReplicaRouter:
         policy: str | RoutingPolicy = RoutingPolicy.BALANCED,
         *,
         weights: Optional[BalanceWeights] = None,
-        capacities: Optional[Sequence[float]] = None,
+        capacities: Optional[Sequence[Any]] = None,
+        rebalance: Optional[RebalancePolicy] = None,
         trace_path: Optional[str] = None,
     ) -> None:
         if not replicas:
@@ -113,12 +246,24 @@ class ReplicaRouter:
         self.policy = RoutingPolicy(policy)
         self.weights = weights or BalanceWeights()
         n = len(self.replicas)
-        self.capacities = list(capacities) if capacities is not None \
+        self.capacity_hints = list(capacities) if capacities is not None \
             else [1.0] * n
-        if len(self.capacities) != n:
+        if len(self.capacity_hints) != n:
             raise ValueError("one capacity per replica")
+        self.capacities = [c.scalar() if isinstance(c, ReplicaCapacity)
+                           else float(c) for c in self.capacity_hints]
         self._rr_next = 0
         self.routed_counts = [0] * n
+        self.rebalance_policy = rebalance
+        self.rebalance_stats = RebalanceStats()
+        self._next_due = rebalance.interval if rebalance is not None else None
+        self._in_transit: List[Tuple[float, int, int, Request, KVExport,
+                                     Any, Any]] = []
+        self._transit_seq = itertools.count()
+        self._migrations_of: dict = {}      # rid -> times live-migrated
+        self._seen_finished = [0] * n
+        self._ewma_output: Optional[float] = None
+        self._calib_count = 0
         self._trace = None
         if trace_path is not None:
             self.open_trace(trace_path)
@@ -126,20 +271,24 @@ class ReplicaRouter:
     # ---------------------------------------------------------------- tracing
     def open_trace(self, sink) -> None:
         """Log every placement decision (per-replica scores + chosen index)
-        to a `gllm-route` JSONL stream — the routing counterpart of the
-        per-replica tick traces (runtime/trace.py)."""
+        and every control-plane pass to a `gllm-route` JSONL stream — the
+        routing counterpart of the per-replica tick traces
+        (runtime/trace.py)."""
         from repro.runtime.trace import (ROUTE_SCHEMA, SCHEMA_MAJOR,
                                          SCHEMA_MINOR, TraceWriter)
         assert self._trace is None, "router trace already open"
         self._trace = TraceWriter(sink)
-        self._trace.write({
+        header = {
             "kind": "header",
             "schema": ROUTE_SCHEMA,
             "version": [SCHEMA_MAJOR, SCHEMA_MINOR],
             "replicas": len(self.replicas),
             "policy": self.policy.value,
             "capacities": list(self.capacities),
-        })
+        }
+        if self.rebalance_policy is not None:
+            header["rebalance"] = dataclasses.asdict(self.rebalance_policy)
+        self._trace.write(header)
 
     def close_trace(self) -> None:
         if self._trace is not None:
@@ -166,6 +315,301 @@ class ReplicaRouter:
                                "scores": scores, "replica": i})
         return i
 
+    # -------------------------------------------------- control plane ticking
+    @property
+    def has_in_transit(self) -> bool:
+        return bool(self._in_transit)
+
+    def next_control_event(self) -> Optional[float]:
+        """Earliest instant the control plane must run: the next periodic
+        pass, or an in-flight migration completing.  None without a
+        `RebalancePolicy` and nothing in transit."""
+        cands = [t for t, *_ in self._in_transit]
+        if self.rebalance_policy is not None and self._next_due is not None:
+            cands.append(self._next_due)
+        return min(cands) if cands else None
+
+    def control_tick(self, now: float) -> None:
+        """Run everything due at `now`: deliver completed migrations, then a
+        rebalance pass if the interval elapsed."""
+        self._flush_in_transit(now)
+        if self.rebalance_policy is None or now < self._next_due:
+            return
+        self.rebalance(now)
+        # re-anchor arithmetically: engine clocks are time.monotonic(), so
+        # `now` can be arbitrarily far past the virtual-time-zero anchor —
+        # a += loop would spin once per elapsed interval
+        interval = self.rebalance_policy.interval
+        missed = int((now - self._next_due) // interval) + 1
+        self._next_due += missed * interval
+
+    # ------------------------------------------------------------- rebalance
+    def _imbalance(self, trigger_ratio: float
+                   ) -> Optional[Tuple[int, int, List[float]]]:
+        """(overloaded, underloaded, scores) when the spread warrants a
+        move, else None."""
+        pol = self.rebalance_policy
+        scores = self.scores(0)
+        src = int(np.argmax(scores))
+        dst = int(np.argmin(scores))
+        if src == dst:
+            return None
+        if scores[src] - scores[dst] < pol.min_score_gap:
+            return None
+        if scores[src] <= trigger_ratio * max(scores[dst], 1e-9):
+            return None
+        return src, dst, scores
+
+    def rebalance(self, now: float) -> None:
+        """One control-plane pass: calibrate weights, steal waiting work,
+        then live-migrate decode state while imbalance persists."""
+        pol = self.rebalance_policy
+        self._calibrate()
+        self.rebalance_stats.passes += 1
+        stolen = migrated = 0
+        trigger = self._imbalance(pol.trigger_ratio)
+        while trigger is not None and stolen < pol.steal_batch:
+            src, dst, scores = trigger
+            if not self._steal_one(src, dst, now, scores[src]):
+                break
+            stolen += 1
+            trigger = self._imbalance(pol.trigger_ratio)
+        if pol.migrate:
+            trigger = self._imbalance(pol.migrate_trigger_ratio)
+            while trigger is not None and migrated < pol.migrate_batch:
+                src, dst, scores = trigger
+                if not self._migrate_one(src, dst, now, scores[src]):
+                    break
+                migrated += 1
+                trigger = self._imbalance(pol.migrate_trigger_ratio)
+        if self._trace is not None and (stolen or migrated):
+            self._trace.write({"kind": "rebalance", "now": now,
+                               "stolen": stolen, "migrated": migrated,
+                               "decode_tokens": self.weights.decode_tokens})
+
+    def _calibrate(self) -> None:
+        """Walk newly finished requests: retire their control-plane
+        bookkeeping, and feed output lengths into a debiased EWMA ->
+        decode_tokens weight (charged at half: a request's expected
+        *remaining* output in steady state).  During warm-up (the first
+        1/alpha completions) the EWMA is the plain running mean — a
+        recency-weighted average over few samples would chase completion
+        order, which anti-correlates with length (short outputs finish
+        first, long ones dominate the drain tail)."""
+        pol = self.rebalance_policy
+        calibrate = pol is not None and pol.calibrate_decode_weight
+        for i, r in enumerate(self.replicas):
+            fin = _finished_of(r)
+            for req in fin[self._seen_finished[i]:]:
+                # migration counts only matter while the request is alive
+                self._migrations_of.pop(req.request_id, None)
+                if not calibrate:
+                    continue
+                n = req.num_output_tokens
+                self._calib_count += 1
+                alpha = max(pol.ewma_alpha, 1.0 / self._calib_count)
+                if self._ewma_output is None:
+                    self._ewma_output = float(n)
+                else:
+                    self._ewma_output += alpha * (n - self._ewma_output)
+            self._seen_finished[i] = len(fin)
+        if calibrate and self._ewma_output is not None:
+            self.weights = dataclasses.replace(
+                self.weights,
+                decode_tokens=max(1.0, self._ewma_output / 2.0))
+
+    # ------------------------------------------------------------- stealing
+    def _servable_on(self, replica, req: Request) -> bool:
+        sched = replica.scheduler
+        total = req.num_effective_prompt_tokens + req.sampling.max_new_tokens
+        return (total <= sched.max_model_len
+                and total <= sched.kv.num_pages * sched.kv.page_size)
+
+    def _improves_max(self, src_i: int, dst_i: int, req: Request,
+                      src_score: float) -> bool:
+        """A move must reduce the cluster's worst score: after receiving the
+        request, the destination has to remain clearly below the source —
+        otherwise the move just relocates the hot spot (and a big request
+        landing on a marginally-less-loaded replica makes the tail worse)."""
+        burden = (req.remaining_prefill_tokens
+                  + self.weights.decode_tokens * bool(req.prefill_done))
+        after = balance_score(ReplicaSnapshot.of(self.replicas[dst_i]),
+                              int(burden), self.weights,
+                              self.capacities[dst_i])
+        return after < src_score
+
+    def _dst_headroom_ok(self, dst, req: Request) -> bool:
+        """KV-aware destination guard: after absorbing everything this
+        request will still write (remaining prefill + all remaining
+        outputs), plus the projected growth of the destination's own decode
+        residents, the pool must stay out of the pressure band — moving
+        work into a pool that is heading for its UT stall trades one hot
+        spot for a worse one (admission there will gate anyway)."""
+        sched = dst.scheduler
+        pool = sched.kv.num_pages * sched.kv.page_size
+        need = (req.num_effective_prompt_tokens + req.sampling.max_new_tokens
+                - req.num_prefilled)
+        projected = sched.kv.kv_free_rate - (
+            remaining_decode_growth(sched) + need) / pool
+        return projected > kv_activation(self.weights,
+                                         sched.cfg.kv_threshold)
+
+    def _steal_one(self, src_i: int, dst_i: int, now: float,
+                   src_score: float) -> bool:
+        """Move one *waiting* request (no device state) off the saturated
+        replica.  Cheap: drain from the source queue tail, adopt at the
+        destination queue tail."""
+        src, dst = self.replicas[src_i], self.replicas[dst_i]
+        for req in src.scheduler.steal_candidates():
+            if not self._servable_on(dst, req):
+                continue
+            if not self._improves_max(src_i, dst_i, req, src_score) \
+                    or not self._dst_headroom_ok(dst, req):
+                continue
+            drained = src.scheduler.drain_request(req.request_id)
+            if drained is None:
+                continue
+            # waiting requests carry no KV, but host-side per-request state
+            # (encoder embeddings) must follow them or the destination
+            # prefills without it
+            state = src.backend.export_request_state(drained)
+            _record_migrate_out(src, drained.request_id, now)
+            dst.backend.import_request_state(drained, state, resident=False)
+            dst.scheduler.adopt_request(drained)
+            _record_migrate_in(dst, drained, now)
+            _advance_replica_clock(dst, now)
+            self.rebalance_stats.stolen += 1
+            return True
+        return False
+
+    # ------------------------------------------------------------- migration
+    def _source_pressured(self, src) -> bool:
+        """Live migration moves state, so it needs *persistent* saturation,
+        not a cosmetic decode-population spread: the source must still have
+        admission work it cannot start (waiting queue survived the steal
+        phase) or be inside the KV pressure band (resident decode is
+        forcing the UT guard / preemption churn).  Without this gate a
+        discovery-only straggler cluster migrates in the wrong direction —
+        the *fast* replica carries more decode and looks overloaded."""
+        sched = src.scheduler
+        if sched.waiting:
+            return True
+        return sched.kv.kv_free_rate <= kv_activation(
+            self.weights, sched.cfg.kv_threshold)
+
+    def _migration_candidates(self, src) -> List[Request]:
+        pol = self.rebalance_policy
+        if not self._source_pressured(src):
+            return []
+        out = [r for r in src.scheduler.running_decode
+               if (r.sampling.max_new_tokens - r.num_output_tokens)
+               >= pol.min_remaining_tokens
+               and self._migrations_of.get(r.request_id, 0)
+               < pol.max_request_migrations]
+        # most remaining output first: each transfer should buy the most
+        # durable relief (ties broken toward smaller resident KV = cheaper)
+        out.sort(key=lambda r: (r.num_output_tokens
+                                - r.sampling.max_new_tokens,
+                                r.num_prefilled))
+        return out
+
+    def _migrate_one(self, src_i: int, dst_i: int, now: float,
+                     src_score: float) -> bool:
+        """Policy layer of migration: pick a candidate worth moving and
+        hand it to `migrate_request`."""
+        src, dst = self.replicas[src_i], self.replicas[dst_i]
+        for req in self._migration_candidates(src):
+            if not self._servable_on(dst, req):
+                continue
+            if not dst.scheduler.kv.can_allocate(req.request_id,
+                                                 req.num_prefilled):
+                continue
+            if not self._improves_max(src_i, dst_i, req, src_score) \
+                    or not self._dst_headroom_ok(dst, req):
+                continue
+            if self.migrate_request(req.request_id, src_i, dst_i, now=now):
+                return True
+        return False
+
+    def migrate_request(self, rid: str, src_i: int, dst_i: int,
+                        *, now: Optional[float] = None) -> bool:
+        """Mechanism layer: live-migrate one request (§9 protocol):
+        drain -> export KV addressing -> gather device pages -> free source
+        -> (transfer latency) -> import at destination -> adopt, resuming at
+        the current position with no recompute.  Returns False when the
+        request is in flight this tick (the caller may retry next pass).
+        Public so operators and tests can force a move the policy would
+        not pick."""
+        if now is None:
+            now = self._clock()
+        src = self.replicas[src_i]
+        drained = src.scheduler.drain_request(rid)
+        if drained is None:
+            return False
+        if not src.scheduler.kv.has_request(rid):
+            # nothing resident (a waiting request): this is just a steal
+            dst = self.replicas[dst_i]
+            state = src.backend.export_request_state(drained)
+            _record_migrate_out(src, rid, now)
+            dst.backend.import_request_state(drained, state, resident=False)
+            dst.scheduler.adopt_request(drained)
+            _record_migrate_in(dst, drained, now)
+            _advance_replica_clock(dst, now)
+            self.rebalance_stats.stolen += 1
+            return True
+        export = src.scheduler.kv.export_kv(rid)
+        payload = src.backend.export_kv_pages(rid, export.slots)
+        state = src.backend.export_request_state(drained)
+        delay = src.backend.migration_cost(export.num_tokens)
+        src.scheduler.kv.free(rid)
+        _record_migrate_out(src, rid, now)
+        self._migrations_of[rid] = self._migrations_of.get(rid, 0) + 1
+        self.rebalance_stats.migrated += 1
+        self.rebalance_stats.migrated_tokens += export.num_tokens
+        if delay <= 0.0:
+            self._deliver(dst_i, drained, export, payload, state, now)
+        else:
+            heapq.heappush(self._in_transit,
+                           (now + delay, next(self._transit_seq), dst_i,
+                            drained, export, payload, state))
+        return True
+
+    def _flush_in_transit(self, now: float) -> None:
+        while self._in_transit and self._in_transit[0][0] <= now:
+            at, _, dst_i, req, export, payload, state = heapq.heappop(
+                self._in_transit)
+            self._deliver(dst_i, req, export, payload, state, max(at, now))
+
+    def _deliver(self, dst_i: int, req: Request, export: KVExport,
+                 payload: Any, state: Any, now: float) -> None:
+        dst = self.replicas[dst_i]
+        kv = dst.scheduler.kv
+        rid = req.request_id
+        imported = False
+        if kv.can_allocate(rid, export.num_tokens):
+            dst_slots = kv.import_kv(export)
+            try:
+                dst.backend.import_kv_pages(rid, payload, dst_slots)
+                dst.backend.import_request_state(req, state)
+                imported = True
+            except MemoryError:
+                # destination ran out of per-request device state (e.g.
+                # recurrent-state slots, which the KV headroom checks don't
+                # cover): release the pages and degrade below
+                kv.free(rid)
+        if not imported:
+            # destination capacity shrank in transit: fall back to recompute
+            # admission (correctness preserved — outputs fold into the
+            # effective prompt exactly like a preemption).  resident=False:
+            # recompute rebuilds recurrent state from scratch, so only
+            # recompute-surviving state (encoder embeddings) attaches.
+            req.preempt()
+            self.rebalance_stats.migration_fallbacks += 1
+            dst.backend.import_request_state(req, state, resident=False)
+        dst.scheduler.adopt_request(req)
+        _record_migrate_in(dst, req, now)
+        _advance_replica_clock(dst, now)
+
     # ------------------------------------------------- engine-cluster surface
     def add_request(self, prompt: Sequence[int],
                     sampling: Optional[SamplingParams] = None,
@@ -186,15 +630,21 @@ class ReplicaRouter:
 
     @property
     def has_work(self) -> bool:
-        return any(r.has_work for r in self.replicas)
+        return any(r.has_work for r in self.replicas) or self.has_in_transit
 
     @property
     def busy(self) -> bool:
         return any(r.busy for r in self.replicas)
 
+    def _clock(self) -> float:
+        return max(r.backend.clock() for r in self.replicas)
+
     def step(self) -> List[Request]:
         """One tick on every replica that has work (the single-process
-        analogue of N independent driver loops)."""
+        analogue of N independent driver loops), preceded by any due
+        control-plane work on the backend clock."""
+        if self.rebalance_policy is not None or self._in_transit:
+            self.control_tick(self._clock())
         out: List[Request] = []
         for r in self.replicas:
             if r.has_work or r.busy:
@@ -213,19 +663,60 @@ class ReplicaRouter:
     def finished(self) -> List[Request]:
         out: List[Request] = []
         for r in self.replicas:
-            out.extend(r.finished)
+            out.extend(_finished_of(r))
         return out
+
+
+# --------------------------------------------------------------------------
+# Replica plumbing helpers (engines and simulators expose slightly different
+# surfaces; the control plane treats them uniformly through these)
+# --------------------------------------------------------------------------
+
+def _finished_of(replica) -> List[Request]:
+    fin = getattr(replica, "finished", None)
+    if fin is not None:
+        return fin
+    return replica.metrics.finished
+
+
+def _advance_replica_clock(replica, now: float) -> None:
+    """A request materialized on this replica at `now` by control-plane
+    action (not an arrival): virtual-time backends must not tick earlier
+    than that.  Wall-clock backends ignore it."""
+    fn = getattr(replica, "advance_clock", None)
+    if fn is not None:
+        fn(now)
+
+
+def _record_migrate_out(replica, rid: str, now: float) -> None:
+    rec = getattr(replica, "recorder", None)
+    if rec is not None:
+        rec.record_migrate_out(rid, now)
+
+
+def _record_migrate_in(replica, req: Request, now: float) -> None:
+    rec = getattr(replica, "recorder", None)
+    if rec is not None:
+        rec.record_migrate_in(req, now)
 
 
 class SimCluster:
     """N `PipelineSimulator` replicas behind a `ReplicaRouter`, driven in
     causally-consistent virtual time: each arrival first advances every
-    replica to the arrival instant, then routes on the resulting state."""
+    replica to the arrival instant, then routes on the resulting state.
+    Control-plane events (periodic rebalance passes, migration deliveries)
+    are interleaved at their own instants the same way."""
 
     def __init__(self, sims: Sequence[Any], router: ReplicaRouter,
                  *, trace_dir: Optional[str] = None) -> None:
         self.sims = list(sims)
         self.router = router
+        for i, sim in enumerate(self.sims):
+            # migration needs cluster-unique request ids: namespace each
+            # replica's default id stream (engines already share a
+            # process-wide counter)
+            if getattr(sim, "rid_prefix", None) == "r":
+                sim.rid_prefix = f"r{i}:"
         if trace_dir is not None:
             # one tick trace per replica + the router's placement stream —
             # together they capture the whole cluster run for offline replay
@@ -238,17 +729,49 @@ class SimCluster:
                 router.open_trace(
                     os.path.join(trace_dir, "router.trace.jsonl"))
 
+    def _advance_to(self, t: float) -> None:
+        """Advance every replica to `t`, running control-plane events
+        (rebalance passes, migration deliveries) at their due instants."""
+        while True:
+            due = self.router.next_control_event()
+            if due is None or due > t:
+                break
+            for sim in self.sims:
+                sim.run_until(due)
+            self.router.control_tick(due)
+        for sim in self.sims:
+            sim.run_until(t)
+
+    @property
+    def _cluster_busy(self) -> bool:
+        return self.router.has_in_transit or any(
+            s.sched.has_work or s.loop.busy or s._arrivals
+            for s in self.sims)
+
     def run(self, arrivals: Iterable[Tuple[float, List[int], int]],
             until: float = float("inf")) -> List[Request]:
         """arrivals: (time, prompt_tokens, output_len), any order.
         Returns all finished requests across replicas."""
+        t = 0.0
         for t, prompt, out_len in sorted(arrivals, key=lambda a: a[0]):
             if t > until:
                 break
-            for sim in self.sims:
-                sim.run_until(t)
+            self._advance_to(t)
             i = self.router.select(len(prompt))
             self.sims[i].inject_request(t, prompt, out_len)
+        pol = self.router.rebalance_policy
+        if pol is None:
+            for sim in self.sims:
+                sim.run(until)
+            return self.finished
+        # drain with the control plane still ticking: advance in interval
+        # steps so rebalance keeps seeing fresh state until the last replica
+        # goes idle
+        for _ in range(10_000_000):
+            if not self._cluster_busy or t > until:
+                break
+            t += pol.interval
+            self._advance_to(min(t, until))
         for sim in self.sims:
             sim.run(until)
         return self.finished

@@ -307,6 +307,15 @@ class SimBackend(ExecutionBackend):
         self.time = max(self.time, now)
         self.metrics.sim_time = max(self.metrics.sim_time, self.time)
 
+    def migration_cost(self, num_tokens: int) -> float:
+        """Modeled seconds to ship a request's KV off this replica: per-stage
+        KV bytes × pipeline depth (every stage holds its own layers' pages)
+        over the interconnect, plus the fixed per-transfer floor.  This is
+        the price `RebalancePolicy` trades against the imbalance it removes —
+        tunable entirely in sim."""
+        total_bytes = self.cost.kv_bytes_per_ctx_token * self.pp * num_tokens
+        return total_bytes / self.cost.net_bw + self.cost.fixed_us * 1e-6
+
     # -------------------------------------------------------------- internals
     def _batch_time(self, stage: int, batch: ScheduledBatch) -> float:
         p_ctx = max((s.start_pos + s.num_tokens for s in batch.prefill),
@@ -355,6 +364,11 @@ class PipelineSimulator:
         self._arrivals: List[Tuple[float, int, List[int], int]] = []
         self._failures: List[Tuple[float, float]] = []
         self._seq = itertools.count(1)
+        # Request-id namespace.  Ids must be unique *cluster*-wide once live
+        # migration can move a request between replicas (a namesake on the
+        # destination would corrupt its block table) — `SimCluster`
+        # re-prefixes fresh replicas to guarantee it.
+        self.rid_prefix = "r"
 
     def attach_trace(self, trace_path) -> None:
         """Start recording this replica's ticks (before any work has run —
@@ -370,6 +384,12 @@ class PipelineSimulator:
     @property
     def scheduler(self) -> PipelineScheduler:   # replica-router signal surface
         return self.sched
+
+    def advance_clock(self, t: float) -> None:
+        """Control-plane causality: a request materialized here at `t` (a
+        steal or migration delivery) — this replica must not tick earlier."""
+        self.backend.time = max(self.backend.time, t)
+        self.metrics.sim_time = max(self.metrics.sim_time, self.backend.time)
 
     # ------------------------------------------------------------------ intake
     def add_workload(self, arrivals: List[Tuple[float, List[int], int]]):
@@ -430,7 +450,7 @@ class PipelineSimulator:
             at, _, prompt, out_len = heapq.heappop(self._arrivals)
             if at > until:
                 continue            # past the measurement horizon: dropped
-            req = Request(f"r{next(self._seq)}", prompt,
+            req = Request(f"{self.rid_prefix}{next(self._seq)}", prompt,
                           SamplingParams(max_new_tokens=out_len))
             req.metrics.arrival_time = at
             self.metrics.total_input_tokens += len(prompt)

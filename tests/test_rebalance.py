@@ -1,0 +1,50 @@
+"""Control-plane rebalance smoke (benchmarks/fig_rebalance.py — the
+`make rebalance-check` CI gate, exercised in-process).
+
+Deterministic seeds, sized to run fast: on the discovery-only straggler
+cluster, periodic steal+migrate must beat admission-only routing on p95
+TTFT, and on the tight-KV-pool variant live migration must actually fire.
+These are regression tests on the control-plane policy (the sim replays
+exactly), not statistical claims.
+"""
+
+import pytest
+
+from benchmarks.fig_rebalance import check, run_cluster
+from repro.runtime.router import RebalancePolicy
+
+
+def test_steal_plus_migrate_beats_admission_only_p95():
+    adm = run_cluster("admission", 45.0, num_requests=150, seed=0)
+    smg = run_cluster("steal+mig", 45.0, num_requests=150, seed=0)
+    assert len(adm.finished) == len(smg.finished) == 150
+    assert smg.ttft_quantile(0.95) < adm.ttft_quantile(0.95)
+    rs = smg.router.rebalance_stats
+    assert rs.passes > 0 and rs.stolen + rs.migrated > 0
+
+
+def test_tight_pool_exercises_live_migration():
+    adm = run_cluster("admission", 60.0, pages=2048, num_requests=150,
+                      seed=0)
+    smg = run_cluster("steal+mig", 60.0, pages=2048, num_requests=150,
+                      seed=0)
+    rs = smg.router.rebalance_stats
+    assert rs.migrated > 0 and rs.migrated_tokens > 0
+    assert rs.migration_fallbacks == 0
+    assert smg.ttft_quantile(0.95) < adm.ttft_quantile(0.95)
+
+
+def test_ci_gate_passes():
+    assert check()
+
+
+def test_steal_only_policy_never_migrates():
+    c = run_cluster("steal", 60.0, pages=2048, num_requests=100, seed=0)
+    rs = c.router.rebalance_stats
+    assert rs.migrated == 0
+
+
+def test_rebalance_policy_defaults_are_sane():
+    pol = RebalancePolicy()
+    assert pol.migrate_trigger_ratio >= pol.trigger_ratio
+    assert pol.interval > 0 and pol.max_request_migrations >= 1

@@ -1,0 +1,113 @@
+"""Trace compaction: delta-encoded tick records must be a *lossless*
+re-encoding — same records, same bytes after expansion, same replay
+behavior — on the checked-in golden fixtures and on freshly recorded runs.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.runtime.trace import (
+    Trace,
+    TraceSchemaError,
+    check_trace,
+    compact_records,
+    dumps_record,
+    expand_records,
+)
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+FIXTURES = ["prefill_heavy.trace.jsonl", "decode_saturated.trace.jsonl"]
+
+
+def fixture_path(name):
+    return os.path.join(HERE, "fixtures", "traces", name)
+
+
+def raw_records(path):
+    with open(path) as fh:
+        return [json.loads(line) for line in fh if line.strip()]
+
+
+@pytest.mark.parametrize("name", FIXTURES)
+class TestLosslessRoundTrip:
+    def test_expand_inverts_compact_exactly(self, name):
+        records = raw_records(fixture_path(name))
+        compacted = compact_records(records)
+        expanded = expand_records(compacted)
+        # byte-level identity, not just ==: field order is part of the
+        # round-trip guarantee (dumps_record serializes insertion order)
+        want = [dumps_record(r) for r in records]
+        got = [dumps_record(r) for r in expanded]
+        assert got == want
+
+    def test_compaction_actually_shrinks(self, name):
+        records = raw_records(fixture_path(name))
+        compacted = compact_records(records)
+        raw = sum(len(dumps_record(r)) for r in records)
+        small = sum(len(dumps_record(r)) for r in compacted)
+        # steady-state decode ticks repeat most scalar fields; prefill-heavy
+        # ticks change their batch every record, so less drops out
+        budget = {"prefill_heavy.trace.jsonl": 0.95,
+                  "decode_saturated.trace.jsonl": 0.82}[name]
+        assert small < budget * raw, (small, raw)
+
+    def test_compacted_trace_loads_transparently(self, name, tmp_path):
+        records = raw_records(fixture_path(name))
+        compacted = compact_records(records)
+        out = tmp_path / name
+        out.write_text("\n".join(dumps_record(r) for r in compacted) + "\n")
+        trace = Trace.load(str(out))
+        assert "compact" not in trace.header
+        assert trace.dumps() == Trace.load(fixture_path(name)).dumps()
+
+    def test_compacted_trace_passes_strict_replay_gate(self, name,
+                                                       tmp_path):
+        records = raw_records(fixture_path(name))
+        compacted = compact_records(records)
+        out = tmp_path / name
+        out.write_text("\n".join(dumps_record(r) for r in compacted) + "\n")
+        report = check_trace(str(out))     # the `make trace-check` gate
+        assert report.ticks == len(Trace.load(fixture_path(name)).ticks)
+
+
+class TestCompactionEdges:
+    def test_compact_is_idempotent(self):
+        records = raw_records(fixture_path(FIXTURES[0]))
+        once = compact_records(records)
+        twice = compact_records(once)
+        assert twice == once
+
+    def test_non_canonical_tick_rejected(self):
+        records = raw_records(fixture_path(FIXTURES[0]))
+        # re-order one tick's keys: loses the byte-identity guarantee
+        for i, rec in enumerate(records):
+            if rec.get("kind") == "tick":
+                scrambled = dict(reversed(list(rec.items())))
+                records[i] = scrambled
+                break
+        with pytest.raises(TraceSchemaError):
+            compact_records(records)
+
+    def test_non_tick_records_pass_through(self):
+        records = raw_records(fixture_path(FIXTURES[0]))
+        compacted = compact_records(records)
+        want = [r for r in records if r["kind"] not in ("tick", "header")]
+        got = [r for r in compacted if r["kind"] not in ("tick", "header")]
+        assert got == want
+
+    def test_cli_compact_roundtrip(self, tmp_path):
+        src = fixture_path(FIXTURES[0])
+        out = str(tmp_path / "c.jsonl")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(HERE, "..", "src") + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        res = subprocess.run(
+            [sys.executable, "-m", "repro.runtime.trace", "compact", src,
+             "-o", out], capture_output=True, text=True, env=env)
+        assert res.returncode == 0, res.stderr
+        assert os.path.getsize(out) < os.path.getsize(src)
+        assert Trace.load(out).dumps() == Trace.load(src).dumps()
