@@ -7,7 +7,10 @@
 #                     any batching change in scheduler/throttle fails here
 #   make rebalance-check  sim-only control-plane smoke: steal+migrate must
 #                     beat admission-only p95 TTFT on the straggler cluster
+#   make examples-check  run the three examples end-to-end against the
+#                     public serving API (reduced engine on CPU)
 #   make ci           dev-deps + tier-1 + golden traces + rebalance smoke
+#                     + examples
 #   make bench        fast benchmark sweep (CSV rows on stdout)
 
 PY ?= python
@@ -17,7 +20,7 @@ export PYTHONPATH
 TRACE_FIXTURES := tests/fixtures/traces/prefill_heavy.trace.jsonl \
                   tests/fixtures/traces/decode_saturated.trace.jsonl
 
-.PHONY: dev-deps test trace-check rebalance-check ci bench
+.PHONY: dev-deps test trace-check rebalance-check examples-check ci bench
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -31,7 +34,12 @@ trace-check:
 rebalance-check:
 	$(PY) -m benchmarks.fig_rebalance --check
 
-ci: dev-deps test trace-check rebalance-check
+examples-check:
+	$(PY) examples/quickstart.py
+	$(PY) examples/serve_offline.py 8
+	$(PY) examples/serve_online.py
+
+ci: dev-deps test trace-check rebalance-check examples-check
 
 bench:
 	$(PY) -m benchmarks.run --fast

@@ -29,18 +29,31 @@ def main() -> int:
     args = ap.parse_args()
 
     if args.trace_out is not None:
+        # the reference calibration scenario, stated as a ServeSpec: a
+        # ShareGPT workload on the default sim geometry, recorded
         from repro.data.workload import SHAREGPT, sample_requests
-        from repro.runtime.simulator import record_sim_trace
+        from repro.serving import (EngineSpec, ServeSpec, SimSpec, TraceSpec,
+                                   build)
         n, rate = (60, 20.0) if args.fast else (200, 30.0)
-        sim = record_sim_trace(args.trace_out,
-                               sample_requests(SHAREGPT, n, rate, seed=0))
-        print(f"# recorded {sim.sched.stats.ticks} ticks "
-              f"({len(sim.metrics.finished)} requests) -> {args.trace_out}")
+        server = build(ServeSpec(
+            backend="sim",
+            engine=EngineSpec(arch="qwen2.5-14b", policy="gllm"),
+            sim=SimSpec(pp=4, pages=2048, page_size=16),
+            trace=TraceSpec(record=args.trace_out)))
+        server.engine.add_workload(sample_requests(SHAREGPT, n, rate, seed=0))
+        finished = server.drain()
+        server.close()
+        stats = server.stats().replicas[0]
+        print(f"# recorded {stats.ticks} ticks "
+              f"({len(finished)} requests) -> {args.trace_out}")
         return 0
     if args.trace_replay is not None:
-        from repro.runtime.trace import Trace, replay_trace
-        report = replay_trace(Trace.load(args.trace_replay))
-        print(f"# {report.summary()} — decisions match the recording")
+        from repro.serving import ServeSpec, TraceSpec, build
+        server = build(ServeSpec(backend="trace",
+                                 trace=TraceSpec(replay=args.trace_replay)))
+        server.replay()
+        print(f"# {server.last_report.summary()} — decisions match the "
+              f"recording")
         return 0
 
     from benchmarks import (fig01_volatility, fig10_latency_throughput,

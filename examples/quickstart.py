@@ -1,53 +1,46 @@
-"""Quickstart: build a tiny gLLM engine and generate with Token Throttling.
+"""Quickstart: one ServeSpec, one build(), generate with Token Throttling.
 
     PYTHONPATH=src python examples/quickstart.py
+
+The spec below resolves to a tiny exact engine (reduced Qwen family, same
+code path as the full TPU configs).  Swap `backend="sim"` to run the same
+scenario on the calibrated roofline simulator, or add
+`cluster=ClusterSpec(replicas=2)` for a balanced multi-replica cluster —
+the client API does not change.
 """
-import dataclasses
-
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import get_config, make_reduced
-from repro.core import SamplingParams, ThrottleConfig
-from repro.models import transformer as tfm
-from repro.models.serve import ServeDims
-from repro.runtime.engine import PipelineEngine
+from repro.serving import EngineSpec, SamplingParams, ServeSpec, build
 
 
 def main():
-    # a reduced Qwen-family model (same code path as the full configs)
-    cfg = make_reduced(get_config("qwen1.5-0.5b")).with_plan(
-        pp=1, tp=1, ep_over_data=False)
-    cfg = dataclasses.replace(cfg, dtype="float32")
-    mesh = jax.make_mesh((1, 1, 1), ("data", "stage", "tensor"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    dims = ServeDims(Sp=1, C=16, Sd=8, pages=256, page=8, Bp=32, Bd=32,
-                     slots=16)
-    with jax.set_mesh(mesh):
-        params = tfm.init_params(cfg, jax.random.key(0), dtype=jnp.float32)
-        params = jax.tree.map(
-            lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
-            params, tfm.param_pspecs(cfg),
-            is_leaf=lambda x: isinstance(x, P))
-        # the paper's hyperparameters, scaled to the toy bucket
-        throttle = ThrottleConfig(num_iters_T=2, max_prefill_tokens=16,
-                                  min_prefill_tokens=4, kv_threshold=0.05,
-                                  pipeline_depth=cfg.plan.pp)
-        engine = PipelineEngine(cfg, dims, params, mesh, throttle)
+    spec = ServeSpec(
+        backend="engine",
+        engine=EngineSpec(
+            arch="qwen1.5-0.5b",
+            # the paper's hyperparameters, scaled to the toy bucket
+            throttle=dict(num_iters_T=2, max_prefill_tokens=16,
+                          min_prefill_tokens=4, kv_threshold=0.05),
+            dims=dict(C=16, pages=256, Bp=32, Bd=32),
+        ),
+    )
+    print(f"spec: {spec.to_json()}")
+    server = build(spec)
 
     rng = np.random.default_rng(0)
-    reqs = [engine.add_request(list(rng.integers(0, cfg.vocab_size, n)),
-                               SamplingParams(max_new_tokens=8))
+    rids = [server.submit(list(rng.integers(0, server.cfg.vocab_size, n)),
+                          SamplingParams(max_new_tokens=8))
             for n in (12, 30, 7)]
-    engine.drain()
-    for r in reqs:
-        print(f"{r.request_id}: prompt={r.num_prompt_tokens:3d} tokens "
-              f"-> {r.output_token_ids}")
-    s = engine.stats
-    print(f"ticks={s.ticks} scheduled_prefill={s.scheduled_prefill} "
-          f"bucket_padding={s.padded_prefill} (the TPU 'bubble' metric)")
+    server.drain()
+    for out in server.outputs(rids):
+        print(f"{out.request_id}: prompt={len(out.prompt_token_ids):3d} "
+              f"tokens -> {out.token_ids} ({out.finish_reason})")
+    s = server.stats().replicas[0]
+    eng = server.replicas[0]
+    print(f"ticks={s.ticks} tokens_retired={s.tokens_retired} "
+          f"service_rate={s.service_rate:.0f} tok/s "
+          f"bucket_padding={eng.stats.padded_prefill} "
+          f"(the TPU 'bubble' metric)")
 
 
 if __name__ == "__main__":

@@ -1,63 +1,54 @@
-"""Offline batch serving: a ShareGPT-like workload through the real engine,
-with per-request latency metrics — the end-to-end driver for the paper's
-serving scenario (CPU-sized model, identical code path to the TPU configs).
+"""Offline batch serving through the public API: a ShareGPT-like workload
+on the real engine, with per-request latency metrics — the end-to-end
+driver for the paper's serving scenario (CPU-sized model, identical code
+path to the TPU configs).
 
     PYTHONPATH=src python examples/serve_offline.py [num_requests]
 """
-import dataclasses
 import sys
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import get_config, make_reduced
-from repro.core import SamplingParams, ThrottleConfig
-from repro.models import transformer as tfm
-from repro.models.serve import ServeDims
-from repro.runtime.engine import PipelineEngine
+from repro.serving import EngineSpec, SamplingParams, ServeSpec, build
 
 
 def main(n_requests: int = 16):
-    cfg = make_reduced(get_config("qwen2.5-14b"), d_model=128,
-                       d_ff=256).with_plan(pp=1, tp=1, ep_over_data=False)
-    cfg = dataclasses.replace(cfg, dtype="float32")
-    mesh = jax.make_mesh((1, 1, 1), ("data", "stage", "tensor"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    dims = ServeDims(Sp=2, C=32, Sd=16, pages=1024, page=8, Bp=64, Bd=64,
-                     slots=32)
-    with jax.set_mesh(mesh):
-        params = tfm.init_params(cfg, jax.random.key(0), dtype=jnp.float32)
-        params = jax.tree.map(
-            lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
-            params, tfm.param_pspecs(cfg),
-            is_leaf=lambda x: isinstance(x, P))
-        engine = PipelineEngine(
-            cfg, dims, params, mesh,
-            ThrottleConfig(num_iters_T=4, max_prefill_tokens=64,
-                           min_prefill_tokens=8, pipeline_depth=cfg.plan.pp))
-
+    server = build(ServeSpec(
+        backend="engine",
+        engine=EngineSpec(
+            arch="qwen2.5-14b",
+            reduced_overrides=dict(d_model=128, d_ff=256),
+            throttle=dict(num_iters_T=4, max_prefill_tokens=64,
+                          min_prefill_tokens=8),
+            dims=dict(Sp=2, C=32, Sd=16, pages=1024, page=8, slots=32),
+        ),
+    ))
     rng = np.random.default_rng(0)
     t0 = time.time()
-    reqs = []
-    for i in range(n_requests):
-        prompt = list(rng.integers(0, cfg.vocab_size,
-                                   int(np.clip(rng.lognormal(3.0, 0.8), 4, 200))))
-        reqs.append(engine.add_request(
+    rids = []
+    for _ in range(n_requests):
+        prompt = list(rng.integers(
+            0, server.cfg.vocab_size,
+            int(np.clip(rng.lognormal(3.0, 0.8), 4, 200))))
+        rids.append(server.submit(
             prompt, SamplingParams(max_new_tokens=int(rng.integers(2, 16)))))
-    engine.drain()
+    server.drain()
     wall = time.time() - t0
-    out_toks = sum(r.num_output_tokens for r in reqs)
-    in_toks = sum(r.num_prompt_tokens for r in reqs)
-    print(f"served {len(reqs)} requests in {wall:.1f}s "
+
+    outs = server.outputs(rids)
+    out_toks = sum(len(o.token_ids) for o in outs)
+    in_toks = sum(len(o.prompt_token_ids) for o in outs)
+    print(f"served {len(outs)} requests in {wall:.1f}s "
           f"({(in_toks + out_toks) / wall:.0f} tok/s on CPU)")
-    ttfts = [r.metrics.ttft() for r in reqs]
-    print(f"TTFT mean={np.mean(ttfts)*1e3:.0f}ms  ticks={engine.stats.ticks} "
-          f"preemptions={engine.scheduler.stats.preemptions}")
-    pp_pad = engine.stats.padded_prefill / max(
-        1, engine.stats.ticks * dims.Sp * dims.C)
+    ttfts = [o.metrics.ttft() for o in outs]
+    s = server.stats().replicas[0]
+    print(f"TTFT mean={np.mean(ttfts)*1e3:.0f}ms  ticks={s.ticks} "
+          f"preemptions={s.preemptions} "
+          f"service_rate={s.service_rate:.0f} tok/s (EWMA)")
+    eng = server.replicas[0]
+    pp_pad = eng.stats.padded_prefill / max(
+        1, eng.stats.ticks * eng.dims.Sp * eng.dims.C)
     print(f"prefill bucket padding (bubble fraction): {pp_pad:.1%}")
 
 

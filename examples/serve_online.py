@@ -1,11 +1,11 @@
-"""Online serving: asyncio frontend + Poisson arrivals + streaming tokens +
-SLO report — the paper's cloud scenario end-to-end (decoupled frontend,
-non-blocking engine; paper §3.3).
+"""Online serving through the public API: Poisson arrivals, streamed
+`TokenDelta`s, a mid-stream abort, and an SLO report — the paper's cloud
+scenario end-to-end (decoupled frontend, non-blocking engine; paper §3.3).
 
 Runs TWO data-parallel engine replicas behind the globally-balanced
-`ReplicaRouter` (DESIGN.md §1.3): the frontend submits by balance score and
-steps both replicas from one worker thread.  Set REPLICAS=1 for the
-single-engine layout.
+`ReplicaRouter` (DESIGN.md §1.3): `LLMServer.generate_stream` submits by
+balance score and steps all replicas from one worker thread.  Set
+REPLICAS=1 for the single-engine layout — the client code is identical.
 
     PYTHONPATH=src python examples/serve_online.py
 
@@ -18,98 +18,90 @@ offline, with no accelerator, via:
 """
 import argparse
 import asyncio
-import dataclasses
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import get_config, make_reduced
-from repro.core import SamplingParams, ThrottleConfig
-from repro.models import transformer as tfm
-from repro.models.serve import ServeDims
-from repro.runtime.engine import PipelineEngine
-from repro.runtime.frontend import AsyncFrontend
-from repro.runtime.router import ReplicaRouter
+from repro.serving import (ClusterSpec, EngineSpec, SamplingParams,
+                           ServeSpec, TraceSpec, build)
 
 REPLICAS = 2
 
 
-async def client(fe, rng, cfg, results, i):
-    prompt = list(rng.integers(0, cfg.vocab_size, int(rng.integers(5, 40))))
+async def client(server, rng, results):
+    prompt = list(rng.integers(0, server.cfg.vocab_size,
+                               int(rng.integers(5, 40))))
     t0 = time.monotonic()
-    rid = await fe.submit(prompt, SamplingParams(max_new_tokens=6))
     first, n = None, 0
-    async for _ in fe.stream(rid):
-        if first is None:
-            first = time.monotonic() - t0
-        n += 1
+    async for delta in server.generate_stream(
+            prompt, SamplingParams(max_new_tokens=6)):
+        if delta.token is not None:
+            if first is None:
+                first = time.monotonic() - t0
+            n += 1
     results.append((first, time.monotonic() - t0, n))
 
 
+async def impatient_client(server, rng):
+    """Streams two tokens, then cancels: the abort path exercised live —
+    slots and KV pages free immediately, the stream ends with
+    finish_reason="abort"."""
+    prompt = list(rng.integers(0, server.cfg.vocab_size, 12))
+    reason = None
+    async for delta in server.generate_stream(
+            prompt, SamplingParams(max_new_tokens=64)):
+        reason = delta.finish_reason
+        if delta.index >= 2 and reason is None:
+            server.abort(delta.request_id)
+    return reason
+
+
 async def main(trace_out=None):
-    cfg = make_reduced(get_config("qwen1.5-0.5b")).with_plan(
-        pp=1, tp=1, ep_over_data=False)
-    cfg = dataclasses.replace(cfg, dtype="float32")
-    mesh = jax.make_mesh((1, 1, 1), ("data", "stage", "tensor"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    dims = ServeDims(Sp=1, C=16, Sd=8, pages=512, page=8, Bp=32, Bd=32,
-                     slots=16)
-    th = ThrottleConfig(num_iters_T=2, max_prefill_tokens=16,
-                        min_prefill_tokens=4, pipeline_depth=cfg.plan.pp)
-    with jax.set_mesh(mesh):
-        params = tfm.init_params(cfg, jax.random.key(0), dtype=jnp.float32)
-        params = jax.tree.map(
-            lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
-            params, tfm.param_pspecs(cfg),
-            is_leaf=lambda x: isinstance(x, P))
-        # replicas share the read-only parameter tree; with --trace-out each
-        # records its own replayable tick trace
-        engines = [
-            PipelineEngine(
-                cfg, dims, params, mesh, th,
-                trace_path=None if trace_out is None
-                else f"{trace_out}.replica{i}")
-            for i in range(REPLICAS)]
-    router_trace = None if trace_out is None else f"{trace_out}.router"
-    target = engines[0] if len(engines) == 1 \
-        else ReplicaRouter(engines, policy="balanced",
-                           trace_path=router_trace)
-    fe = AsyncFrontend(target)
-    runner = asyncio.create_task(fe.run())
+    spec = ServeSpec(
+        backend="engine",
+        engine=EngineSpec(
+            arch="qwen1.5-0.5b",
+            throttle=dict(num_iters_T=2, max_prefill_tokens=16,
+                          min_prefill_tokens=4),
+            dims=dict(C=16, Bp=32, Bd=32),
+        ),
+        cluster=ClusterSpec(replicas=REPLICAS) if REPLICAS > 1 else None,
+        trace=TraceSpec(record=trace_out) if trace_out else None,
+    )
+    server = build(spec)
 
     rng = np.random.default_rng(0)
     results = []
     tasks = []
-    for i in range(10):                       # Poisson arrivals
+    for _ in range(10):                       # Poisson arrivals
         await asyncio.sleep(float(rng.exponential(0.05)))
-        tasks.append(asyncio.create_task(client(fe, rng, cfg, results, i)))
-    await asyncio.gather(*tasks)
-    fe.stop()
-    await runner
+        tasks.append(asyncio.create_task(client(server, rng, results)))
+    tasks.append(asyncio.create_task(impatient_client(server, rng)))
+    *_, abort_reason = await asyncio.gather(*tasks)
 
     ttft = np.array([r[0] for r in results])
     e2e = np.array([r[1] for r in results])
-    print(f"{len(results)} streamed requests | TTFT p50={np.median(ttft)*1e3:.0f}ms "
+    print(f"{len(results)} streamed requests | "
+          f"TTFT p50={np.median(ttft)*1e3:.0f}ms "
           f"p99={np.quantile(ttft, 0.99)*1e3:.0f}ms | "
           f"E2E p50={np.median(e2e)*1e3:.0f}ms")
-    if isinstance(target, ReplicaRouter):
-        print(f"routing ({target.policy.value}): "
-              f"{'/'.join(map(str, target.routed_counts))} across "
-              f"{len(engines)} replicas")
+    print(f"impatient client: finish_reason={abort_reason!r}")
+    stats = server.stats()
+    if stats.routed_counts is not None:
+        print(f"routing ({server.router.policy.value}): "
+              f"{'/'.join(map(str, stats.routed_counts))} across "
+              f"{len(stats.replicas)} replicas")
     slo = np.mean((ttft < 2.0) & (e2e < 10.0))
     print(f"SLO attainment (TTFT<2s, E2E<10s): {slo:.0%}")
+    server.close()
     if trace_out is not None:
-        if isinstance(target, ReplicaRouter):
-            target.close_trace()
-        for i, eng in enumerate(engines):
-            eng.recorder.close()
-            print(f"trace: {trace_out}.replica{i} "
-                  f"({eng.recorder.num_ticks} ticks)")
+        n = len(server.replicas)
+        paths = [trace_out if n == 1 else f"{trace_out}.replica{i}"
+                 for i in range(n)]
+        for path, eng in zip(paths, server.replicas):
+            print(f"trace: {path} ({eng.recorder.num_ticks} ticks)")
         print(f"replay with: python -m repro.runtime.trace replay "
-              f"{trace_out}.replica0")
+              f"{paths[0]}")
 
 
 if __name__ == "__main__":

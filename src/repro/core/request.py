@@ -32,6 +32,15 @@ class RequestState(enum.Enum):
         )
 
 
+# Public finish-reason vocabulary of the serving API (repro.serving): every
+# finished request maps to exactly one of these strings.
+FINISH_REASONS = {
+    RequestState.FINISHED_STOPPED: "stop",
+    RequestState.FINISHED_LENGTH: "length",
+    RequestState.FINISHED_ABORTED: "abort",
+}
+
+
 @dataclass
 class SamplingParams:
     max_new_tokens: int = 128
@@ -145,3 +154,8 @@ class Request:
     @property
     def is_finished(self) -> bool:
         return self.state.is_finished
+
+    @property
+    def finish_reason(self) -> Optional[str]:
+        """"stop" / "length" / "abort" once finished, else None."""
+        return FINISH_REASONS.get(self.state)

@@ -93,6 +93,36 @@ class SchedulerStats:
     prefill_budgets: List[int] = field(default_factory=list)
     decode_budgets: List[int] = field(default_factory=list)
     preemptions: int = 0
+    # Service rate: tokens retired per second, EWMA over retire-to-retire
+    # windows on the replica's own clock (wall or virtual).  This is the
+    # *discovered* per-replica throughput signal the router can divide
+    # balance scores by instead of static `ReplicaCapacity` hints.
+    tokens_retired: int = 0
+    service_rate: Optional[float] = None
+    service_rate_alpha: float = 0.1
+    _rate_clock: Optional[float] = None
+    _rate_tokens: int = 0
+
+    def note_retire(self, num_tokens: int, now: float) -> None:
+        """Fold one batch completion into the service-rate EWMA.  Tokens
+        accumulate until the clock advances (virtual time can retire several
+        batches at one instant), so every sample has a positive window."""
+        self.tokens_retired += num_tokens
+        self._rate_tokens += num_tokens
+        if self._rate_clock is None:
+            self._rate_clock = now
+            return
+        dt = now - self._rate_clock
+        if dt <= 0.0:
+            return
+        rate = self._rate_tokens / dt
+        if self.service_rate is None:
+            self.service_rate = rate
+        else:
+            self.service_rate += self.service_rate_alpha * (
+                rate - self.service_rate)
+        self._rate_clock = now
+        self._rate_tokens = 0
 
 
 class PipelineScheduler:
@@ -120,6 +150,7 @@ class PipelineScheduler:
         self.running_prefill: List[Request] = []         # partially prefilled
         self.running_decode: List[Request] = []          # decoding (FCFS order)
         self._in_flight: Dict[str, int] = {}             # request_id -> batch_id
+        self._aborting: set = set()                      # in-flight, abort pending
         self._batches: Dict[int, ScheduledBatch] = {}
         self._batch_counter = itertools.count()
         self.stats = SchedulerStats()
@@ -367,6 +398,19 @@ class PipelineScheduler:
             # The step wrote KV for every token it consumed (prefill chunk, or
             # the single consumed token of a decode step).
             req.num_prefilled = seq.start_pos + seq.num_tokens
+            if req.request_id in self._aborting:
+                # aborted while this micro-batch was in flight: consume the
+                # sampled token (alignment), but discard it — the user asked
+                # for the request to stop, so nothing is recorded
+                self._aborting.discard(req.request_id)
+                if seq.produces_token:
+                    next(it)
+                for group in (self.running_prefill, self.running_decode):
+                    if req in group:
+                        group.remove(req)
+                self._finalize_abort(req, now)
+                finished.append(req)
+                continue
             if not seq.produces_token:
                 continue
             if seq.is_prefill and self.kv.enable_prefix_caching:
@@ -384,7 +428,54 @@ class PipelineScheduler:
                 self.running_decode.append(req)
         remaining = sum(1 for _ in it)
         assert remaining == 0, f"{remaining} unconsumed sampled tokens"
+        self.stats.note_retire(len(sampled_tokens), now)
         return finished
+
+    # ------------------------------------------------------------------ abort
+    def abort_request(self, request_id: str, now: float = 0.0
+                      ) -> Optional[Request]:
+        """User-initiated abort, wherever the request stands.
+
+        Waiting and running (not-in-flight) requests finalize immediately:
+        KV pages freed, state -> FINISHED_ABORTED.  A request inside an
+        in-flight micro-batch cannot be torn down mid-tick (its KV writes are
+        still materializing on device); it is flagged and finalized by
+        `complete()` when the batch retires, appearing in that tick's
+        finished list.  Returns the request (check `is_finished` to tell
+        immediate from deferred), or None when unknown / already finished.
+
+        Callers owning backend state must release it for immediately-
+        finalized requests (`ExecutionBackend.finish_request`); deferred ones
+        flow through the TickLoop's normal retire path.
+        """
+        if request_id in self._aborting:
+            return None
+        if request_id in self._in_flight:
+            batch = self._batches[self._in_flight[request_id]]
+            for seq in batch.seqs:
+                if seq.request.request_id == request_id:
+                    self._aborting.add(request_id)
+                    return seq.request
+            return None
+        for req in self.waiting:
+            if req.request_id == request_id:
+                self.waiting.remove(req)
+                self._finalize_abort(req, now)
+                return req
+        for group in (self.running_prefill, self.running_decode):
+            for req in group:
+                if req.request_id == request_id:
+                    group.remove(req)
+                    self._finalize_abort(req, now)
+                    return req
+        return None
+
+    def _finalize_abort(self, req: Request, now: float) -> None:
+        """KV pages released (a waiting request may still hold an adopted
+        prefix-cache head), terminal state + finish time stamped."""
+        self.kv.free(req.request_id)
+        req.state = RequestState.FINISHED_ABORTED
+        req.metrics.finish_time = now
 
     # -------------------------------------------------------------- migration
     def drain_request(self, request_id: str) -> Optional[Request]:
@@ -448,12 +539,14 @@ class PipelineScheduler:
                 if not self.kv.has_request(r.request_id)]
 
     # ----------------------------------------------------------- fault paths
-    def abort_batch(self, batch_id: int) -> List[Request]:
+    def abort_batch(self, batch_id: int, now: float = 0.0) -> List[Request]:
         """A worker died mid-flight: the micro-batch's results never arrive.
         Affected requests recover by recompute — decode/partial-prefill
         requests are preempted (KV freed, re-queued with priority); their
         already-generated tokens are preserved (recompute re-prefills them).
-        Returns the affected requests."""
+        Requests with a pending user abort finalize it instead of requeuing.
+        Returns the affected requests (check `is_finished` for the aborted
+        ones — they need backend release, not recompute)."""
         batch = self._batches.pop(batch_id, None)
         if batch is None:
             return []
@@ -462,6 +555,16 @@ class PipelineScheduler:
             req = seq.request
             self._in_flight.pop(req.request_id, None)
             if req.is_finished:
+                continue
+            if req.request_id in self._aborting:
+                # the user had already asked for this request to stop: the
+                # fault finalizes the abort instead of queueing a recompute
+                self._aborting.discard(req.request_id)
+                for group in (self.running_prefill, self.running_decode):
+                    if req in group:
+                        group.remove(req)
+                self._finalize_abort(req, now)
+                affected.append(req)
                 continue
             self.kv.free(req.request_id)
             if req in self.running_decode:

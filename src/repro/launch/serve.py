@@ -1,5 +1,5 @@
-"""Serving launcher: build a gLLM engine (or a multi-replica router) for any
---arch and serve a synthetic workload, reporting the paper's metrics.
+"""Serving launcher: a thin flag->`ServeSpec` translation over the public
+serving API (`repro.serving`, DESIGN.md §10).
 
 On this CPU container, --reduced (default) builds the same-family reduced
 config so the engine actually executes; on a real TPU slice, --full uses the
@@ -10,19 +10,19 @@ published config on the production mesh factoring from the arch's plan.
         [--replicas 2 --route balanced|rr] \
         [--rebalance-interval 0.25 [--migrate]]
 
-With --replicas N, N data-parallel engine replicas (sharing one read-only
-parameter tree) are fronted by a `ReplicaRouter` that places each request by
-global balance score (DESIGN.md §1.3).  --rebalance-interval turns on the
-periodic control plane (steal waiting requests off saturated replicas);
---migrate additionally allows live migration of running decode requests —
-KV pages move across replicas with no recompute (DESIGN.md §9).
+Every flag combination is exactly one `ServeSpec`: --dump-spec prints that
+spec as JSON and exits, --spec FILE serves from a previously dumped spec
+(flags other than the workload ones are ignored).  With --replicas N, N
+data-parallel engine replicas (sharing one read-only parameter tree) are
+fronted by a `ReplicaRouter`; --rebalance-interval turns on the periodic
+control plane and --migrate allows live KV migration (DESIGN.md §9).
 """
 
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
+import warnings
 
 import numpy as np
 
@@ -31,68 +31,42 @@ def build_engine(arch: str, *, reduced: bool = True, policy: str = "gllm",
                  seed: int = 0, replicas: int = 1, route: str = "balanced",
                  rebalance_interval: float = None, migrate: bool = False,
                  trace_out: str = None):
-    import jax
-    import jax.numpy as jnp
-    from jax.sharding import NamedSharding
-    from jax.sharding import PartitionSpec as P
+    """Deprecated shim: build via `repro.serving.build(ServeSpec(...))`.
 
-    from repro.configs import get_config, make_reduced
-    from repro.core import PrefillPolicy, ThrottleConfig
-    from repro.launch.mesh import derive_pipeline_mesh, make_production_mesh
-    from repro.launch.shapes import serve_cell_dims
-    from repro.configs.base import ASSIGNED_SHAPES
-    from repro.models import transformer as tfm
-    from repro.models.serve import ServeDims
-    from repro.runtime.engine import PipelineEngine
-    from repro.runtime.router import RebalancePolicy, ReplicaRouter
+    Returns (cfg, engine-or-router) exactly as before; the `LLMServer` the
+    spec path produces is discarded.  Kept for one release."""
+    warnings.warn(
+        "repro.launch.serve.build_engine is deprecated; use "
+        "repro.serving.build(ServeSpec(...)) and the LLMServer API instead",
+        DeprecationWarning, stacklevel=2)
+    from repro import serving
+    server = serving.build(_spec(arch=arch, reduced=reduced, policy=policy,
+                                 seed=seed, replicas=replicas, route=route,
+                                 rebalance_interval=rebalance_interval,
+                                 migrate=migrate, trace_out=trace_out))
+    return server.cfg, server.engine
 
-    cfg = get_config(arch)
-    if reduced:
-        cfg = make_reduced(cfg).with_plan(pp=1, tp=1, ep_over_data=False)
-        cfg = dataclasses.replace(
-            cfg, dtype="float32",
-            moe_capacity_factor=float(max(cfg.num_experts, 1)))
-        mesh = jax.make_mesh((1, 1, 1), ("data", "stage", "tensor"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
-        dims = ServeDims(Sp=1, C=32, Sd=8, pages=512, page=8, Bp=64, Bd=64,
-                         slots=16, Te=16 if cfg.is_encoder_decoder else 0)
-        th = ThrottleConfig(num_iters_T=4, max_prefill_tokens=32,
-                            min_prefill_tokens=4, pipeline_depth=1,
-                            policy=PrefillPolicy(policy))
-    else:
-        prod = make_production_mesh()
-        mesh = derive_pipeline_mesh(prod, cfg.plan.pp, cfg.plan.tp)
-        dims = serve_cell_dims(cfg, ASSIGNED_SHAPES["prefill_32k"],
-                               data=mesh.shape["data"])
-        th = ThrottleConfig(pipeline_depth=cfg.plan.pp,
-                            policy=PrefillPolicy(policy))
-    with jax.set_mesh(mesh):
-        params = tfm.init_params(cfg, jax.random.key(seed),
-                                 dtype=jnp.dtype(cfg.dtype))
-        params = jax.tree.map(
-            lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
-            params, tfm.param_pspecs(cfg),
-            is_leaf=lambda x: isinstance(x, P))
-        # replicas share the (read-only) parameter tree; each owns its KV
-        # pool, caches, scheduler, and TickLoop
-        n = max(replicas, 1)
 
-        def _tp(i):
-            if trace_out is None:
-                return None
-            return trace_out if n == 1 else f"{trace_out}.replica{i}"
-
-        engines = [PipelineEngine(cfg, dims, params, mesh, th,
-                                  trace_path=_tp(i)) for i in range(n)]
-    if len(engines) == 1:
-        return cfg, engines[0]
-    router_trace = None if trace_out is None else f"{trace_out}.router"
-    rebalance = None
-    if rebalance_interval is not None:
-        rebalance = RebalancePolicy(interval=rebalance_interval,
-                                    migrate=migrate)
-    return cfg, ReplicaRouter(engines, policy=route, rebalance=rebalance,
-                              trace_path=router_trace)
+def _spec(*, arch: str, reduced: bool, policy: str, seed: int, replicas: int,
+          route: str, rebalance_interval: float, migrate: bool,
+          trace_out: str):
+    from repro.serving import (ClusterSpec, EngineSpec, RebalancePolicy,
+                               ServeSpec, TraceSpec)
+    cluster = None
+    if replicas > 1 or rebalance_interval is not None:
+        rebalance = None
+        if rebalance_interval is not None:
+            rebalance = RebalancePolicy(interval=rebalance_interval,
+                                        migrate=migrate)
+        cluster = ClusterSpec(replicas=max(replicas, 1), route=route,
+                              rebalance=rebalance)
+    return ServeSpec(
+        backend="engine",
+        engine=EngineSpec(arch=arch, reduced=reduced, policy=policy,
+                          seed=seed),
+        cluster=cluster,
+        trace=TraceSpec(record=trace_out) if trace_out is not None else None,
+    )
 
 
 def main() -> None:
@@ -116,6 +90,12 @@ def main() -> None:
                     "running decode requests (KV moves, no recompute)")
     ap.add_argument("--full", action="store_true",
                     help="published config on the production mesh (TPU)")
+    ap.add_argument("--spec", default=None, metavar="FILE",
+                    help="serve from a ServeSpec JSON file instead of the "
+                    "engine/cluster flags above")
+    ap.add_argument("--dump-spec", action="store_true",
+                    help="print the ServeSpec these flags translate to "
+                    "(JSON) and exit")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="record a replayable tick trace of the run "
                     "(per-replica PATH.replicaN + PATH.router when N>1)")
@@ -124,65 +104,73 @@ def main() -> None:
                     "scheduler instead of serving (no accelerator needed)")
     args = ap.parse_args()
 
+    from repro.serving import SamplingParams, ServeSpec, TraceSpec, build
+
     if args.trace_replay is not None:
         # replay needs only the scheduler + the recorded events — it never
         # builds the model, so it runs on any box
-        from repro.runtime.trace import Trace, replay_trace
-        report = replay_trace(Trace.load(args.trace_replay))
-        print(f"[replay {args.trace_replay}] {report.summary()} — "
-              f"decisions match the recording")
+        server = build(ServeSpec(backend="trace",
+                                 trace=TraceSpec(replay=args.trace_replay)))
+        server.replay()
+        print(f"[replay {args.trace_replay}] {server.last_report.summary()} "
+              f"— decisions match the recording")
         return
 
-    from repro.core import SamplingParams
-    from repro.runtime.router import ReplicaRouter
+    if args.spec is not None:
+        with open(args.spec) as fh:
+            spec = ServeSpec.from_json(fh.read())
+    else:
+        spec = _spec(arch=args.arch, reduced=not args.full,
+                     policy=args.policy, seed=0, replicas=args.replicas,
+                     route=args.route,
+                     rebalance_interval=args.rebalance_interval,
+                     migrate=args.migrate, trace_out=args.trace_out)
+    if args.dump_spec:
+        print(spec.to_json(indent=2))
+        return
 
-    cfg, engine = build_engine(args.arch, reduced=not args.full,
-                               policy=args.policy, replicas=args.replicas,
-                               route=args.route,
-                               rebalance_interval=args.rebalance_interval,
-                               migrate=args.migrate,
-                               trace_out=args.trace_out)
-    replicas = engine.replicas if isinstance(engine, ReplicaRouter) \
-        else [engine]
+    server = build(spec)
+    cfg = server.cfg
     rng = np.random.default_rng(0)
     t0 = time.time()
-    reqs = []
+    rids = []
     for _ in range(args.requests):
         n = int(np.clip(rng.lognormal(3.0, 0.8), 4, 300))
-        enc = None
+        kw = {}
         if cfg.is_encoder_decoder:
-            enc = rng.normal(size=(replicas[0].dims.Te, cfg.d_model)) \
-                .astype(np.float32) * 0.05
-        reqs.append(engine.add_request(
+            kw["enc_embeds"] = rng.normal(
+                size=(server.replicas[0].dims.Te, cfg.d_model)
+            ).astype(np.float32) * 0.05
+        rids.append(server.submit(
             list(rng.integers(0, cfg.vocab_size, n)),
-            SamplingParams(max_new_tokens=args.max_new), enc_embeds=enc))
-    engine.drain()
+            SamplingParams(max_new_tokens=args.max_new), **kw))
+    server.drain()
     wall = time.time() - t0
-    toks = sum(r.num_output_tokens for r in reqs)
-    ttfts = [r.metrics.ttft() for r in reqs if r.metrics.ttft() is not None]
-    ticks = sum(e.stats.ticks for e in replicas)
-    preempt = sum(e.scheduler.stats.preemptions for e in replicas)
-    pad = sum(e.stats.padded_prefill for e in replicas) / max(
-        1, sum(e.stats.ticks * max(e.dims.Sp, 1) * max(e.dims.C, 1)
-               for e in replicas))
+    outs = server.outputs(rids)
+    stats = server.stats()
+    toks = sum(len(o.token_ids) for o in outs)
+    ttfts = [o.metrics.ttft() for o in outs if o.metrics.ttft() is not None]
+    ticks = sum(r.ticks for r in stats.replicas)
+    preempt = sum(r.preemptions for r in stats.replicas)
+    pad = 0.0
+    if spec.backend == "engine":    # bucket padding is an engine-only stat
+        pad = sum(e.stats.padded_prefill for e in server.replicas) / max(
+            1, sum(e.stats.ticks * max(e.dims.Sp, 1) * max(e.dims.C, 1)
+                   for e in server.replicas))
     routed = ""
-    if isinstance(engine, ReplicaRouter):
-        routed = (f" routed={'/'.join(map(str, engine.routed_counts))}"
-                  f" ({engine.policy.value})")
-        if engine.rebalance_policy is not None:
-            rs = engine.rebalance_stats
-            routed += (f" rebalance[stolen={rs.stolen} "
-                       f"migrated={rs.migrated}]")
-    print(f"[{args.arch} | {args.policy}] {len(reqs)} requests, {toks} tokens "
-          f"in {wall:.1f}s; ticks={ticks} "
+    if stats.routed_counts is not None:
+        routed = (f" routed={'/'.join(map(str, stats.routed_counts))}"
+                  f" ({server.router.policy.value})")
+        if stats.rebalance is not None:
+            routed += (f" rebalance[stolen={stats.rebalance.stolen} "
+                       f"migrated={stats.rebalance.migrated}]")
+    arch = spec.engine.arch
+    print(f"[{arch} | {spec.engine.policy}] {len(outs)} requests, "
+          f"{toks} tokens in {wall:.1f}s; ticks={ticks} "
           f"TTFT_mean={np.mean(ttfts)*1e3:.0f}ms "
           f"preemptions={preempt} "
           f"prefill-bucket padding={pad:.1%}{routed}")
-    if args.trace_out is not None:
-        if isinstance(engine, ReplicaRouter):
-            engine.close_trace()
-        for e in replicas:
-            e.recorder.close()
+    server.close()
 
 
 if __name__ == "__main__":

@@ -224,14 +224,22 @@ class TickLoop:
         return finished
 
     # ------------------------------------------------------------ fault paths
-    def abort_inflight(self) -> List[Request]:
+    def abort_inflight(self, now: Optional[float] = None) -> List[Request]:
         """A worker died: every in-flight micro-batch's results are lost.
-        Requests recover by recompute via `scheduler.abort_batch`."""
+        Requests recover by recompute via `scheduler.abort_batch`; requests
+        with a pending user abort finalize it instead (backend state
+        released, surfaced through `finished` like any completion)."""
+        if now is None:
+            now = self.backend.clock()
         affected: List[Request] = []
         for bid, _ in list(self.ring):
             if bid is not None:
-                affected.extend(self.scheduler.abort_batch(bid))
+                affected.extend(self.scheduler.abort_batch(bid, now))
         S = self.ring.maxlen or self.backend.depth
         self.ring.clear()
         self.ring.extend((None, self.backend.prepare(None)) for _ in range(S))
+        for req in affected:
+            if req.is_finished:
+                self.backend.finish_request(req)
+                self.finished.append(req)
         return affected

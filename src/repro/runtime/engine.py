@@ -432,6 +432,28 @@ class PipelineEngine:
                 self.recorder.record_arrival(req)
         return req
 
+    def abort_request(self, request_id: str) -> bool:
+        """User abort: frees KV pages and the state slot / encoder cache.
+        In-flight requests finalize when their micro-batch retires (the
+        TickLoop's normal release path); returns False when unknown."""
+        now = self._now_fn()
+        if self._trace_lock is None:
+            req = self.scheduler.abort_request(request_id, now)
+            if req is None:
+                return False
+        else:
+            with self._trace_lock:
+                req = self.scheduler.abort_request(request_id, now)
+                if req is None:
+                    return False
+                self.recorder.record_abort(request_id, now)
+        if req.is_finished:
+            # immediately finalized (waiting / running): the TickLoop will
+            # never retire it, so release backend state and surface it here
+            self.backend.finish_request(req)
+            self.loop.finished.append(req)
+        return True
+
     @property
     def has_work(self) -> bool:
         return self.scheduler.has_work

@@ -1,19 +1,21 @@
-"""Decoupled asynchronous frontend (paper §3.3 design principle 2).
+"""DEPRECATED: decoupled asynchronous frontend (paper §3.3 principle 2).
 
-Request intake and token streaming run on the asyncio loop; the engines'
-blocking device steps run on a worker thread, so user interaction never
-stalls model execution (and vice versa).  This is the JAX-native analogue of
-gLLM's separate frontend process + ZeroMQ sockets.
+The async intake/streaming loop now lives inside the public serving API —
+`repro.serving.LLMServer.generate_stream` spawns the same
+worker-thread-steps / event-loop-streams split on demand.  `AsyncFrontend`
+is kept for one release as a thin back-compat veneer and warns on
+construction; new code should do:
 
-The frontend fronts either a single `PipelineEngine` or a `ReplicaRouter`
-over N engine replicas — submissions are placed by the router's global
-balance score, and all replicas are stepped from the same worker thread.
+    from repro.serving import ServeSpec, SamplingParams, build
+    server = build(ServeSpec(...))
+    async for delta in server.generate_stream(prompt, sampling): ...
 """
 
 from __future__ import annotations
 
 import asyncio
 import itertools
+import warnings
 from typing import AsyncIterator, Dict, List, Optional, Sequence, Union
 
 from repro.core import Request, SamplingParams
@@ -23,6 +25,10 @@ from repro.runtime.router import ReplicaRouter
 
 class AsyncFrontend:
     def __init__(self, engine: Union[PipelineEngine, ReplicaRouter]) -> None:
+        warnings.warn(
+            "AsyncFrontend is deprecated; use repro.serving.build(...) and "
+            "LLMServer.generate_stream instead",
+            DeprecationWarning, stacklevel=2)
         if isinstance(engine, ReplicaRouter):
             self.router = engine
         else:

@@ -41,7 +41,7 @@ from typing import Any, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import KVExport, Request, SamplingParams
+from repro.core import KVExport, Request, RequestState, SamplingParams
 
 
 class RoutingPolicy(enum.Enum):
@@ -173,6 +173,11 @@ class ReplicaSnapshot:
     kv_free_rate: float
     kv_threshold: float = 0.05      # the replica scheduler's UT stall point
     projected_kv_free: Optional[float] = None
+    # Discovered tokens-retired-per-second EWMA (scheduler service clock);
+    # None until the replica has retired work over a measurable window.
+    # First step toward replacing static `ReplicaCapacity` hints: exposed
+    # through `LLMServer.stats()` so operators can compare hint vs. reality.
+    service_rate: Optional[float] = None
 
     @staticmethod
     def of(replica) -> "ReplicaSnapshot":
@@ -185,6 +190,7 @@ class ReplicaSnapshot:
             kv_free_rate=sched.kv.kv_free_rate,
             kv_threshold=sched.cfg.kv_threshold,
             projected_kv_free=sched.kv.kv_free_rate - growth / pool,
+            service_rate=sched.stats.service_rate,
         )
 
 
@@ -260,6 +266,7 @@ class ReplicaRouter:
         self._in_transit: List[Tuple[float, int, int, Request, KVExport,
                                      Any, Any]] = []
         self._transit_seq = itertools.count()
+        self._aborted: List[Request] = []   # aborted while in transit
         self._migrations_of: dict = {}      # rid -> times live-migrated
         self._seen_finished = [0] * n
         self._ewma_output: Optional[float] = None
@@ -610,6 +617,37 @@ class ReplicaRouter:
         _record_migrate_in(dst, req, now)
         _advance_replica_clock(dst, now)
 
+    # ---------------------------------------------------------------- abort
+    def abort_request(self, rid: str) -> bool:
+        """Abort a request anywhere in the cluster: on whichever replica
+        holds it (waiting — including a stolen request sitting in a
+        destination queue — or running), or *mid-migration* while its KV
+        payload is in transit between replicas.
+
+        The in-transit case is the one only the router can see: the source
+        already exported-and-freed the pages and released the request's
+        state slot, the destination has allocated nothing yet, so dropping
+        the queued delivery leaks nothing — the payload and exported state
+        are host-held copies.  Without this path the delivery would land
+        after the abort and permanently re-admit a request nobody wants
+        (re-acquiring pages and a slot on the destination).
+        """
+        for i, entry in enumerate(self._in_transit):
+            req = entry[3]
+            if req.request_id == rid:
+                self._in_transit.pop(i)
+                heapq.heapify(self._in_transit)
+                self._migrations_of.pop(rid, None)
+                req.state = RequestState.FINISHED_ABORTED
+                req.metrics.finish_time = self._clock()
+                self._aborted.append(req)
+                return True
+        for replica in self.replicas:
+            if _abort_on_replica(replica, rid):
+                self._migrations_of.pop(rid, None)
+                return True
+        return False
+
     # ------------------------------------------------- engine-cluster surface
     def add_request(self, prompt: Sequence[int],
                     sampling: Optional[SamplingParams] = None,
@@ -664,6 +702,7 @@ class ReplicaRouter:
         out: List[Request] = []
         for r in self.replicas:
             out.extend(_finished_of(r))
+        out.extend(self._aborted)
         return out
 
 
@@ -677,6 +716,21 @@ def _finished_of(replica) -> List[Request]:
     if fin is not None:
         return fin
     return replica.metrics.finished
+
+
+def _abort_on_replica(replica, rid: str) -> bool:
+    """Abort through the replica's own entry point when it has one (engines
+    and simulators serialize against their tick/trace machinery); fall back
+    to the bare scheduler + backend release for test doubles."""
+    fn = getattr(replica, "abort_request", None)
+    if fn is not None:
+        return bool(fn(rid))
+    req = replica.scheduler.abort_request(rid, replica.backend.clock())
+    if req is None:
+        return False
+    if req.is_finished:
+        replica.backend.finish_request(req)
+    return True
 
 
 def _advance_replica_clock(replica, now: float) -> None:
@@ -748,6 +802,84 @@ class SimCluster:
             s.sched.has_work or s.loop.busy or s._arrivals
             for s in self.sims)
 
+    # ------------------------------------------------- engine-compatible API
+    # The serving layer drives a sim cluster through the same surface as a
+    # single engine: submissions are placed by the router at the cluster's
+    # current virtual instant; one `step()` advances the earliest-due
+    # replica (control-plane events interleaved at their own instants).
+
+    @property
+    def replicas(self) -> List[Any]:
+        return self.sims
+
+    @property
+    def has_work(self) -> bool:
+        return self._cluster_busy
+
+    @property
+    def busy(self) -> bool:
+        return any(s.loop.busy for s in self.sims)
+
+    def add_request(self, prompt: Sequence[int],
+                    sampling: Optional[SamplingParams] = None,
+                    request_id: Optional[str] = None) -> Request:
+        # causality: route on the state every replica has reached by "now"
+        t = max(s.backend.time for s in self.sims)
+        self._advance_to(t)
+        return self.router.add_request(prompt, sampling, request_id)
+
+    def abort_request(self, rid: str) -> bool:
+        return self.router.abort_request(rid)
+
+    def _finished_marks(self) -> List[int]:
+        """Per-source finished-list lengths (one per replica + the router's
+        in-transit-aborted list) — new finishes land in *whichever* source's
+        list, so "what finished since" must be tracked per source, not by
+        slicing the concatenation."""
+        return [len(s.metrics.finished) for s in self.sims] + [
+            len(self.router._aborted)]
+
+    def _finished_since(self, marks: List[int]) -> List[Request]:
+        out: List[Request] = []
+        for sim, n in zip(self.sims, marks):
+            out.extend(sim.metrics.finished[n:])
+        out.extend(self.router._aborted[marks[-1]:])
+        return out
+
+    def step(self) -> List[Request]:
+        """Advance the cluster by one event: every replica runs to the
+        earliest pending tick instant (control-plane events — rebalance
+        passes, migration deliveries — fire at their due times on the way)."""
+        marks = self._finished_marks()
+        pending = [s for s in self.sims
+                   if s.sched.has_work or s.loop.busy or s._arrivals]
+        if pending:
+            self._advance_to(min(s._next_tick_time() for s in pending))
+        elif self.router.has_in_transit:
+            due = self.router.next_control_event()
+            if due is not None:
+                self._advance_to(due)
+                self.router.control_tick(due)
+        return self._finished_since(marks)
+
+    def drain(self, max_ticks: int = 1_000_000) -> List[Request]:
+        marks = self._finished_marks()
+        last = None
+        for _ in range(max_ticks):
+            if not self._cluster_busy:
+                break
+            self.step()
+            # wedge guard: identical clocks + frontiers + completions across
+            # two steps means nothing can unblock (e.g. every waiting request
+            # UT-gated with no decode to retire) — stop instead of spinning
+            state = (tuple((s.backend.time, s.backend.stage_free_at[0])
+                           for s in self.sims),
+                     self._finished_marks(), len(self.router._in_transit))
+            if state == last:
+                break
+            last = state
+        return self._finished_since(marks)
+
     def run(self, arrivals: Iterable[Tuple[float, List[int], int]],
             until: float = float("inf")) -> List[Request]:
         """arrivals: (time, prompt_tokens, output_len), any order.
@@ -781,6 +913,7 @@ class SimCluster:
         out: List[Request] = []
         for sim in self.sims:
             out.extend(sim.metrics.finished)
+        out.extend(self.router._aborted)   # aborted while in transit
         return out
 
     # ------------------------------------------------------------- aggregates

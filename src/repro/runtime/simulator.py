@@ -385,6 +385,75 @@ class PipelineSimulator:
     def scheduler(self) -> PipelineScheduler:   # replica-router signal surface
         return self.sched
 
+    # ------------------------------------------------- engine-compatible API
+    # The serving layer (repro.serving) and `ReplicaRouter` drive engines and
+    # simulators through one surface: add_request / step / abort_request /
+    # has_work / busy / finished / on_token.  For the simulator, "now" is the
+    # virtual clock, and one `step()` is one driver action.
+
+    @property
+    def finished(self) -> List[Request]:
+        return self.metrics.finished
+
+    @property
+    def has_work(self) -> bool:
+        return self.sched.has_work or bool(self._arrivals)
+
+    @property
+    def busy(self) -> bool:
+        return self.loop.busy
+
+    @property
+    def on_token(self):
+        return self.loop.on_token
+
+    @on_token.setter
+    def on_token(self, fn) -> None:
+        self.loop.on_token = fn
+
+    def add_request(self, prompt: List[int],
+                    sampling: Optional[SamplingParams] = None,
+                    request_id: Optional[str] = None) -> Request:
+        """Admit a request at the current virtual instant (the interactive
+        analogue of `inject_request`, which schedules a *future* arrival)."""
+        rid = request_id or f"{self.rid_prefix}{next(self._seq)}"
+        req = Request(rid, list(prompt), sampling or SamplingParams())
+        req.metrics.arrival_time = self.backend.time
+        self.metrics.total_input_tokens += len(prompt)
+        self.sched.add_request(req)
+        if self.recorder is not None:
+            self.recorder.record_arrival(req)
+        return req
+
+    def step(self) -> List[Request]:
+        """One driver action (tick, failure, or arrival jump); returns the
+        requests that finished during it."""
+        before = len(self.metrics.finished)
+        self._advance(float("inf"))
+        return self.metrics.finished[before:]
+
+    def abort_request(self, request_id: str) -> bool:
+        """User abort at the current virtual instant; frees KV immediately
+        for waiting/running requests, at batch retire for in-flight ones."""
+        now = self.backend.time
+        req = self.sched.abort_request(request_id, now)
+        if req is None:
+            return False
+        if self.recorder is not None:
+            self.recorder.record_abort(request_id, now)
+        if req.is_finished:
+            self.loop.backend.finish_request(req)
+            self.metrics.finished.append(req)
+            self.loop.finished.append(req)
+        return True
+
+    def drain(self, max_ticks: int = 100000) -> List[Request]:
+        before = len(self.metrics.finished)
+        for _ in range(max_ticks):
+            if not self._advance(float("inf")):
+                break
+        return self.metrics.finished[before:]
+
     def advance_clock(self, t: float) -> None:
         """Control-plane causality: a request materialized here at `t` (a
         steal or migration delivery) — this replica must not tick earlier."""
@@ -473,7 +542,8 @@ class PipelineSimulator:
     def _apply_failure(self, at: float, downtime: float) -> None:
         # in-flight micro-batches lost: abort + recompute on recovery
         # (reset goes through the loop's backend so a TraceRecorder sees it)
-        self.loop.abort_inflight()
+        affected = self.loop.abort_inflight(at)
+        self.metrics.finished.extend(r for r in affected if r.is_finished)
         self.loop.backend.reset(at + downtime)
 
 

@@ -27,6 +27,9 @@ Record kinds (one JSON object per line):
           budgets that shaped it, KV/queue signals, per-stage latency, and
           the exiting batch's sampled tokens + completion time
   reset   fault recovery: all in-flight work was lost (abort + restart)
+  abort   user-initiated abort of one request (schema 1.1): applied in
+          stream order, so replay reproduces the exact lifecycle —
+          including aborts that finalize at the next batch retire
   migrate control-plane live migration (§9): op="out" drains a request off
           this replica; op="in" adopts one at its current position (full
           request state embedded, so each replica's trace replays alone)
@@ -35,9 +38,11 @@ Record kinds (one JSON object per line):
 Compaction: long production runs repeat most tick fields (steady-state
 decode ticks differ only in `now`/`exit`).  `compact_records` delta-encodes
 ticks against the previous tick — a field absent from a compacted record is
-unchanged — and marks the header `"compact": true`; `Trace.from_records`
-expands transparently, so compacted traces replay, fit, and gate CI exactly
-like raw ones (the expansion is lossless to the byte).
+unchanged, and a steady decode batch (same requests, every position advanced
+by one, consecutive batch id) collapses to the marker `"batch": "+1"` — and
+marks the header `"compact": true`; `Trace.from_records` expands
+transparently, so compacted traces replay, fit, and gate CI exactly like
+raw ones (the expansion is lossless to the byte).
 
 CLI (used by `make trace-check`):
 
@@ -51,8 +56,9 @@ from __future__ import annotations
 
 import json
 import threading
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, IO, List, Optional, Sequence, Tuple, Union
+from typing import Any, Deque, Dict, IO, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -70,7 +76,7 @@ from repro.runtime.core import ExecResult, ExecutionBackend, TickLoop
 SCHEMA = "gllm-trace"
 ROUTE_SCHEMA = "gllm-route"
 SCHEMA_MAJOR = 1
-SCHEMA_MINOR = 0
+SCHEMA_MINOR = 1    # 1.1: added the "abort" record kind
 
 
 class TraceSchemaError(ValueError):
@@ -211,20 +217,58 @@ TICK_FIELDS = ("now", "batch", "prefill_budget", "decode_budget", "kv_free",
 _CANONICAL_TICK_KEYS = ["kind", "tick"] + list(TICK_FIELDS)
 
 
+STEADY_DECODE = "+1"    # batch marker: the cohort's previous batch, +1 step
+
+
+def _is_steady_decode(cohort_batch: Optional[Dict[str, Any]],
+                      batch: Optional[Dict[str, Any]], depth: int) -> bool:
+    """True when `batch` is the *cohort's* previous micro-batch advanced one
+    decode step.  The pipeline's exclusion rule (one resident micro-batch
+    per request) means a decode cohort recurs every `depth` ticks, not every
+    tick — so the reference is the batch from `depth` ticks earlier: no
+    prefill on either side, batch id advanced by exactly `depth` (one id per
+    tick), and the same requests each one position further.  This is the
+    steady state a saturated decode run repeats for thousands of ticks."""
+    if cohort_batch is None or batch is None:
+        return False
+    if cohort_batch["prefill"] or batch["prefill"]:
+        return False
+    if batch["id"] != cohort_batch["id"] + depth:
+        return False
+    return batch["decode"] == [[rid, start + 1]
+                               for rid, start in cohort_batch["decode"]]
+
+
+def _steady_decode_batch(cohort_batch: Dict[str, Any],
+                         depth: int) -> Dict[str, Any]:
+    """Reconstruct a `STEADY_DECODE` batch from the cohort's previous
+    expanded one, in the recorder's canonical key order (byte-identity
+    depends on it)."""
+    return {"id": cohort_batch["id"] + depth,
+            "prefill": [],
+            "decode": [[rid, start + 1] for rid, start in
+                       cohort_batch["decode"]]}
+
+
 def compact_records(records: Sequence[Dict[str, Any]]
                     ) -> List[Dict[str, Any]]:
     """Delta-encode a raw trace: each tick keeps only the fields that differ
-    from the previous tick (steady-state decode runs shrink ~3-5x).  The
-    header gains `"compact": true`; non-tick records pass through verbatim.
-    Raises `TraceSchemaError` on ticks not in the recorder's canonical field
-    order — those could not be re-expanded byte-identically."""
+    from the previous tick, and a steady decode batch (same requests, start
+    positions advanced by one, consecutive id) collapses to the
+    `STEADY_DECODE` marker — decode-heavy runs shrink a further ~2x beyond
+    the scalar-field deltas.  The header gains `"compact": true`; non-tick
+    records pass through verbatim.  Raises `TraceSchemaError` on ticks not
+    in the recorder's canonical field order — those could not be re-expanded
+    byte-identically."""
     header = records[0]
     if header.get("kind") != "header":
         raise TraceSchemaError("first record must be the header")
     if header.get("compact"):
         return list(records)
+    depth = int(header.get("depth", 1))
     out: List[Dict[str, Any]] = [{**header, "compact": True}]
     prev: Optional[Dict[str, Any]] = None
+    ring: Deque[Dict[str, Any]] = deque(maxlen=depth)   # last `depth` ticks
     counter = 0
     for rec in records[1:]:
         if rec.get("kind") != "tick":
@@ -241,7 +285,11 @@ def compact_records(records: Sequence[Dict[str, Any]]
         for f in TICK_FIELDS:
             if prev is None or prev[f] != rec[f]:
                 small[f] = rec[f]
+        if len(ring) == depth and _is_steady_decode(ring[0]["batch"],
+                                                    rec["batch"], depth):
+            small["batch"] = STEADY_DECODE
         prev = rec
+        ring.append(rec)
         out.append(small)
     return out
 
@@ -253,7 +301,9 @@ def expand_records(records: Sequence[Dict[str, Any]]
     tick."""
     header = {k: v for k, v in records[0].items() if k != "compact"}
     out: List[Dict[str, Any]] = [header]
+    depth = int(header.get("depth", 1))
     prev: Optional[Dict[str, Any]] = None
+    ring: Deque[Dict[str, Any]] = deque(maxlen=depth)   # last `depth` ticks
     counter = 0
     for rec in records[1:]:
         if rec.get("kind") != "tick":
@@ -262,7 +312,14 @@ def expand_records(records: Sequence[Dict[str, Any]]
         full: Dict[str, Any] = {"kind": "tick",
                                 "tick": rec.get("tick", counter)}
         for f in TICK_FIELDS:
-            if f in rec:
+            if f == "batch" and rec.get(f) == STEADY_DECODE:
+                if len(ring) < depth or ring[0]["batch"] is None:
+                    raise TraceSchemaError(
+                        f"compacted tick {full['tick']} marks a steady "
+                        "decode batch but its cohort's previous batch is "
+                        "undefined")
+                full[f] = _steady_decode_batch(ring[0]["batch"], depth)
+            elif f in rec:
                 full[f] = rec[f]
             elif prev is not None:
                 full[f] = prev[f]
@@ -273,6 +330,7 @@ def expand_records(records: Sequence[Dict[str, Any]]
         counter = full["tick"] + 1
         out.append(full)
         prev = full
+        ring.append(full)
     return out
 
 
@@ -414,6 +472,13 @@ class TraceRecorder(ExecutionBackend):
             "stop": list(req.sampling.stop_token_ids),
             "temp": req.sampling.temperature,
         })
+
+    def record_abort(self, request_id: str, now: float) -> None:
+        """A user abort was applied to the scheduler (repro.serving).
+        Integrators call this right after `scheduler.abort_request` returns
+        non-None, so replay applies the abort at the same stream position."""
+        self._ensure_header()
+        self.writer.write({"kind": "abort", "rid": request_id, "now": now})
 
     def record_migrate_out(self, request_id: str, now: float) -> None:
         """The control plane drained a request off this replica (§9)."""
@@ -720,6 +785,15 @@ def replay_trace(trace: Trace, *, mode: str = TraceBackend.STRICT,
             loop.abort_inflight()
             now = rec["now"]
             loop_backend.reset(now)
+        elif kind == "abort":
+            # user aborts are part of the workload: re-apply at the recorded
+            # stream position (in-flight ones finalize at the next retire,
+            # exactly as they did live)
+            req = sched.abort_request(rec["rid"], rec["now"])
+            if req is not None and req.is_finished:
+                loop.finished.append(req)
+            if recorder is not None:
+                recorder.record_abort(rec["rid"], rec["now"])
         elif kind == "migrate":
             # control-plane moves are applied in stream order, exactly where
             # the recording interleaved them between ticks (§9)

@@ -1,0 +1,58 @@
+"""repro.serving — the public serving API (DESIGN.md §10).
+
+One declarative spec (`ServeSpec`), one factory (`build`), one client
+surface (`LLMServer` with `generate` / `generate_stream` / `abort`),
+whatever the execution substrate: live engine, roofline simulator,
+recorded-trace replay, or a globally-balanced multi-replica cluster.
+
+    from repro.serving import ServeSpec, SamplingParams, build
+
+    server = build(ServeSpec())                    # a reduced engine
+    out = server.generate([1, 2, 3], SamplingParams(max_new_tokens=8))
+    print(out.token_ids, out.finish_reason)
+"""
+
+from repro.core import SamplingParams
+from repro.runtime.router import RebalancePolicy, ReplicaCapacity
+from repro.serving.build import build
+from repro.serving.server import (
+    EVENT_PREEMPT,
+    EVENT_PREEMPT_RESUMED,
+    FINISH_ABORT,
+    FINISH_LENGTH,
+    FINISH_STOP,
+    LLMServer,
+    ReplicaStats,
+    RequestOutput,
+    ServerStats,
+    TokenDelta,
+)
+from repro.serving.spec import (
+    ClusterSpec,
+    EngineSpec,
+    ServeSpec,
+    SimSpec,
+    TraceSpec,
+)
+
+__all__ = [
+    "SamplingParams",
+    "RebalancePolicy",
+    "ReplicaCapacity",
+    "build",
+    "LLMServer",
+    "RequestOutput",
+    "TokenDelta",
+    "ReplicaStats",
+    "ServerStats",
+    "FINISH_STOP",
+    "FINISH_LENGTH",
+    "FINISH_ABORT",
+    "EVENT_PREEMPT",
+    "EVENT_PREEMPT_RESUMED",
+    "ClusterSpec",
+    "EngineSpec",
+    "SimSpec",
+    "TraceSpec",
+    "ServeSpec",
+]

@@ -1,0 +1,264 @@
+"""`build(spec) -> LLMServer`: materialize a `ServeSpec` (DESIGN.md §10).
+
+The four shapes, one factory:
+
+  * engine, 1 replica      -> `PipelineEngine` (exact jitted SPMD tick)
+  * engine, N replicas     -> `ReplicaRouter` over N engines sharing one
+                              read-only parameter tree
+  * sim, 1 or N replicas   -> `PipelineSimulator` / `SimCluster` on the
+                              calibrated roofline cost model
+  * trace replay           -> the recorded stream (strict bit-identity via
+                              `LLMServer.replay()`, or a timing-only engine
+                              that serves new requests at recorded costs)
+
+This module owns all construction; the spec layer stays pure data and the
+launchers/benchmarks/examples stay thin flag->spec translations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, List, Optional, Tuple
+
+from repro.serving.server import LLMServer
+from repro.serving.spec import ServeSpec, TraceSpec
+
+# Reduced-mode defaults: small enough that the exact engine executes on a
+# CPU container, throttle horizons scaled to the toy bucket (the same
+# numbers every example and integration test has been using).
+_REDUCED_THROTTLE = dict(num_iters_T=4, max_prefill_tokens=32,
+                         min_prefill_tokens=4)
+_REDUCED_DIMS = dict(Sp=1, C=32, Sd=8, pages=512, page=8, Bp=64, Bd=64,
+                     slots=16)
+
+
+def build(spec: ServeSpec) -> LLMServer:
+    """The one public entry point: every serving scenario starts here."""
+    if spec.backend == "trace":
+        return _build_trace_server(spec)
+    if spec.backend == "sim":
+        engine, cfg = _build_sim(spec)
+    else:
+        engine, cfg = _build_engine(spec)
+    return LLMServer(engine, spec=spec, cfg=cfg)
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+def _throttle_config(spec: ServeSpec, pipeline_depth: int, *,
+                     reduced: bool):
+    from repro.core import PrefillPolicy, ThrottleConfig
+    kw = dict(_REDUCED_THROTTLE) if reduced else {}
+    kw.update(pipeline_depth=pipeline_depth,
+              policy=PrefillPolicy(spec.engine.policy))
+    kw.update(spec.engine.throttle or {})
+    return ThrottleConfig(**kw)
+
+
+def _build_engine(spec: ServeSpec) -> Tuple[Any, Any]:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs import get_config, make_reduced
+    from repro.configs.base import ASSIGNED_SHAPES
+    from repro.launch.mesh import derive_pipeline_mesh, make_production_mesh
+    from repro.launch.shapes import serve_cell_dims
+    from repro.models import transformer as tfm
+    from repro.models.serve import ServeDims
+    from repro.runtime.engine import PipelineEngine
+
+    es = spec.engine
+    cfg = get_config(es.arch)
+    if es.reduced:
+        cfg = make_reduced(cfg, **(es.reduced_overrides or {})).with_plan(
+            pp=1, tp=1, ep_over_data=False)
+        cfg = dataclasses.replace(
+            cfg, dtype="float32",
+            moe_capacity_factor=float(max(cfg.num_experts, 1)))
+        mesh = jax.make_mesh((1, 1, 1), ("data", "stage", "tensor"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        dims_kw = dict(_REDUCED_DIMS,
+                       Te=16 if cfg.is_encoder_decoder else 0)
+        dims_kw.update(es.dims or {})
+        dims = ServeDims(**dims_kw)
+        th = _throttle_config(spec, 1, reduced=True)
+    else:
+        if es.reduced_overrides:
+            raise ValueError(
+                "EngineSpec.reduced_overrides only applies to reduced mode")
+        prod = make_production_mesh()
+        mesh = derive_pipeline_mesh(prod, cfg.plan.pp, cfg.plan.tp)
+        dims = serve_cell_dims(cfg, ASSIGNED_SHAPES["prefill_32k"],
+                               data=mesh.shape["data"])
+        if es.dims:
+            dims = dataclasses.replace(dims, **es.dims)
+        th = _throttle_config(spec, cfg.plan.pp, reduced=False)
+
+    n = spec.num_replicas
+    record = spec.trace.record if spec.trace is not None else None
+    with jax.set_mesh(mesh):
+        params = tfm.init_params(cfg, jax.random.key(es.seed),
+                                 dtype=jnp.dtype(cfg.dtype))
+        params = jax.tree.map(
+            lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+            params, tfm.param_pspecs(cfg),
+            is_leaf=lambda x: isinstance(x, P))
+        # replicas share the (read-only) parameter tree; each owns its KV
+        # pool, caches, scheduler, and TickLoop
+        engines = [PipelineEngine(cfg, dims, params, mesh, th,
+                                  trace_path=_replica_trace(record, i, n))
+                   for i in range(n)]
+    if spec.cluster is None and n == 1:
+        return engines[0], cfg
+    return _wrap_router(spec, engines, record), cfg
+
+
+def _replica_trace(record: Optional[str], i: int, n: int) -> Optional[str]:
+    if record is None:
+        return None
+    return record if n == 1 else f"{record}.replica{i}"
+
+
+def _wrap_router(spec: ServeSpec, replicas: List[Any],
+                 record: Optional[str]):
+    from repro.runtime.router import ReplicaRouter
+    cl = spec.cluster
+    return ReplicaRouter(
+        replicas,
+        policy=cl.route,
+        rebalance=cl.rebalance,
+        capacities=cl.capacities,
+        trace_path=None if record is None else f"{record}.router",
+    )
+
+
+# ---------------------------------------------------------------------------
+# sim
+# ---------------------------------------------------------------------------
+
+def _build_sim(spec: ServeSpec) -> Tuple[Any, Any]:
+    from repro.configs import get_config
+    from repro.core import PagedKVManager, PipelineScheduler
+    from repro.runtime.router import ReplicaRouter, SimCluster
+    from repro.runtime.simulator import (PipelineSimulator, RuntimeModel,
+                                         cost_model_for)
+
+    ss = spec.sim
+    cfg = get_config(spec.engine.arch)
+    th = _throttle_config(spec, ss.pp, reduced=False)
+    runtime = (RuntimeModel.vllm_like() if ss.runtime == "vllm"
+               else RuntimeModel.gllm())
+    n = spec.num_replicas
+    record = spec.trace.record if spec.trace is not None else None
+
+    def one(i: int) -> PipelineSimulator:
+        kv = PagedKVManager(num_pages=ss.pages, page_size=ss.page_size)
+        sched = PipelineScheduler(th, kv,
+                                  max_model_len=ss.pages * ss.page_size)
+        return PipelineSimulator(
+            sched, ss.pp,
+            cost_model_for(cfg, chips_per_stage=ss.chips_per_stage,
+                           pp=ss.pp),
+            runtime,
+            straggler_stage=ss.straggler_stage,
+            straggler_factor=ss.straggler_factor,
+            # clusters record via SimCluster's trace_dir layout instead
+            trace_path=record if spec.cluster is None else None)
+
+    sims = [one(i) for i in range(n)]
+    if spec.cluster is None and n == 1:
+        return sims[0], cfg
+    router = _wrap_router(spec, sims, None)
+    # SimCluster owns cluster trace layout: one tick trace per replica plus
+    # the router placement stream, under `record` as a directory
+    return SimCluster(sims, router, trace_dir=record), cfg
+
+
+# ---------------------------------------------------------------------------
+# trace replay
+# ---------------------------------------------------------------------------
+
+class TraceReplayEngine:
+    """Engine-surface adapter over a recorded trace in *timing-only* mode:
+    new requests are welcome, the scheduler decides freely, and each tick
+    costs what the recorded tick cost — the what-if serving substrate.
+    Once the recording's ticks are exhausted, further ticks advance a
+    fixed 1ms synthetic clock (matching `replay_trace`)."""
+
+    def __init__(self, trace) -> None:
+        from repro.runtime.core import TickLoop
+        from repro.runtime.trace import TraceBackend, scheduler_from_header
+
+        self.trace = trace
+        self.scheduler = scheduler_from_header(trace.header)
+        self.backend = TraceBackend(trace, TraceBackend.TIMING)
+        self.loop = TickLoop(self.scheduler, self.backend)
+        self._now = 0.0
+        self._seq = itertools.count()
+        self.recorder = None
+
+    # ------------------------------------------------------- engine surface
+    @property
+    def finished(self):
+        return self.loop.finished
+
+    @property
+    def has_work(self) -> bool:
+        return self.scheduler.has_work
+
+    @property
+    def busy(self) -> bool:
+        return self.loop.busy
+
+    @property
+    def on_token(self):
+        return self.loop.on_token
+
+    @on_token.setter
+    def on_token(self, fn) -> None:
+        self.loop.on_token = fn
+
+    def add_request(self, prompt, sampling=None, request_id=None):
+        from repro.core import Request, SamplingParams
+        rid = request_id or f"replay-{next(self._seq)}"
+        req = Request(rid, list(prompt), sampling or SamplingParams())
+        req.metrics.arrival_time = self._clock()
+        self.scheduler.add_request(req)
+        return req
+
+    def step(self):
+        now = self._clock()
+        if self.backend._k >= len(self.backend._ticks):
+            now = self._now = self._now + 1e-3
+        self._now = max(self._now, now)
+        return self.loop.step(now)
+
+    def abort_request(self, request_id: str) -> bool:
+        req = self.scheduler.abort_request(request_id, self._clock())
+        if req is None:
+            return False
+        if req.is_finished:
+            self.loop.finished.append(req)
+        return True
+
+    def _clock(self) -> float:
+        return max(self._now, self.backend.clock())
+
+
+def _build_trace_server(spec: ServeSpec) -> LLMServer:
+    from repro.runtime.trace import Trace, TraceBackend
+
+    trace = Trace.load(spec.trace.replay)
+    if spec.trace.timing_only:
+        engine = TraceReplayEngine(trace)
+        return LLMServer(engine, spec=spec, replay=trace,
+                         replay_mode=TraceBackend.TIMING)
+    # strict replay: the workload IS the recording; LLMServer.replay()
+    # reproduces it bit-for-bit (no interactive substrate to submit into)
+    return LLMServer(None, spec=spec, replay=trace,
+                     replay_mode=TraceBackend.STRICT)

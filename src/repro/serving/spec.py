@@ -1,0 +1,202 @@
+"""Declarative serving specs — the single construction language of the
+public API (DESIGN.md §10).
+
+Every serving scenario in this repo — a live engine on the mesh, the
+calibrated discrete-event simulator, a recorded-trace replay, a
+multi-replica cluster of either — is described by one `ServeSpec` value and
+materialized by `repro.serving.build(spec)`.  Launchers, benchmarks, and
+examples translate their flags into a spec instead of wiring
+scheduler/KV/backend kwargs by hand, and a spec round-trips through JSON
+(`to_json`/`from_json`) so a scenario can be checked in, diffed, and
+reproduced byte-for-byte.
+
+The spec layer is *pure data*: nothing here imports jax or touches a
+device; all construction lives in `repro.serving.build`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple, Union
+
+from repro.runtime.router import RebalancePolicy, ReplicaCapacity
+
+BACKENDS = ("engine", "sim", "trace")
+
+
+@dataclass(frozen=True)
+class EngineSpec:
+    """What model to serve and under which throttle policy.
+
+    `reduced=True` builds the same-family reduced config (the CPU-sized
+    model every test and example runs); `reduced=False` uses the published
+    config on the production mesh factoring from the arch's plan (TPU).
+    `throttle` / `dims` are sparse overrides onto the backend's defaults
+    (`ThrottleConfig` fields, `ServeDims` fields); `reduced_overrides` is
+    passed to `make_reduced` (e.g. ``{"d_model": 128}``).
+    """
+
+    arch: str = "qwen1.5-0.5b"
+    reduced: bool = True
+    policy: str = "gllm"            # gllm | sarathi | no_wt | no_ut
+    seed: int = 0
+    throttle: Optional[Dict[str, Any]] = None
+    dims: Optional[Dict[str, Any]] = None
+    reduced_overrides: Optional[Dict[str, Any]] = None
+
+
+@dataclass(frozen=True)
+class SimSpec:
+    """Simulator geometry: the roofline cost model comes from
+    `EngineSpec.arch`; these are the per-replica pipeline/KV shapes."""
+
+    pp: int = 4
+    pages: int = 2048
+    page_size: int = 16
+    runtime: str = "gllm"           # gllm | vllm (driver-overhead model)
+    straggler_stage: Optional[int] = None
+    straggler_factor: float = 1.0
+    chips_per_stage: int = 1
+
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    """Multi-replica layout: how many replicas, how requests are placed,
+    whether the periodic control plane runs, and optional static capacity
+    hints (`ReplicaCapacity` or bare throughput scalars, one per replica).
+    """
+
+    replicas: int = 1
+    route: str = "balanced"         # balanced | rr
+    rebalance: Optional[RebalancePolicy] = None
+    capacities: Optional[Tuple[Union[ReplicaCapacity, float], ...]] = None
+
+    def __post_init__(self) -> None:
+        if self.replicas < 1:
+            raise ValueError("ClusterSpec.replicas must be >= 1")
+        if self.capacities is not None:
+            object.__setattr__(self, "capacities", tuple(self.capacities))
+            if len(self.capacities) != self.replicas:
+                raise ValueError("one capacity per replica")
+
+
+@dataclass(frozen=True)
+class TraceSpec:
+    """Recording / replay of the run (DESIGN.md §8).
+
+    `record` — path to record a replayable tick trace to (multi-replica
+    engine runs write ``PATH.replicaN`` + ``PATH.router``; sim clusters
+    treat it as a directory).  `replay` — path of a recorded trace to drive
+    instead of a model: strict mode reproduces the recorded run
+    bit-for-bit via `LLMServer.replay()`; `timing_only=True` serves *new*
+    requests with the recorded per-tick costs (the what-if server).
+    """
+
+    record: Optional[str] = None
+    replay: Optional[str] = None
+    timing_only: bool = False
+
+
+@dataclass(frozen=True)
+class ServeSpec:
+    """One serving scenario, fully specified.
+
+    `backend` selects the execution substrate: ``"engine"`` (exact jitted
+    SPMD tick), ``"sim"`` (calibrated roofline), ``"trace"`` (a recording).
+    `cluster=None` means one replica.  All four acceptance shapes are
+    spellable:
+
+        ServeSpec()                                            # one engine
+        ServeSpec(backend="sim")                               # one sim
+        ServeSpec(cluster=ClusterSpec(replicas=4))             # engine cluster
+        ServeSpec(backend="trace",
+                  trace=TraceSpec(replay="run.jsonl"))         # replay
+    """
+
+    backend: str = "engine"
+    engine: EngineSpec = field(default_factory=EngineSpec)
+    sim: SimSpec = field(default_factory=SimSpec)
+    cluster: Optional[ClusterSpec] = None
+    trace: Optional[TraceSpec] = None
+
+    def __post_init__(self) -> None:
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; expected one of "
+                f"{BACKENDS}")
+        if self.backend == "trace":
+            if self.trace is None or self.trace.replay is None:
+                raise ValueError(
+                    'backend="trace" needs trace=TraceSpec(replay=...)')
+            if self.cluster is not None:
+                raise ValueError("trace replay is per-replica; replay each "
+                                 "recorded trace with its own spec")
+
+    @property
+    def num_replicas(self) -> int:
+        return self.cluster.replicas if self.cluster is not None else 1
+
+    # ------------------------------------------------------------------- json
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(_encode(self), indent=indent,
+                          separators=None if indent else (",", ":"))
+
+    @staticmethod
+    def from_json(text: str) -> "ServeSpec":
+        return spec_from_dict(json.loads(text))
+
+
+# ---------------------------------------------------------------------------
+# JSON (de)serialization — the round trip is exact: from_json(to_json(s)) == s
+# ---------------------------------------------------------------------------
+
+def _encode(obj: Any) -> Any:
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return {f.name: _encode(getattr(obj, f.name))
+                for f in dataclasses.fields(obj)}
+    if isinstance(obj, (list, tuple)):
+        return [_encode(v) for v in obj]
+    if isinstance(obj, dict):
+        return {k: _encode(v) for k, v in obj.items()}
+    return obj
+
+
+def _decode_capacity(c: Any) -> Union[ReplicaCapacity, float]:
+    if isinstance(c, dict):
+        return ReplicaCapacity(**c)
+    return float(c)
+
+
+def spec_from_dict(d: Dict[str, Any]) -> ServeSpec:
+    """Rebuild a `ServeSpec` from its JSON object form.  Unknown keys raise
+    (a spec is a contract — silently dropping a typo'd field would serve a
+    different scenario than the one written down)."""
+    d = dict(d)
+    kw: Dict[str, Any] = {}
+    if "backend" in d:
+        kw["backend"] = d.pop("backend")
+    if d.get("engine") is not None:
+        kw["engine"] = EngineSpec(**d.pop("engine"))
+    else:
+        d.pop("engine", None)
+    if d.get("sim") is not None:
+        kw["sim"] = SimSpec(**d.pop("sim"))
+    else:
+        d.pop("sim", None)
+    cluster = d.pop("cluster", None)
+    if cluster is not None:
+        cluster = dict(cluster)
+        if cluster.get("rebalance") is not None:
+            cluster["rebalance"] = RebalancePolicy(**cluster["rebalance"])
+        if cluster.get("capacities") is not None:
+            cluster["capacities"] = tuple(
+                _decode_capacity(c) for c in cluster["capacities"])
+        kw["cluster"] = ClusterSpec(**cluster)
+    trace = d.pop("trace", None)
+    if trace is not None:
+        kw["trace"] = TraceSpec(**trace)
+    if d:
+        raise ValueError(f"unknown ServeSpec fields: {sorted(d)}")
+    return ServeSpec(**kw)

@@ -1,0 +1,434 @@
+"""API-conformance suite for the public serving API (DESIGN.md §10).
+
+The same generate / stream / abort / stop-token scenarios run against every
+execution substrate `serving.build` can produce — the roofline simulator,
+the exact engine, and a timing-only trace replay, single- and
+multi-replica — through the one `LLMServer` surface.  Where determinism
+holds (greedy engines, placeholder-token sims, strict replay) outputs are
+asserted identical.
+
+Also here: the abort-semantics regression tests (mid-queue, mid-decode,
+in-flight, stolen-waiting, and mid-KV-migration — slots and pages must free
+in every case), the spec JSON round trip, the service-rate EWMA surface,
+and the deprecation-shim warnings.
+"""
+
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.serving import (
+    FINISH_ABORT,
+    FINISH_LENGTH,
+    FINISH_STOP,
+    ClusterSpec,
+    EngineSpec,
+    RebalancePolicy,
+    ReplicaCapacity,
+    SamplingParams,
+    ServeSpec,
+    SimSpec,
+    TraceSpec,
+    build,
+)
+
+SIM_ENGINE = EngineSpec(arch="qwen2.5-14b")
+SIM = SimSpec(pp=2, pages=256, page_size=8)
+TOY_ENGINE = EngineSpec(
+    arch="qwen1.5-0.5b",
+    throttle=dict(num_iters_T=2, max_prefill_tokens=16,
+                  min_prefill_tokens=4),
+    dims=dict(C=16, pages=256, Bp=32, Bd=32))
+
+BACKENDS = ["sim", "sim2", "engine", "engine2", "replay"]
+
+
+def make_spec(kind, record=None):
+    trace = TraceSpec(record=record) if record else None
+    if kind == "sim":
+        return ServeSpec(backend="sim", engine=SIM_ENGINE, sim=SIM,
+                         trace=trace)
+    if kind == "sim2":
+        return ServeSpec(backend="sim", engine=SIM_ENGINE, sim=SIM,
+                         cluster=ClusterSpec(replicas=2), trace=trace)
+    if kind == "engine":
+        return ServeSpec(engine=TOY_ENGINE, trace=trace)
+    if kind == "engine2":
+        return ServeSpec(engine=TOY_ENGINE,
+                         cluster=ClusterSpec(replicas=2), trace=trace)
+    raise ValueError(kind)
+
+
+@pytest.fixture(scope="module")
+def replay_source(tmp_path_factory):
+    """A recorded sim run: the substrate of the timing-only replay server."""
+    path = str(tmp_path_factory.mktemp("traces") / "source.trace.jsonl")
+    srv = build(make_spec("sim", record=path))
+    for i in range(4):
+        srv.submit([i + 1] * 12, SamplingParams(max_new_tokens=6))
+    srv.drain()
+    srv.close()
+    return path
+
+
+@pytest.fixture(scope="module", params=BACKENDS)
+def server(request, replay_source):
+    if request.param == "replay":
+        return build(ServeSpec(
+            backend="trace",
+            trace=TraceSpec(replay=replay_source, timing_only=True)))
+    return build(make_spec(request.param))
+
+
+def prompt(server, n, seed=0):
+    rng = np.random.default_rng(seed)
+    vocab = server.cfg.vocab_size if server.cfg is not None else 1000
+    return list(rng.integers(0, vocab, n))
+
+
+# ---------------------------------------------------------------------------
+# the shared scenarios
+# ---------------------------------------------------------------------------
+
+class TestConformance:
+    def test_generate_runs_to_length(self, server):
+        out = server.generate(prompt(server, 11),
+                              SamplingParams(max_new_tokens=4))
+        assert out.finish_reason == FINISH_LENGTH
+        assert len(out.token_ids) == 4
+        assert out.metrics.ttft() is not None and out.metrics.ttft() >= 0
+        assert out.metrics.e2el() >= out.metrics.ttft()
+
+    def test_generate_is_deterministic(self, server):
+        p = prompt(server, 9, seed=1)
+        a = server.generate(p, SamplingParams(max_new_tokens=4))
+        b = server.generate(p, SamplingParams(max_new_tokens=4))
+        assert a.token_ids == b.token_ids        # greedy / placeholder / replayed
+
+    def test_stop_token_truncates(self, server):
+        p = prompt(server, 8, seed=2)
+        ref = server.generate(p, SamplingParams(max_new_tokens=6))
+        stop = ref.token_ids[1]
+        cut = ref.token_ids.index(stop)
+        out = server.generate(p, SamplingParams(max_new_tokens=6,
+                                                stop_token_ids=(stop,)))
+        assert out.finish_reason == FINISH_STOP
+        assert out.token_ids == ref.token_ids[:cut + 1]
+
+    def test_stream_deltas_are_contiguous_and_terminated(self, server):
+        async def run():
+            deltas = []
+            async for d in server.generate_stream(
+                    prompt(server, 7, seed=3),
+                    SamplingParams(max_new_tokens=3)):
+                deltas.append(d)
+            return deltas
+
+        deltas = asyncio.run(run())
+        tokens = [d for d in deltas if d.token is not None]
+        assert [d.index for d in tokens] == [1, 2, 3]
+        assert deltas[-1].finish_reason == FINISH_LENGTH
+        assert all(d.finish_reason is None for d in deltas[:-1])
+
+    def test_abort_mid_queue(self, server):
+        long_rid = server.submit(prompt(server, 10, seed=4),
+                                 SamplingParams(max_new_tokens=6))
+        rid = server.submit(prompt(server, 10, seed=5),
+                            SamplingParams(max_new_tokens=6))
+        assert server.abort(rid)                 # still waiting: immediate
+        out = server.get(rid)
+        assert out.finish_reason == FINISH_ABORT
+        assert out.token_ids == []
+        server.drain()
+        assert server.get(long_rid).finish_reason == FINISH_LENGTH
+        self._assert_no_leak(server, rid)
+
+    def test_abort_mid_decode(self, server):
+        rid = server.submit(prompt(server, 10, seed=6),
+                            SamplingParams(max_new_tokens=64))
+        req = server._requests[rid]
+        for _ in range(200):
+            if req.num_output_tokens >= 1:
+                break
+            server.step()
+        assert req.num_output_tokens >= 1, "request never started decoding"
+        assert server.abort(rid)
+        server.drain()
+        out = server.get(rid)
+        assert out.finish_reason == FINISH_ABORT
+        assert len(out.token_ids) < 64
+        self._assert_no_leak(server, rid)
+        # the aborted stream surfaces the abort, not a trailing token
+        assert server.abort(rid) is False        # already finished
+
+    def test_stats_expose_service_rate(self, server):
+        server.generate(prompt(server, 8, seed=7),
+                        SamplingParams(max_new_tokens=4))
+        stats = server.stats()
+        assert stats.tokens_retired > 0
+        assert any(r.service_rate is not None and r.service_rate > 0
+                   for r in stats.replicas)
+        for r in stats.replicas:
+            assert 0.0 <= r.kv_free_rate <= 1.0
+        if server.router is not None:
+            assert stats.routed_counts is not None
+            assert sum(stats.routed_counts) > 0
+
+    @staticmethod
+    def _assert_no_leak(server, rid):
+        for replica in server.replicas:
+            sched = replica.scheduler
+            assert not sched.kv.has_request(rid)
+            assert all(r.request_id != rid for r in sched.waiting)
+            assert all(r.request_id != rid for r in sched.running_decode)
+            assert all(r.request_id != rid for r in sched.running_prefill)
+            slots = getattr(replica, "slots", None)
+            if slots is not None:
+                assert rid not in slots.owner
+
+
+# ---------------------------------------------------------------------------
+# determinism across substrates: record -> strict replay is bit-identical
+# ---------------------------------------------------------------------------
+
+def _scenario(server):
+    """The canonical mixed scenario: a normal request, an aborted one, a
+    stop-token one.  Returns {rid: (tokens, finish_reason)}."""
+    r1 = server.submit([1] * 16, SamplingParams(max_new_tokens=6))
+    r2 = server.submit([2] * 20, SamplingParams(max_new_tokens=40))
+    server.step(); server.step(); server.step()
+    assert server.abort(r2)
+    r3 = server.submit([3] * 10, SamplingParams(max_new_tokens=4,
+                                                stop_token_ids=(0,)))
+    server.drain()
+    return {o.request_id: (tuple(o.token_ids), o.finish_reason)
+            for o in server.outputs([r1, r2, r3])}
+
+
+def test_strict_replay_reproduces_recorded_scenario(tmp_path):
+    path = str(tmp_path / "scenario.trace.jsonl")
+    rec = build(make_spec("sim", record=path))
+    want = _scenario(rec)
+    rec.close()
+    assert sorted(r for _, r in want.values()) == ["abort", "length", "stop"]
+
+    replay = build(ServeSpec(backend="trace", trace=TraceSpec(replay=path)))
+    outs = replay.replay()
+    got = {o.request_id: (tuple(o.token_ids), o.finish_reason) for o in outs}
+    assert got == want
+
+    # interactive calls are refused with a pointer at the right spec
+    with pytest.raises(RuntimeError, match="timing_only"):
+        replay.generate([1, 2, 3])
+
+
+def test_sim_rebuild_is_deterministic():
+    a = build(make_spec("sim"))
+    b = build(make_spec("sim"))
+    wa = _scenario(a)
+    wb = _scenario(b)
+    assert set(wa.values()) == set(wb.values())  # fresh rid namespaces
+
+
+# ---------------------------------------------------------------------------
+# abort through the router: steal queues and in-transit migrations
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def sim_cluster_server():
+    return build(ServeSpec(backend="sim", engine=SIM_ENGINE,
+                           sim=SimSpec(pp=2, pages=128, page_size=8),
+                           cluster=ClusterSpec(replicas=2)))
+
+
+def test_abort_in_transit_migration_frees_everything(sim_cluster_server):
+    """Regression: aborting a request whose KV payload is between replicas
+    must drop the queued delivery — neither replica may end up holding its
+    pages, and the migration bookkeeping must clear."""
+    srv = sim_cluster_server
+    cluster = srv.engine
+    router = cluster.router
+    rid = srv.submit([1] * 24, SamplingParams(max_new_tokens=64))
+    for _ in range(8):
+        srv.step()
+    src = next(i for i, s in enumerate(cluster.sims)
+               if s.scheduler.kv.has_request(rid))
+    assert router.migrate_request(rid, src, 1 - src)
+    assert router.has_in_transit                 # modeled transfer latency
+    assert srv.abort(rid)
+    assert not router.has_in_transit
+    assert srv.get(rid).finish_reason == FINISH_ABORT
+    srv.drain()
+    for s in cluster.sims:
+        assert not s.scheduler.kv.has_request(rid)
+        assert s.scheduler.kv.kv_free_rate == 1.0
+    assert rid not in router._migrations_of
+    assert rid in {r.request_id for r in router.finished}
+
+
+def test_abort_stolen_waiting_request(sim_cluster_server):
+    """Regression: a waiting request drained off one replica and adopted by
+    another (the control plane's steal path) must abort cleanly on the
+    destination."""
+    srv = sim_cluster_server
+    cluster = srv.engine
+    router = cluster.router
+    rid = srv.submit([2] * 16, SamplingParams(max_new_tokens=8))
+    src = next(i for i, s in enumerate(cluster.sims)
+               if any(r.request_id == rid for r in s.scheduler.waiting))
+    assert router.migrate_request(rid, src, 1 - src)   # waiting => steal
+    dst = cluster.sims[1 - src].scheduler
+    assert any(r.request_id == rid for r in dst.waiting)
+    assert srv.abort(rid)
+    assert srv.get(rid).finish_reason == FINISH_ABORT
+    assert not any(r.request_id == rid for r in dst.waiting)
+    assert dst.kv.kv_free_rate == 1.0
+
+
+def test_cluster_drain_reports_each_finish_exactly_once():
+    """Regression: finishes land in per-replica lists, so "what finished
+    since" must be tracked per source — slicing the concatenated list
+    dropped replica-0 finishes and duplicated replica-1's tail."""
+    srv = build(ServeSpec(backend="sim", engine=SIM_ENGINE, sim=SIM,
+                          cluster=ClusterSpec(replicas=2)))
+    rids = [srv.submit([i + 1] * 12, SamplingParams(max_new_tokens=4))
+            for i in range(6)]
+    seen = [o.request_id for o in srv.drain()]
+    assert sorted(seen) == sorted(rids), seen
+    assert min(srv.stats().routed_counts) >= 1, "needs both replicas used"
+
+
+def test_fault_finalizes_pending_abort():
+    """Regression: a worker fault hitting a micro-batch whose request has a
+    pending abort must finalize the abort (KV freed, surfaced through the
+    finished lists with a sane finish time), not requeue a recompute."""
+    srv = build(ServeSpec(backend="sim", engine=SIM_ENGINE,
+                          sim=SimSpec(pp=2, pages=256, page_size=8)))
+    sim = srv.engine
+    rid = srv.submit([1] * 12, SamplingParams(max_new_tokens=8))
+    srv.step()                        # micro-batch in flight (depth 2)
+    req = srv._requests[rid]
+    assert srv.abort(rid) and not req.is_finished     # deferred
+    sim.inject_failure(sim.backend.time, downtime=0.5)
+    srv.drain()
+    out = srv.get(rid)
+    assert out.finish_reason == FINISH_ABORT
+    assert out.metrics.finish_time >= out.metrics.arrival_time
+    assert rid in {r.request_id for r in sim.metrics.finished}
+    assert sim.scheduler.kv.kv_free_rate == 1.0
+    assert not sim.scheduler.has_work
+
+
+def test_abort_in_flight_finalizes_at_retire():
+    """Scheduler-level: an abort landing while the request is inside an
+    in-flight micro-batch defers to complete(), which discards the sampled
+    token, frees the KV, and reports the request finished."""
+    from repro.core import (PagedKVManager, PipelineScheduler, Request,
+                            ThrottleConfig)
+    sched = PipelineScheduler(ThrottleConfig(pipeline_depth=2),
+                              PagedKVManager(64, 8))
+    req = Request("r1", [1] * 12, SamplingParams(max_new_tokens=8))
+    sched.add_request(req)
+    batch = sched.schedule(0.0)
+    assert [s.request.request_id for s in batch.seqs] == ["r1"]
+    got = sched.abort_request("r1", 0.5)
+    assert got is req and not req.is_finished    # deferred
+    assert sched.kv.has_request("r1")            # still materializing
+    finished = sched.complete(batch.batch_id, [7], 1.0)
+    assert finished == [req]
+    assert req.finish_reason == FINISH_ABORT
+    assert req.output_token_ids == []            # sampled token discarded
+    assert not sched.kv.has_request("r1")
+    assert not sched.has_work
+    sched.check_invariants()
+
+
+def test_preemption_surfaces_stream_events():
+    """A preempted-then-recovered request's stream carries the
+    event="preempt" delta and tags the first recomputed token."""
+    from repro.serving import EVENT_PREEMPT, EVENT_PREEMPT_RESUMED
+    srv = build(ServeSpec(backend="sim", engine=SIM_ENGINE,
+                          sim=SimSpec(pp=1, pages=8, page_size=4)))
+
+    async def run():
+        outs = await asyncio.gather(*[
+            _collect(srv.generate_stream([i + 1] * 8,
+                                         SamplingParams(max_new_tokens=16)))
+            for i in range(2)])
+        return outs
+
+    deltas = [d for out in asyncio.run(run()) for d in out]
+    assert srv.stats().replicas[0].preemptions >= 1, "needs KV pressure"
+    events = [d.event for d in deltas if d.event is not None]
+    assert EVENT_PREEMPT in events
+    assert EVENT_PREEMPT_RESUMED in events
+    # every stream still terminated exactly once
+    finals = [d for d in deltas if d.finish_reason is not None]
+    assert len(finals) == 2
+
+
+async def _collect(stream):
+    return [d async for d in stream]
+
+
+# ---------------------------------------------------------------------------
+# spec JSON round trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", [
+    ServeSpec(),
+    ServeSpec(backend="sim", sim=SimSpec(pp=8, straggler_stage=2,
+                                         straggler_factor=1.5)),
+    ServeSpec(backend="trace", trace=TraceSpec(replay="x.jsonl",
+                                               timing_only=True)),
+    ServeSpec(engine=EngineSpec(arch="qwen2.5-14b", policy="sarathi",
+                                throttle={"num_iters_T": 2},
+                                dims={"Sd": 16}),
+              cluster=ClusterSpec(
+                  replicas=3, route="rr",
+                  rebalance=RebalancePolicy(interval=0.5, migrate=False),
+                  capacities=(1.0, ReplicaCapacity.straggler(4, 2.0),
+                              ReplicaCapacity.scaled(1.5))),
+              trace=TraceSpec(record="out.jsonl")),
+])
+def test_spec_json_round_trip(spec):
+    assert ServeSpec.from_json(spec.to_json()) == spec
+    assert ServeSpec.from_json(spec.to_json(indent=2)) == spec
+
+
+def test_spec_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown"):
+        ServeSpec.from_json('{"backend": "sim", "typo": 1}')
+
+
+def test_spec_validates_shapes():
+    with pytest.raises(ValueError):
+        ServeSpec(backend="trace")               # replay path required
+    with pytest.raises(ValueError):
+        ServeSpec(backend="nope")
+    with pytest.raises(ValueError):
+        ClusterSpec(replicas=0)
+    with pytest.raises(ValueError):
+        ClusterSpec(replicas=2, capacities=(1.0,))
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_async_frontend_shim_warns():
+    from repro.runtime.frontend import AsyncFrontend
+    from repro.runtime.router import ReplicaRouter
+    srv = build(make_spec("sim"))
+    with pytest.warns(DeprecationWarning, match="generate_stream"):
+        AsyncFrontend(ReplicaRouter([srv.engine]))
+
+
+def test_build_engine_shim_warns_and_still_builds():
+    from repro.launch.serve import build_engine
+    with pytest.warns(DeprecationWarning, match="ServeSpec"):
+        cfg, engine = build_engine("qwen1.5-0.5b")
+    req = engine.add_request([1, 2, 3, 4], SamplingParams(max_new_tokens=2))
+    engine.drain(max_ticks=100)
+    assert req.is_finished
