@@ -7,10 +7,12 @@
 #                     any batching change in scheduler/throttle fails here
 #   make rebalance-check  sim-only control-plane smoke: steal+migrate must
 #                     beat admission-only p95 TTFT on the straggler cluster
-#   make examples-check  run the three examples end-to-end against the
-#                     public serving API (reduced engine on CPU)
+#   make examples-check  run the examples end-to-end against the public
+#                     serving API (reduced engine on CPU + the HTTP demo)
+#   make docs-check   run every fenced python block in README.md + docs/
+#                     (sim backend, jax-free) and verify relative links
 #   make ci           dev-deps + tier-1 + golden traces + rebalance smoke
-#                     + examples
+#                     + examples + docs
 #   make bench        fast benchmark sweep (CSV rows on stdout)
 
 PY ?= python
@@ -20,7 +22,8 @@ export PYTHONPATH
 TRACE_FIXTURES := tests/fixtures/traces/prefill_heavy.trace.jsonl \
                   tests/fixtures/traces/decode_saturated.trace.jsonl
 
-.PHONY: dev-deps test trace-check rebalance-check examples-check ci bench
+.PHONY: dev-deps test trace-check rebalance-check examples-check \
+        docs-check ci bench
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -38,8 +41,12 @@ examples-check:
 	$(PY) examples/quickstart.py
 	$(PY) examples/serve_offline.py 8
 	$(PY) examples/serve_online.py
+	$(PY) examples/serve_http.py
 
-ci: dev-deps test trace-check rebalance-check examples-check
+docs-check:
+	$(PY) tools/docs_check.py
+
+ci: dev-deps test trace-check rebalance-check examples-check docs-check
 
 bench:
 	$(PY) -m benchmarks.run --fast

@@ -1,7 +1,15 @@
 """gLLM core: Token Throttling scheduling + paged KV management."""
 
 from repro.core.kv_manager import KVExport, PagedKVManager
-from repro.core.request import Request, RequestMetrics, RequestState, SamplingParams
+from repro.core.request import (
+    SLO_BATCH,
+    SLO_CLASSES,
+    SLO_INTERACTIVE,
+    Request,
+    RequestMetrics,
+    RequestState,
+    SamplingParams,
+)
 from repro.core.scheduler import (
     PipelineScheduler,
     ScheduledBatch,
@@ -24,6 +32,9 @@ __all__ = [
     "RequestMetrics",
     "RequestState",
     "SamplingParams",
+    "SLO_BATCH",
+    "SLO_CLASSES",
+    "SLO_INTERACTIVE",
     "PipelineScheduler",
     "ScheduledBatch",
     "ScheduledSeq",

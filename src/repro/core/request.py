@@ -41,6 +41,19 @@ FINISH_REASONS = {
 }
 
 
+# SLO-class vocabulary.  A request's class picks its point on the
+# throughput-latency tradeoff (Sarathi-Serve, arXiv:2403.02310): interactive
+# requests are admitted ahead of batch ones when the Token Throttling prefill
+# budget (eq. 3) is contended, and batch requests are preferred as preemption
+# victims when the KV pool saturates.  Within a class, higher `priority`
+# wins; within a priority, FCFS order is preserved.
+SLO_INTERACTIVE = "interactive"
+SLO_BATCH = "batch"
+SLO_CLASSES = (SLO_INTERACTIVE, SLO_BATCH)
+# admission rank: lower admits first / is victimized last
+SLO_RANK = {cls: i for i, cls in enumerate(SLO_CLASSES)}
+
+
 @dataclass
 class SamplingParams:
     max_new_tokens: int = 128
@@ -48,6 +61,16 @@ class SamplingParams:
     top_k: int = 0                    # 0 => disabled
     top_p: float = 1.0
     stop_token_ids: Sequence[int] = ()
+    # Scheduling class (not sampling, but per-request like everything here —
+    # the one bag of knobs a client attaches to a request, vLLM-style).
+    priority: int = 0                 # higher admits first within a class
+    slo_class: str = SLO_INTERACTIVE  # "interactive" | "batch"
+
+    def __post_init__(self) -> None:
+        if self.slo_class not in SLO_CLASSES:
+            raise ValueError(
+                f"unknown slo_class {self.slo_class!r}; expected one of "
+                f"{SLO_CLASSES}")
 
     @property
     def greedy(self) -> bool:
@@ -93,6 +116,20 @@ class Request:
     # recomputed, so num_prefilled always counts tokens whose KV is resident.
     num_prefilled: int = 0
     metrics: RequestMetrics = field(default_factory=RequestMetrics)
+
+    # ----------------------------------------------------------------- class
+    @property
+    def slo_class(self) -> str:
+        return self.sampling.slo_class
+
+    @property
+    def priority(self) -> int:
+        return self.sampling.priority
+
+    @property
+    def slo_rank(self) -> int:
+        """Admission rank (lower admits first); unknown classes sort last."""
+        return SLO_RANK.get(self.sampling.slo_class, len(SLO_CLASSES))
 
     # ------------------------------------------------------------------ sizes
     @property

@@ -146,7 +146,9 @@ class PipelineScheduler:
         self.max_chunk_tokens = max_chunk_tokens
         self.max_decode_seqs = max_decode_seqs
 
-        self.waiting: Deque[Request] = deque()          # FCFS admission queue
+        # Admission queue in arrival order; `admission_order()` derives the
+        # SLO-class-aware order eq. 3's budget is actually spent in.
+        self.waiting: Deque[Request] = deque()
         self.running_prefill: List[Request] = []         # partially prefilled
         self.running_decode: List[Request] = []          # decoding (FCFS order)
         self._in_flight: Dict[str, int] = {}             # request_id -> batch_id
@@ -269,23 +271,31 @@ class PipelineScheduler:
             self._preempt(victim)
         return True
 
+    def _victim_order(self, group: List[Request]) -> List[Request]:
+        """Preemption order within one residency group: batch-class requests
+        are victimized before interactive ones, lower `priority` before
+        higher, and within a tie the latest arrival goes first (vLLM
+        recompute policy).  With every request at the defaults this reduces
+        to plain latest-arrival-first."""
+        return sorted(reversed(group),
+                      key=lambda r: (-r.slo_rank, r.priority))
+
     def _pick_preemption_victim(self, exclude) -> Optional[Request]:
-        """Latest-arrival resident request that is not in flight.
+        """Resident request to evict, SLO-class-aware (batch-first).
 
         Partially-prefilled requests are victims *first*: a stalled chunked
         prefill holding pages while decode is starved is otherwise a
         deadlock (decode can only preempt decode, prefill can only shrink).
-        Then latest-arrival decode requests (vLLM recompute policy)."""
+        Then decode requests — in both groups batch-class before
+        interactive, then latest arrival (`_victim_order`)."""
         if isinstance(exclude, str):
             exclude = {exclude}
-        for req in reversed(self.running_prefill):
-            if req.request_id in exclude or req.request_id in self._in_flight:
-                continue
-            return req
-        for req in reversed(self.running_decode):
-            if req.request_id in exclude or req.request_id in self._in_flight:
-                continue
-            return req
+        for group in (self.running_prefill, self.running_decode):
+            for req in self._victim_order(group):
+                if req.request_id in exclude \
+                        or req.request_id in self._in_flight:
+                    continue
+                return req
         return None
 
     def _preempt(self, req: Request) -> None:
@@ -302,6 +312,16 @@ class PipelineScheduler:
             self.on_preempt(req)
 
     # ---------------------------------------------------------------- prefill
+    def admission_order(self) -> List[Request]:
+        """Waiting requests in the order eq. 3's prefill budget admits them:
+        interactive class before batch, higher `priority` first within a
+        class, queue position (FCFS, with preempted requests re-queued at
+        the front) within a priority.  The sort is stable, so a queue of
+        all-default requests admits in exactly the pre-SLO FCFS order —
+        which keeps recorded traces replaying bit-identically."""
+        return sorted(self.waiting,
+                      key=lambda r: (r.slo_rank, -r.priority))
+
     def _schedule_prefill(self, now: float, num_decode: int) -> List[ScheduledSeq]:
         if self.cfg.policy is PrefillPolicy.SARATHI:
             budget = max(0, self.cfg.max_prefill_tokens - num_decode)
@@ -327,10 +347,12 @@ class PipelineScheduler:
             out.append(took)
             budget -= took.num_tokens
 
-        # 2) admit new requests from the waiting queue (FCFS)
-        while self.waiting and budget > 0 and len(out) < min(
-                self.max_batch_seqs, self.max_prefill_seqs):
-            req = self.waiting[0]
+        # 2) admit new requests from the waiting queue, SLO-class order
+        admitted: set = set()
+        for req in self.admission_order():
+            if budget <= 0 or len(out) >= min(
+                    self.max_batch_seqs, self.max_prefill_seqs):
+                break
             if self.cfg.policy is not PrefillPolicy.SARATHI:
                 # UT guard: don't admit when below the KV idle threshold.
                 if self.kv.kv_free_rate <= self.cfg.kv_threshold:
@@ -345,7 +367,7 @@ class PipelineScheduler:
             took = self._take_prefill_chunk(req, budget, now)
             if took is None:
                 break
-            self.waiting.popleft()
+            admitted.add(req.request_id)
             req.state = RequestState.PREFILLING
             if req.metrics.first_scheduled_time is None:
                 req.metrics.first_scheduled_time = now
@@ -353,6 +375,11 @@ class PipelineScheduler:
                 self.running_prefill.append(req)
             out.append(took)
             budget -= took.num_tokens
+        if admitted:
+            # one O(n) rebuild instead of an O(n) deque.remove per admission
+            # — the tick loop stays linear in queue depth
+            self.waiting = deque(r for r in self.waiting
+                                 if r.request_id not in admitted)
         return out
 
     def _take_prefill_chunk(

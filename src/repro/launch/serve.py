@@ -8,7 +8,8 @@ published config on the production mesh factoring from the arch's plan.
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
         --requests 12 --rate 4 [--policy gllm|sarathi|no_wt|no_ut] \
         [--replicas 2 --route balanced|rr] \
-        [--rebalance-interval 0.25 [--migrate]]
+        [--rebalance-interval 0.25 [--migrate]] \
+        [--http 8000]
 
 Every flag combination is exactly one `ServeSpec`: --dump-spec prints that
 spec as JSON and exits, --spec FILE serves from a previously dumped spec
@@ -16,35 +17,20 @@ spec as JSON and exits, --spec FILE serves from a previously dumped spec
 data-parallel engine replicas (sharing one read-only parameter tree) are
 fronted by a `ReplicaRouter`; --rebalance-interval turns on the periodic
 control plane and --migrate allows live KV migration (DESIGN.md §9).
+
+With --http PORT the launcher becomes the real frontend process: instead of
+running the synthetic workload it serves the spec over HTTP
+(`repro.serving.http`, DESIGN.md §11) until interrupted — generate,
+streaming SSE, abort, and stats; see docs/quickstart.md for the curl
+vocabulary.
 """
 
 from __future__ import annotations
 
 import argparse
 import time
-import warnings
 
 import numpy as np
-
-
-def build_engine(arch: str, *, reduced: bool = True, policy: str = "gllm",
-                 seed: int = 0, replicas: int = 1, route: str = "balanced",
-                 rebalance_interval: float = None, migrate: bool = False,
-                 trace_out: str = None):
-    """Deprecated shim: build via `repro.serving.build(ServeSpec(...))`.
-
-    Returns (cfg, engine-or-router) exactly as before; the `LLMServer` the
-    spec path produces is discarded.  Kept for one release."""
-    warnings.warn(
-        "repro.launch.serve.build_engine is deprecated; use "
-        "repro.serving.build(ServeSpec(...)) and the LLMServer API instead",
-        DeprecationWarning, stacklevel=2)
-    from repro import serving
-    server = serving.build(_spec(arch=arch, reduced=reduced, policy=policy,
-                                 seed=seed, replicas=replicas, route=route,
-                                 rebalance_interval=rebalance_interval,
-                                 migrate=migrate, trace_out=trace_out))
-    return server.cfg, server.engine
 
 
 def _spec(*, arch: str, reduced: bool, policy: str, seed: int, replicas: int,
@@ -102,6 +88,9 @@ def main() -> None:
     ap.add_argument("--trace-replay", default=None, metavar="PATH",
                     help="strict-replay a recorded trace through the "
                     "scheduler instead of serving (no accelerator needed)")
+    ap.add_argument("--http", type=int, default=None, metavar="PORT",
+                    help="serve the spec over HTTP on PORT (0 = ephemeral) "
+                    "instead of running the synthetic workload")
     args = ap.parse_args()
 
     from repro.serving import SamplingParams, ServeSpec, TraceSpec, build
@@ -127,6 +116,20 @@ def main() -> None:
                      migrate=args.migrate, trace_out=args.trace_out)
     if args.dump_spec:
         print(spec.to_json(indent=2))
+        return
+
+    if args.http is not None:
+        from repro.serving.http import HTTPFrontend
+        frontend = HTTPFrontend(build(spec), port=args.http)
+        print(f"[{spec.engine.arch} | {spec.backend}] serving on "
+              f"{frontend.url} — POST /v1/generate[?stream=1], "
+              f"DELETE /v1/requests/{{rid}}, GET /v1/stats  (Ctrl-C stops)")
+        try:
+            frontend.serve_forever()
+        except KeyboardInterrupt:
+            pass
+        finally:
+            frontend.shutdown()
         return
 
     server = build(spec)

@@ -9,8 +9,10 @@ Roles (paper -> here):
     micro-batch; activations move by collective-permute (the NCCL path),
     metadata is computed host-side one tick ahead (the ZeroMQ dual-phase
     path) and overlaps device compute because jit dispatch is asynchronous.
-  * frontend        -> `AsyncFrontend` (asyncio): decoupled request intake /
-    token streaming.
+  * frontend        -> `repro.serving.LLMServer` (streams on the asyncio
+    loop or an HTTP handler thread while a worker thread ticks) and the
+    HTTP process around it (`repro.serving.http`): decoupled request
+    intake / token streaming.
 
 `PipelineEngine` is the user-facing handle binding scheduler + KV + backend
 + loop; it is exact (it runs the real model) and is used by the examples,
@@ -359,8 +361,8 @@ class PipelineEngine:
                                   dtype=dtype)
         # with --trace-out, every tick of the live engine is logged to a
         # replayable JSONL trace (runtime/trace.py); the recorder is a
-        # transparent shim around the backend.  The AsyncFrontend submits
-        # from the asyncio thread while a worker thread ticks, so traced
+        # transparent shim around the backend.  The serving layer submits
+        # from client threads while a worker thread ticks, so traced
         # engines serialize intake against the tick — otherwise a request's
         # `req` record could land after the tick that batched it and strict
         # replay of our own output would diverge.  Untraced engines keep the

@@ -41,7 +41,8 @@ from typing import Any, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import KVExport, Request, RequestState, SamplingParams
+from repro.core import (SLO_BATCH, KVExport, Request, RequestState,
+                        SamplingParams)
 
 
 class RoutingPolicy(enum.Enum):
@@ -178,12 +179,20 @@ class ReplicaSnapshot:
     # First step toward replacing static `ReplicaCapacity` hints: exposed
     # through `LLMServer.stats()` so operators can compare hint vs. reality.
     service_rate: Optional[float] = None
+    # Waiting-queue composition by SLO class: a queue of interactive
+    # requests is latency debt; an equally deep all-batch queue is not.
+    # Not yet folded into `balance_score` — surfaced for operators and as
+    # the hook for class-aware placement (DESIGN.md §11).
+    waiting_interactive: int = 0
+    waiting_batch: int = 0
 
     @staticmethod
     def of(replica) -> "ReplicaSnapshot":
         sched = replica.scheduler
         pool = sched.kv.num_pages * sched.kv.page_size
         growth = remaining_decode_growth(sched)
+        n_batch = sum(1 for r in sched.waiting
+                      if r.sampling.slo_class == SLO_BATCH)
         return ReplicaSnapshot(
             waiting_prefill_tokens=sched.num_waiting_prefill_tokens,
             running_decode=sched.num_running_decode,
@@ -191,6 +200,8 @@ class ReplicaSnapshot:
             kv_threshold=sched.cfg.kv_threshold,
             projected_kv_free=sched.kv.kv_free_rate - growth / pool,
             service_rate=sched.stats.service_rate,
+            waiting_interactive=len(sched.waiting) - n_batch,
+            waiting_batch=n_batch,
         )
 
 
@@ -227,8 +238,8 @@ class ReplicaRouter:
     A replica is anything exposing `scheduler` (a `PipelineScheduler`) and
     `backend` (an `ExecutionBackend` — the migration hooks live there);
     engine replicas additionally expose `add_request`/`step`/`has_work`/
-    `busy` so the router can serve as a drop-in engine for `AsyncFrontend`
-    and the launchers.
+    `busy` so the router can serve as a drop-in engine for the serving
+    layer (`repro.serving.LLMServer`) and the launchers.
 
     With `rebalance=RebalancePolicy(...)` the router runs the periodic
     control plane: step-driven replicas (engines) get control ticks from

@@ -22,7 +22,9 @@ Record kinds (one JSON object per line):
 
   header  schema/version + everything needed to rebuild the scheduler
           (throttle config, KV pool geometry, scheduler caps, ring depth)
-  req     a request entering the scheduler (id, arrival, prompt, sampling)
+  req     a request entering the scheduler (id, arrival, prompt, sampling —
+          incl. priority + SLO class since schema 1.2: admission order
+          depends on them)
   tick    one pipeline tick: entering micro-batch composition, the throttle
           budgets that shaped it, KV/queue signals, per-stage latency, and
           the exiting batch's sampled tokens + completion time
@@ -76,7 +78,8 @@ from repro.runtime.core import ExecResult, ExecutionBackend, TickLoop
 SCHEMA = "gllm-trace"
 ROUTE_SCHEMA = "gllm-route"
 SCHEMA_MAJOR = 1
-SCHEMA_MINOR = 1    # 1.1: added the "abort" record kind
+SCHEMA_MINOR = 2    # 1.1: "abort" record kind; 1.2: req/migrate carry
+                    # per-request priority + SLO class
 
 
 class TraceSchemaError(ValueError):
@@ -471,6 +474,10 @@ class TraceRecorder(ExecutionBackend):
             "max_new": req.sampling.max_new_tokens,
             "stop": list(req.sampling.stop_token_ids),
             "temp": req.sampling.temperature,
+            # schema 1.2: scheduling class — admission order depends on it,
+            # so replay must rebuild it or strict mode diverges
+            "priority": req.sampling.priority,
+            "slo": req.sampling.slo_class,
         })
 
     def record_abort(self, request_id: str, now: float) -> None:
@@ -504,6 +511,8 @@ class TraceRecorder(ExecutionBackend):
             "max_new": req.sampling.max_new_tokens,
             "stop": list(req.sampling.stop_token_ids),
             "temp": req.sampling.temperature,
+            "priority": req.sampling.priority,
+            "slo": req.sampling.slo_class,
             "arrival": m.arrival_time,
             "first_sched": m.first_scheduled_time,
             "first_token": m.first_token_time,
@@ -718,11 +727,19 @@ class ReplayReport:
                 f"TTFT_mean={float(np.mean(ttfts or [0])):.4f}s")
 
 
+def _sampling_from_record(rec: Dict[str, Any]) -> SamplingParams:
+    """Shared by req + migrate-in records.  Pre-1.2 traces carry no
+    priority/slo fields; the defaults reproduce their recorded scheduling
+    exactly (all-default queues admit in FCFS order)."""
+    return SamplingParams(max_new_tokens=rec["max_new"],
+                          temperature=rec.get("temp", 0.0),
+                          stop_token_ids=tuple(rec.get("stop", ())),
+                          priority=int(rec.get("priority", 0)),
+                          slo_class=rec.get("slo", "interactive"))
+
+
 def request_from_record(rec: Dict[str, Any]) -> Request:
-    req = Request(rec["rid"], list(rec["prompt"]),
-                  SamplingParams(max_new_tokens=rec["max_new"],
-                                 temperature=rec.get("temp", 0.0),
-                                 stop_token_ids=tuple(rec.get("stop", ()))))
+    req = Request(rec["rid"], list(rec["prompt"]), _sampling_from_record(rec))
     req.metrics.arrival_time = rec["at"]
     return req
 
@@ -730,10 +747,7 @@ def request_from_record(rec: Dict[str, Any]) -> Request:
 def migrated_request_from_record(rec: Dict[str, Any]) -> Request:
     """Re-materialize a migrant exactly as it arrived: progress, outputs so
     far, and cross-replica timing metrics all come from the record."""
-    req = Request(rec["rid"], list(rec["prompt"]),
-                  SamplingParams(max_new_tokens=rec["max_new"],
-                                 temperature=rec.get("temp", 0.0),
-                                 stop_token_ids=tuple(rec.get("stop", ()))))
+    req = Request(rec["rid"], list(rec["prompt"]), _sampling_from_record(rec))
     req.output_token_ids = list(rec["output"])
     req.num_prefilled = int(rec["prefilled"])
     req.state = RequestState(rec["state"])

@@ -12,9 +12,10 @@ recorded-trace replay, or a globally-balanced multi-replica cluster.
     print(out.token_ids, out.finish_reason)
 """
 
-from repro.core import SamplingParams
+from repro.core import SLO_BATCH, SLO_CLASSES, SLO_INTERACTIVE, SamplingParams
 from repro.runtime.router import RebalancePolicy, ReplicaCapacity
 from repro.serving.build import build
+from repro.serving.http import HTTPFrontend
 from repro.serving.server import (
     EVENT_PREEMPT,
     EVENT_PREEMPT_RESUMED,
@@ -37,9 +38,13 @@ from repro.serving.spec import (
 
 __all__ = [
     "SamplingParams",
+    "SLO_BATCH",
+    "SLO_CLASSES",
+    "SLO_INTERACTIVE",
     "RebalancePolicy",
     "ReplicaCapacity",
     "build",
+    "HTTPFrontend",
     "LLMServer",
     "RequestOutput",
     "TokenDelta",

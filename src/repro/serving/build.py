@@ -148,15 +148,23 @@ def _build_sim(spec: ServeSpec) -> Tuple[Any, Any]:
     from repro.runtime.simulator import (PipelineSimulator, RuntimeModel,
                                          cost_model_for)
 
-    ss = spec.sim
     cfg = get_config(spec.engine.arch)
-    th = _throttle_config(spec, ss.pp, reduced=False)
-    runtime = (RuntimeModel.vllm_like() if ss.runtime == "vllm"
-               else RuntimeModel.gllm())
     n = spec.num_replicas
     record = spec.trace.record if spec.trace is not None else None
+    overrides = (spec.cluster.sim_overrides
+                 if spec.cluster is not None else None)
+
+    def replica_sim_spec(i: int):
+        """The i-th replica's geometry: the base `SimSpec` with that
+        replica's sparse overrides applied (spec-declared heterogeneity)."""
+        ov = overrides[i] if overrides is not None else None
+        return dataclasses.replace(spec.sim, **ov) if ov else spec.sim
 
     def one(i: int) -> PipelineSimulator:
+        ss = replica_sim_spec(i)
+        th = _throttle_config(spec, ss.pp, reduced=False)
+        runtime = (RuntimeModel.vllm_like() if ss.runtime == "vllm"
+                   else RuntimeModel.gllm())
         kv = PagedKVManager(num_pages=ss.pages, page_size=ss.page_size)
         sched = PipelineScheduler(th, kv,
                                   max_model_len=ss.pages * ss.page_size)

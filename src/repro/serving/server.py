@@ -7,7 +7,9 @@ Whatever a `ServeSpec` resolved to — a `PipelineEngine`, a
 request lifecycle:
 
   * `submit()` / `generate()`        — enqueue, or enqueue-and-wait
-  * `generate_stream()`              — async incremental `TokenDelta`s
+  * `stream()` / `generate_stream()` — incremental `TokenDelta`s (sync
+    generator stepping from the calling thread — the HTTP frontend's path —
+    or the async variant with a shared background runner)
   * `abort()`                        — stop a request anywhere in its life:
     waiting (including a stolen request in a destination queue), mid-decode,
     inside an in-flight micro-batch, or mid-KV-migration between replicas —
@@ -30,10 +32,11 @@ from __future__ import annotations
 
 import asyncio
 import itertools
+import queue
 import threading
 from dataclasses import dataclass, field
-from typing import (Any, AsyncIterator, Callable, Dict, List, Optional,
-                    Sequence, Set)
+from typing import (Any, AsyncIterator, Callable, Dict, Iterator, List,
+                    Optional, Sequence, Set)
 
 from repro.core import Request, RequestMetrics, SamplingParams
 from repro.core.request import RequestState
@@ -103,6 +106,10 @@ class ReplicaStats:
     waiting: int
     running_decode: int
     preemptions: int
+    # Waiting-queue composition by SLO class ({"interactive": n, "batch": m},
+    # absent classes omitted) — the signal an operator reads to tell "loaded
+    # with latency-sensitive work" from "deep but all-batch" (docs/operations.md)
+    waiting_by_class: Dict[str, int] = field(default_factory=dict)
 
 
 @dataclass
@@ -191,7 +198,12 @@ class LLMServer:
         substrate."""
         self._require_interactive("submit")
         rid = request_id or f"llm-{next(LLMServer._rid_counter)}"
-        req = self.engine.add_request(list(prompt), sampling, rid, **kw)
+        # intake serializes against ticks: schedulers iterate their waiting
+        # queue inside schedule(), so a concurrent add_request from another
+        # client thread (HTTP handler, asyncio submitter) must not mutate it
+        # mid-step
+        with self._step_lock:
+            req = self.engine.add_request(list(prompt), sampling, rid, **kw)
         self._requests[rid] = req
         return rid
 
@@ -200,8 +212,11 @@ class LLMServer:
         finished during it (server-submitted or not)."""
         self._require_interactive("step")
         with self._step_lock:
+            # the sweep dispatches terminal deltas INSIDE the lock: the lock
+            # is the dispatch barrier streaming threads rely on — once idle
+            # is observed under it, every terminal delta has been queued
             finished = self.engine.step()
-        self._sweep_finished(finished)
+            self._sweep_finished(finished)
         return [RequestOutput.of(r) for r in finished]
 
     def drain(self, max_steps: int = 1_000_000) -> List[RequestOutput]:
@@ -236,9 +251,12 @@ class LLMServer:
         self._require_interactive("abort")
         with self._step_lock:
             found = self.engine.abort_request(request_id)
-        req = self._requests.get(request_id)
-        if req is not None and req.is_finished:
-            self._sweep_finished([req])
+            req = self._requests.get(request_id)
+            if req is not None and req.is_finished:
+                # dispatch the terminal abort delta under the lock (see
+                # step()): a stream observing an idle substrate must find
+                # this delta already queued
+                self._sweep_finished([req])
         return bool(found)
 
     def get(self, request_id: str) -> RequestOutput:
@@ -252,6 +270,82 @@ class LLMServer:
         return [RequestOutput.of(self._requests[r]) for r in rids]
 
     # ------------------------------------------------------------- streaming
+    def subscribe(self, request_id: str,
+                  sink: Callable[[TokenDelta], None]) -> None:
+        """Register `sink` for every `TokenDelta` of `request_id`.  Called
+        from whichever thread steps the substrate — sinks must be
+        thread-safe (e.g. `queue.Queue.put`).  Subscribe BEFORE submitting
+        under that id, or deltas produced by an in-progress step are lost."""
+        self._sinks.setdefault(request_id, []).append(sink)
+
+    def unsubscribe(self, request_id: str, sink: Callable) -> None:
+        subs = self._sinks.get(request_id)
+        if subs is None:
+            return
+        if sink in subs:
+            subs.remove(sink)
+        if not subs:
+            self._sinks.pop(request_id, None)
+
+    def stream(self, prompt: Sequence[int],
+               sampling: Optional[SamplingParams] = None,
+               request_id: Optional[str] = None,
+               max_steps: int = 1_000_000, **kw) -> Iterator[TokenDelta]:
+        """Synchronous streaming: submit one request and yield its
+        `TokenDelta`s as the substrate produces them, stepping it from the
+        calling thread.  The last delta carries `finish_reason`.  Safe under
+        concurrent callers (HTTP handler threads): steps serialize on the
+        server's lock, and deltas produced by *another* thread's step are
+        delivered here through the sink queue.
+
+        The submit happens eagerly — admission errors (oversized request,
+        unknown kwargs) raise *here*, before any delta exists, so callers
+        that must commit to a response format first (HTTP) can still turn
+        them into a clean client error."""
+        self._require_interactive("stream")
+        q: queue.Queue = queue.Queue()
+        rid = request_id or f"llm-{next(LLMServer._rid_counter)}"
+        self.subscribe(rid, q.put)
+        try:
+            self.submit(prompt, sampling, request_id=rid, **kw)
+        except Exception:
+            self.unsubscribe(rid, q.put)
+            raise
+        return self._stream_deltas(rid, q, max_steps)
+
+    def _stream_deltas(self, rid: str, q: "queue.Queue",
+                       max_steps: int) -> Iterator[TokenDelta]:
+        try:
+            for _ in range(max_steps):
+                try:
+                    delta = q.get_nowait()
+                except queue.Empty:
+                    if not self.has_work:
+                        # another thread's step/abort may be mid-flight with
+                        # our terminal delta not yet dispatched; all
+                        # dispatches happen under the step lock, so taking
+                        # it once is the barrier that makes emptiness final
+                        with self._step_lock:
+                            pass
+                        if not self.has_work and q.empty():
+                            break   # drained — whatever is queued is final
+                        continue
+                    self.step()
+                    continue
+                yield delta
+                if delta.finish_reason is not None:
+                    return
+            while True:             # the terminal delta may already be queued
+                try:
+                    delta = q.get_nowait()
+                except queue.Empty:
+                    return
+                yield delta
+                if delta.finish_reason is not None:
+                    return
+        finally:
+            self.unsubscribe(rid, q.put)
+
     async def generate_stream(self, prompt: Sequence[int],
                               sampling: Optional[SamplingParams] = None,
                               request_id: Optional[str] = None, **kw
@@ -269,11 +363,11 @@ class LLMServer:
         rid = request_id or f"llm-{next(LLMServer._rid_counter)}"
         # subscribe BEFORE the engine can see the request: the runner thread
         # may produce tokens the moment add_request lands
-        self._sinks.setdefault(rid, []).append(sink)
+        self.subscribe(rid, sink)
         try:
             self.submit(prompt, sampling, request_id=rid, **kw)
         except Exception:
-            self._unsubscribe(rid, sink)
+            self.unsubscribe(rid, sink)
             raise
         self._ensure_runner(loop)
         try:
@@ -283,7 +377,7 @@ class LLMServer:
                 if delta.finish_reason is not None:
                     return
         finally:
-            self._unsubscribe(rid, sink)
+            self.unsubscribe(rid, sink)
 
     def _ensure_runner(self, loop: asyncio.AbstractEventLoop) -> None:
         if self._runner_task is not None and not self._runner_task.done():
@@ -296,15 +390,6 @@ class LLMServer:
                 await asyncio.to_thread(self.step)
 
         self._runner_task = loop.create_task(run())
-
-    def _unsubscribe(self, rid: str, sink: Callable) -> None:
-        subs = self._sinks.get(rid)
-        if subs is None:
-            return
-        if sink in subs:
-            subs.remove(sink)
-        if not subs:
-            self._sinks.pop(rid, None)
 
     # -------------------------------------------------------------- replay
     def replay(self) -> List[RequestOutput]:
@@ -329,6 +414,13 @@ class LLMServer:
         out = ServerStats()
         for i, replica in enumerate(self.replicas):
             sched = replica.scheduler
+            # iterating the waiting deque must not race a concurrent
+            # submit/step mutating it (same reason intake serializes)
+            with self._step_lock:
+                by_class: Dict[str, int] = {}
+                for req in sched.waiting:
+                    cls = req.sampling.slo_class
+                    by_class[cls] = by_class.get(cls, 0) + 1
             out.replicas.append(ReplicaStats(
                 index=i,
                 ticks=sched.stats.ticks,
@@ -338,6 +430,7 @@ class LLMServer:
                 waiting=len(sched.waiting),
                 running_decode=sched.num_running_decode,
                 preemptions=sched.stats.preemptions,
+                waiting_by_class=by_class,
             ))
         router = self.router
         if router is not None:

@@ -64,14 +64,23 @@ class SimSpec:
 @dataclass(frozen=True)
 class ClusterSpec:
     """Multi-replica layout: how many replicas, how requests are placed,
-    whether the periodic control plane runs, and optional static capacity
-    hints (`ReplicaCapacity` or bare throughput scalars, one per replica).
+    whether the periodic control plane runs, optional static capacity
+    hints (`ReplicaCapacity` or bare throughput scalars, one per replica),
+    and — for sim clusters — per-replica `SimSpec` overrides.
+
+    `sim_overrides` declares a heterogeneous cluster in the spec itself:
+    one entry per replica, each either None (use the base `ServeSpec.sim`)
+    or a sparse dict of `SimSpec` fields replacing the base values for that
+    replica (e.g. ``({"pp": 8}, {"straggler_stage": 1,
+    "straggler_factor": 2.0})``).  Unknown field names are rejected at
+    construction — the same no-silent-typo contract as the JSON decoder.
     """
 
     replicas: int = 1
     route: str = "balanced"         # balanced | rr
     rebalance: Optional[RebalancePolicy] = None
     capacities: Optional[Tuple[Union[ReplicaCapacity, float], ...]] = None
+    sim_overrides: Optional[Tuple[Optional[Dict[str, Any]], ...]] = None
 
     def __post_init__(self) -> None:
         if self.replicas < 1:
@@ -80,6 +89,21 @@ class ClusterSpec:
             object.__setattr__(self, "capacities", tuple(self.capacities))
             if len(self.capacities) != self.replicas:
                 raise ValueError("one capacity per replica")
+        if self.sim_overrides is not None:
+            object.__setattr__(self, "sim_overrides",
+                               tuple(self.sim_overrides))
+            if len(self.sim_overrides) != self.replicas:
+                raise ValueError("one sim_overrides entry (dict or None) "
+                                 "per replica")
+            valid = {f.name for f in dataclasses.fields(SimSpec)}
+            for i, ov in enumerate(self.sim_overrides):
+                if ov is None:
+                    continue
+                unknown = sorted(set(ov) - valid)
+                if unknown:
+                    raise ValueError(
+                        f"sim_overrides[{i}]: unknown SimSpec fields "
+                        f"{unknown}")
 
 
 @dataclass(frozen=True)
@@ -133,6 +157,11 @@ class ServeSpec:
             if self.cluster is not None:
                 raise ValueError("trace replay is per-replica; replay each "
                                  "recorded trace with its own spec")
+        if (self.backend != "sim" and self.cluster is not None
+                and self.cluster.sim_overrides is not None):
+            raise ValueError(
+                'ClusterSpec.sim_overrides applies to backend="sim" only '
+                "(engine replicas take their geometry from EngineSpec)")
 
     @property
     def num_replicas(self) -> int:

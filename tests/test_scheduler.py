@@ -235,6 +235,66 @@ class TestPreemptionCallback:
         assert gone == ["x"]
 
 
+class TestSLOClasses:
+    """SLO-class-aware Token Throttling (DESIGN.md §11): admission order and
+    preemption-victim choice honor slo_class/priority; all-default queues
+    behave exactly like the pre-SLO FCFS scheduler."""
+
+    def test_interactive_admitted_ahead_of_earlier_batch(self):
+        sched, kv = make_sched(max_p=32)
+        batch = Request("b", [1] * 64,
+                        SamplingParams(max_new_tokens=4, slo_class="batch"))
+        inter = Request("i", [1] * 64, SamplingParams(max_new_tokens=4))
+        sched.add_request(batch)            # batch arrives FIRST
+        sched.add_request(inter)
+        b = sched.schedule(0.0)
+        # the tight eq. 3 budget goes to the interactive request
+        assert [s.request.request_id for s in b.prefill] == ["i"]
+
+    def test_priority_orders_within_class(self):
+        sched, kv = make_sched(max_p=32)
+        for rid, prio in (("low", 0), ("high", 5)):
+            sched.add_request(Request(
+                rid, [1] * 64, SamplingParams(max_new_tokens=4,
+                                              priority=prio)))
+        b = sched.schedule(0.0)
+        assert [s.request.request_id for s in b.prefill] == ["high"]
+        assert sched.admission_order()[0].request_id == "low"
+
+    def test_all_default_queue_stays_fcfs(self):
+        sched, kv = make_sched(max_p=512)
+        for i in range(4):
+            sched.add_request(Request(f"r{i}", [1] * 16,
+                                      SamplingParams(max_new_tokens=2)))
+        order = [r.request_id for r in sched.admission_order()]
+        assert order == ["r0", "r1", "r2", "r3"]
+
+    def _decode_resident(self, sched, rid, slo, n_prompt=8):
+        req = Request(rid, [1] * n_prompt,
+                      SamplingParams(max_new_tokens=32, slo_class=slo))
+        sched.add_request(req)
+        b = sched.schedule(0.0)
+        toks = [7 for s in b.seqs if s.produces_token]
+        sched.complete(b.batch_id, toks, now=0.0)
+        assert req in sched.running_decode
+        return req
+
+    def test_preemption_victims_chosen_batch_first(self):
+        sched, kv = make_sched(max_p=512)
+        batch = self._decode_resident(sched, "b", "batch")
+        inter = self._decode_resident(sched, "i", "interactive")
+        # latest-arrival-first alone would victimize "i"; class order wins
+        victim = sched._pick_preemption_victim(exclude=set())
+        assert victim is batch
+
+    def test_interactive_victimized_only_after_batch_exhausted(self):
+        sched, kv = make_sched(max_p=512)
+        batch = self._decode_resident(sched, "b", "batch")
+        inter = self._decode_resident(sched, "i", "interactive")
+        victim = sched._pick_preemption_victim(exclude={"b"})
+        assert victim is inter
+
+
 def _property_body(n, seed, policy):
     rng = random.Random(seed)
     sched, kv = make_sched(policy=policy, pages=128, page=8, pp=3,

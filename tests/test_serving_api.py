@@ -9,8 +9,8 @@ asserted identical.
 
 Also here: the abort-semantics regression tests (mid-queue, mid-decode,
 in-flight, stolen-waiting, and mid-KV-migration — slots and pages must free
-in every case), the spec JSON round trip, the service-rate EWMA surface,
-and the deprecation-shim warnings.
+in every case), the spec JSON round trip (incl. per-request priority/SLO
+and per-replica `sim_overrides`), and the service-rate EWMA surface.
 """
 
 import asyncio
@@ -391,6 +391,13 @@ async def _collect(stream):
                   capacities=(1.0, ReplicaCapacity.straggler(4, 2.0),
                               ReplicaCapacity.scaled(1.5))),
               trace=TraceSpec(record="out.jsonl")),
+    ServeSpec(backend="sim",
+              cluster=ClusterSpec(
+                  replicas=3,
+                  sim_overrides=(None,
+                                 {"straggler_stage": 1,
+                                  "straggler_factor": 2.0},
+                                 {"pp": 8, "pages": 512}))),
 ])
 def test_spec_json_round_trip(spec):
     assert ServeSpec.from_json(spec.to_json()) == spec
@@ -414,21 +421,66 @@ def test_spec_validates_shapes():
 
 
 # ---------------------------------------------------------------------------
-# deprecation shims
+# per-request SLO class + per-replica overrides through the public surface
 # ---------------------------------------------------------------------------
 
-def test_async_frontend_shim_warns():
-    from repro.runtime.frontend import AsyncFrontend
-    from repro.runtime.router import ReplicaRouter
+def test_slo_class_and_priority_round_trip_and_serve():
+    """A batch-class prioritized request is a first-class citizen of the
+    API: constructible, validated, and served to completion."""
+    with pytest.raises(ValueError, match="slo_class"):
+        SamplingParams(slo_class="platinum")
     srv = build(make_spec("sim"))
-    with pytest.warns(DeprecationWarning, match="generate_stream"):
-        AsyncFrontend(ReplicaRouter([srv.engine]))
+    out = srv.generate([3] * 16, SamplingParams(max_new_tokens=4,
+                                                slo_class="batch",
+                                                priority=7))
+    assert out.finish_reason == FINISH_LENGTH
+    assert len(out.token_ids) == 4
 
 
-def test_build_engine_shim_warns_and_still_builds():
-    from repro.launch.serve import build_engine
-    with pytest.warns(DeprecationWarning, match="ServeSpec"):
-        cfg, engine = build_engine("qwen1.5-0.5b")
-    req = engine.add_request([1, 2, 3, 4], SamplingParams(max_new_tokens=2))
-    engine.drain(max_ticks=100)
-    assert req.is_finished
+def test_sim_overrides_build_heterogeneous_replicas():
+    spec = ServeSpec(backend="sim", engine=SIM_ENGINE, sim=SIM,
+                     cluster=ClusterSpec(replicas=2, sim_overrides=(
+                         None, {"pp": 4, "pages": 64})))
+    srv = build(spec)
+    assert srv.replicas[0].pp == 2 and srv.replicas[1].pp == 4
+    assert srv.replicas[0].sched.kv.num_pages == 256
+    assert srv.replicas[1].sched.kv.num_pages == 64
+    # declared asymmetry is visible to balanced routing end-to-end
+    for _ in range(4):
+        srv.generate([1] * 32, SamplingParams(max_new_tokens=2))
+    assert sum(srv.stats().routed_counts) == 4
+    srv.close()
+
+
+def test_interactive_beats_equal_arrival_batch_on_ttft():
+    """Acceptance regression (ISSUE 5): under a saturated eq. 3 token
+    budget, an interactive-class request submitted *after* an equal-arrival
+    batch-class twin still reaches its first token sooner — SLO-ordered
+    admission, not FCFS, spends the throttled budget."""
+    spec = ServeSpec(backend="sim",
+                     engine=EngineSpec(arch="qwen2.5-14b",
+                                       throttle=dict(max_prefill_tokens=64)),
+                     sim=SimSpec(pp=4, pages=1024, page_size=8))
+    srv = build(spec)
+    for _ in range(10):     # ~960 pending prefill tokens: budget saturated
+        srv.submit([1] * 96, SamplingParams(max_new_tokens=8))
+    rid_batch = srv.submit([2] * 64, SamplingParams(max_new_tokens=8,
+                                                    slo_class="batch"))
+    rid_inter = srv.submit([2] * 64, SamplingParams(max_new_tokens=8))
+    srv.drain()
+    ttft_batch = srv.get(rid_batch).metrics.ttft()
+    ttft_inter = srv.get(rid_inter).metrics.ttft()
+    assert ttft_inter is not None and ttft_batch is not None
+    assert ttft_inter < ttft_batch
+    srv.close()
+
+
+def test_sim_overrides_validation():
+    with pytest.raises(ValueError, match="one sim_overrides"):
+        ClusterSpec(replicas=2, sim_overrides=({"pp": 4},))
+    with pytest.raises(ValueError, match="unknown SimSpec fields"):
+        ClusterSpec(replicas=1, sim_overrides=({"nope": 1},))
+    with pytest.raises(ValueError, match='backend="sim"'):
+        ServeSpec(backend="engine",
+                  cluster=ClusterSpec(replicas=2,
+                                      sim_overrides=(None, {"pp": 4})))

@@ -1,5 +1,5 @@
 """End-to-end system behaviour: workload -> engine -> metrics, plus the
-async frontend and engine padding stats (the bubble metric)."""
+streaming frontend and engine padding stats (the bubble metric)."""
 
 import asyncio
 import dataclasses
@@ -16,7 +16,6 @@ from repro.core import SamplingParams, ThrottleConfig
 from repro.models import transformer as tfm
 from repro.models.serve import ServeDims
 from repro.runtime.engine import PipelineEngine
-from repro.runtime.frontend import AsyncFrontend
 
 
 def make_engine(arch="qwen1.5-0.5b", dims_kw=None, **th_kw):
@@ -68,25 +67,29 @@ def test_engine_reports_bucket_padding():
     assert eng.stats.scheduled_prefill == 4 * 20
 
 
-def test_async_frontend_streams_tokens():
+def test_streaming_frontend_streams_tokens():
+    """The decoupled-frontend split (paper §3.3) on a raw engine: LLMServer
+    wraps it directly and streams two concurrent requests."""
+    from repro.serving import LLMServer
     cfg, eng = make_engine()
     rng = np.random.default_rng(2)
+    server = LLMServer(eng)
+
+    async def collect(prompt, n):
+        return [d async for d in server.generate_stream(
+            prompt, SamplingParams(max_new_tokens=n))]
 
     async def main():
-        fe = AsyncFrontend(eng)
-        runner = asyncio.create_task(fe.run())
-        outs = await asyncio.gather(
-            fe.generate(list(rng.integers(0, cfg.vocab_size, 9)),
-                        SamplingParams(max_new_tokens=4)),
-            fe.generate(list(rng.integers(0, cfg.vocab_size, 14)),
-                        SamplingParams(max_new_tokens=3)),
+        return await asyncio.gather(
+            collect(list(rng.integers(0, cfg.vocab_size, 9)), 4),
+            collect(list(rng.integers(0, cfg.vocab_size, 14)), 3),
         )
-        fe.stop()
-        await asyncio.wait_for(runner, timeout=30)
-        return outs
 
     outs = asyncio.run(main())
-    assert len(outs[0]) == 4 and len(outs[1]) == 3
+    toks = [[d.token for d in deltas if d.token is not None]
+            for deltas in outs]
+    assert len(toks[0]) == 4 and len(toks[1]) == 3
+    assert outs[0][-1].finish_reason == "length"
 
 
 def test_throttling_reduces_padding_variance_vs_sarathi():
