@@ -11,8 +11,12 @@
 #                     serving API (reduced engine on CPU + the HTTP demo)
 #   make docs-check   run every fenced python block in README.md + docs/
 #                     (sim backend, jax-free) and verify relative links
+#   make bench-smoke  seconds-scale run of the engine perf harness (all
+#                     four dispatch/shape variants, bit-identity asserted)
+#                     plus schema validation of the checked-in
+#                     BENCH_engine.json
 #   make ci           dev-deps + tier-1 + golden traces + rebalance smoke
-#                     + examples + docs
+#                     + examples + docs + bench smoke
 #   make bench        fast benchmark sweep (CSV rows on stdout)
 
 PY ?= python
@@ -23,7 +27,7 @@ TRACE_FIXTURES := tests/fixtures/traces/prefill_heavy.trace.jsonl \
                   tests/fixtures/traces/decode_saturated.trace.jsonl
 
 .PHONY: dev-deps test trace-check rebalance-check examples-check \
-        docs-check ci bench
+        docs-check bench-smoke ci bench
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -46,7 +50,12 @@ examples-check:
 docs-check:
 	$(PY) tools/docs_check.py
 
-ci: dev-deps test trace-check rebalance-check examples-check docs-check
+bench-smoke:
+	$(PY) benchmarks/bench_engine.py --smoke
+	$(PY) benchmarks/bench_engine.py --validate BENCH_engine.json
+
+ci: dev-deps test trace-check rebalance-check examples-check docs-check \
+    bench-smoke
 
 bench:
 	$(PY) -m benchmarks.run --fast

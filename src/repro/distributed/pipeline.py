@@ -304,7 +304,8 @@ def build_train_step(cfg: ArchConfig, mesh: Mesh, *,
 # ----------------------------------------------------------------------------
 
 def build_serve_tick(cfg: ArchConfig, mesh: Mesh, dims: ServeDims,
-                     *, unroll: Optional[bool] = None):
+                     *, unroll: Optional[bool] = None,
+                     carry_dims: Optional[ServeDims] = None):
     """Returns (tick_fn, specs) where
 
     tick_fn(params, caches, carry, meta, fresh) ->
@@ -314,6 +315,16 @@ def build_serve_tick(cfg: ArchConfig, mesh: Mesh, dims: ServeDims,
     fresh  = {"xp": [DSp, W, d], "xd": [DSd, 1, d]}  (stage-0 inputs, embedded)
     meta   = stage-stacked ServeMeta dict
     tokens = [D*(Sp+Sd)] int32 sampled ids (greedy), -1 for padding rows
+
+    **Bucketed programs.**  When `carry_dims` is given (the FULL ladder dims,
+    `dims` being a smaller bucket from `bucket_ladder`), the tick accepts and
+    returns the full-shape carry but computes only the bucket region: the
+    carry is sliced to `[:dims.Sp, :dims.prefill_width]` / `[:dims.Sd]`
+    inside the manual region, and the permuted result is written back into
+    the same slice, leaving the (never-read) out-of-bucket region untouched.
+    Caches, params, and carry buffers are therefore shared — byte-compatible
+    and donation-compatible — across every program in the ladder; meta and
+    fresh arrive already at bucket shape.
     """
     import os
     if unroll is None:
@@ -322,12 +333,19 @@ def build_serve_tick(cfg: ArchConfig, mesh: Mesh, dims: ServeDims,
     man = manual_axes(mesh)
     perm = [(i, (i + 1) % S) for i in range(S)]
     Sp, Sd, W = dims.Sp, dims.Sd, dims.prefill_width
+    full = carry_dims or dims
+    sliced = (full.Sp, full.prefill_width, full.Sd) != (Sp, W, Sd)
 
     def body(stage_params, caches, xp, xd, meta, fresh_xp, fresh_xd):
         stage_params = jax.tree.map(lambda a: a[0], stage_params)
         caches = jax.tree.map(lambda a: a[0], caches)
         meta = {k: v[0] for k, v in meta.items()}
-        xp, xd = xp[0], xd[0]
+        xp_full, xd_full = xp[0], xd[0]
+        if sliced:
+            xp = xp_full[:Sp, :W]
+            xd = xd_full[:Sd]
+        else:
+            xp, xd = xp_full, xd_full
         stage = jax.lax.axis_index("stage")
 
         if Sp:
@@ -351,6 +369,9 @@ def build_serve_tick(cfg: ArchConfig, mesh: Mesh, dims: ServeDims,
 
         xp_next = jax.lax.ppermute(xp2, "stage", perm) if Sp else xp2
         xd_next = jax.lax.ppermute(xd2, "stage", perm) if Sd else xd2
+        if sliced:
+            xp_next = xp_full.at[:Sp, :W].set(xp_next) if Sp else xp_full
+            xd_next = xd_full.at[:Sd].set(xd_next) if Sd else xd_full
         return (xp_next[None], xd_next[None],
                 jax.tree.map(lambda a: a[None], new_caches),
                 sample_h[None])

@@ -18,9 +18,9 @@ TPU form of a pipeline bubble — stays small (DESIGN.md §2).
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,6 +56,63 @@ class ServeDims:
     @property
     def rows(self) -> int:
         return self.Sp * self.prefill_width + self.Sd
+
+
+def bucket_ladder(dims: ServeDims) -> Tuple[ServeDims, ...]:
+    """Fixed ladder of serve shapes for bucketed execution (DESIGN.md §12).
+
+    Prefill-chunk buckets {0, ⌈C/4⌉, ⌈C/2⌉, C} × decode-row buckets
+    {⌈Sd/4⌉, ⌈Sd/2⌉, Sd}, deduplicated.  Every entry keeps the full `dims`
+    cache geometry (pages/page/slots/Te untouched), so one KV pool, one
+    parameter tree, and one carry buffer serve every program in the ladder.
+    The Sp=0 entries are the "0 prefill tokens" buckets; decode-only shapes
+    keep C at its full value since the prefill payload has no rows there.
+    The fully-empty (Sp=0, Sd=0) shape is excluded — bubble ticks run in the
+    smallest non-empty bucket.
+    """
+    def ceil_div(a: int, b: int) -> int:
+        return -(-a // b)
+
+    c_steps = sorted({max(1, ceil_div(dims.C, 4)),
+                      max(1, ceil_div(dims.C, 2)), dims.C})
+    d_steps = ([0] if dims.Sd == 0 else
+               sorted({max(1, ceil_div(dims.Sd, 4)),
+                       max(1, ceil_div(dims.Sd, 2)), dims.Sd}))
+    ladder = []
+    seen = set()
+    for Sd_b in d_steps:
+        variants = [(0, dims.C)]
+        if dims.Sp > 0:
+            variants += [(dims.Sp, c) for c in c_steps]
+        for Sp_b, C_b in variants:
+            key = (Sp_b, C_b, Sd_b)
+            if key in seen or (Sp_b == 0 and Sd_b == 0):
+                continue
+            seen.add(key)
+            ladder.append(replace(dims, Sp=Sp_b, C=C_b, Sd=Sd_b))
+    return tuple(ladder)
+
+
+def select_bucket(ladder: Sequence[ServeDims], need_c: int,
+                  need_d: int) -> ServeDims:
+    """Smallest ladder entry covering a tick whose widest prefill chunk is
+    `need_c` tokens and whose decode rows number `need_d`.  Minimality is by
+    padded row count (`rows`); ties break toward the narrower prefill bucket,
+    then the smaller decode bucket."""
+    best: Optional[ServeDims] = None
+    for b in ladder:
+        covers = ((need_c == 0 or (b.Sp > 0 and b.C >= need_c))
+                  and b.Sd >= need_d)
+        if not covers:
+            continue
+        if best is None or (b.rows, b.C, b.Sd) < (best.rows, best.C, best.Sd):
+            best = b
+    if best is None:
+        raise ValueError(
+            f"no bucket covers need_c={need_c}, need_d={need_d} "
+            f"(ladder max C={max(b.C for b in ladder)}, "
+            f"Sd={max(b.Sd for b in ladder)})")
+    return best
 
 
 def _meta_field_defs(dims: ServeDims) -> Dict[str, Tuple[Tuple[int, ...], Any]]:

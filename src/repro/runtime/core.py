@@ -39,11 +39,31 @@ class ExecResult:
     time per pipeline stage — backends that can't split time per stage
     (the live engine) leave it None; the simulator and trace replay fill it,
     and `CostModel.fit_from_trace` calibrates against it.
+
+    `host_s` optionally reports the host-side time this tick spent outside
+    device execution (metadata assembly, embedding lookups, dispatch) — the
+    engine measures it, the simulator models it, and trace schema ≥ 1.3
+    records it so `RuntimeModel.fit_from_trace` can calibrate the overhead.
+
+    **Deferred form.**  A backend that dispatches asynchronously returns the
+    result with `pending` set: a thunk that blocks on the device readback and
+    yields the token list.  `resolve()` forces it (idempotently) and caches
+    into `tokens`; callers must resolve before reading `tokens`.  Plain
+    synchronous results leave `pending` None and `resolve()` is a no-op.
     """
 
     tokens: List[int] = field(default_factory=list)
     completed_at: float = 0.0
     stage_times: Optional[List[float]] = None
+    host_s: Optional[float] = None
+    pending: Optional[Callable[[], List[int]]] = None
+
+    def resolve(self) -> List[int]:
+        """Force the deferred readback (if any) and return the tokens."""
+        if self.pending is not None:
+            thunk, self.pending = self.pending, None
+            self.tokens = list(thunk())
+        return self.tokens
 
 
 class ExecutionBackend:
@@ -142,11 +162,25 @@ class TickLoop:
     depth-1 pipeline) — the pipeline-parallel in-flight window the
     scheduler's exclusion rule (one resident micro-batch per request) is
     built around.
+
+    **Async double-buffered mode** (`async_dispatch=True`, DESIGN.md §12):
+    the exiting batch's readback is *not* forced inside its own tick.
+    Instead the deferred `ExecResult` is parked in `_pending` and retired
+    one tick later — after the next tick's schedule/prepare host work has
+    already run and the next device tick has been dispatched — so host
+    metadata assembly for tick N+1 overlaps device execution of tick N
+    (jax async dispatch provides the overlap).  The completion lag is
+    invisible to outputs: a pending request is still in the scheduler's
+    in-flight set, so it simply becomes schedulable one tick later, and
+    greedy sampling makes per-request token streams independent of tick
+    placement (the Table-1 equivalence property).  Sync mode stays the
+    default — the simulator and trace replay/record paths depend on results
+    materializing within their own tick.
     """
 
     def __init__(self, scheduler: PipelineScheduler, backend: ExecutionBackend,
-                 on_token: Optional[Callable[[Request, int], None]] = None
-                 ) -> None:
+                 on_token: Optional[Callable[[Request, int], None]] = None,
+                 *, async_dispatch: bool = False) -> None:
         self.scheduler = scheduler
         self.backend = backend
         backend.scheduler = scheduler
@@ -156,12 +190,21 @@ class TickLoop:
         self.on_token = on_token
         self.finished: List[Request] = []
         self.last_tick_empty = False
+        self.async_dispatch = async_dispatch
+        # async mode: the exiting batch of the *previous* tick, its readback
+        # still deferred — retired at the top of the next step
+        self._pending: Optional[Tuple[int, ExecResult]] = None
 
     # ------------------------------------------------------------------ state
     @property
-    def busy(self) -> bool:
-        """True while any real micro-batch is still in the ring."""
+    def _ring_busy(self) -> bool:
         return any(bid is not None for bid, _ in self.ring)
+
+    @property
+    def busy(self) -> bool:
+        """True while any real micro-batch is in the ring or awaiting its
+        deferred retirement."""
+        return self._ring_busy or self._pending is not None
 
     @property
     def has_work(self) -> bool:
@@ -180,6 +223,11 @@ class TickLoop:
         else:
             entry = (batch.batch_id, self.backend.prepare(batch))
         self.last_tick_empty = batch.is_empty
+        if (self.async_dispatch and batch.is_empty and not self._ring_busy
+                and self._pending is not None):
+            # nothing to execute — only the deferred batch remains; retire it
+            # without paying a bubble device tick
+            return self._retire_pending(now)
         # Rotate: the new batch enters stage 0; the entry reaching the ring's
         # tail is the one executing its LAST stage this tick — its results
         # materialize when `execute` returns.  (For depth 1 that is this
@@ -189,6 +237,19 @@ class TickLoop:
 
         result = self.backend.execute(tuple(self.ring), exiting_id, now)
 
+        if self.async_dispatch:
+            # This tick is now in flight on the device.  Retire the PREVIOUS
+            # tick's exiting batch — its readback has had a full device tick
+            # to complete, so the resolve below rarely blocks — and park this
+            # tick's exiting batch until the next step.
+            finished = (self._retire_pending(now)
+                        if self._pending is not None else [])
+            if exiting_id is not None:
+                self._pending = (exiting_id, result)
+            self.ring[-1] = (None, self.backend.prepare(None))
+            return finished
+
+        result.resolve()
         if exiting_id is None:
             return []
         finished = self._retire(exiting_id, result.tokens,
@@ -208,6 +269,15 @@ class TickLoop:
         return out
 
     # ----------------------------------------------------------------- retire
+    def _retire_pending(self, now: float) -> List[Request]:
+        """Force the deferred readback of the previous tick's exiting batch
+        and retire it.  `now` (resolve-time clock) is the completion time —
+        the tokens materialized no later than this."""
+        assert self._pending is not None
+        bid, result = self._pending
+        self._pending = None
+        return self._retire(bid, result.resolve(), now)
+
     def _retire(self, batch_id: int, tokens: Sequence[int],
                 now: float) -> List[Request]:
         batch = self.scheduler.get_batch(batch_id)
@@ -232,6 +302,10 @@ class TickLoop:
         if now is None:
             now = self.backend.clock()
         affected: List[Request] = []
+        if self._pending is not None:
+            bid, _ = self._pending
+            self._pending = None          # deferred readback never forced
+            affected.extend(self.scheduler.abort_batch(bid, now))
         for bid, _ in list(self.ring):
             if bid is not None:
                 affected.extend(self.scheduler.abort_batch(bid, now))

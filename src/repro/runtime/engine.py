@@ -47,6 +47,34 @@ from repro.models.serve import ServeDims
 from repro.runtime.core import ExecResult, ExecutionBackend, TickLoop
 
 
+def _mesh_scope(mesh):
+    """Context manager putting `mesh` in scope for a jitted tick call —
+    entering it only when it isn't already the active mesh.
+
+    The ambient mesh context is part of jit's compilation-cache key, and on
+    jax versions where `set_mesh` is the legacy stack-based `with mesh:`,
+    re-entering an already-active mesh *changes* that key (stack depth 2 vs
+    1).  Ticks dispatched from inside a caller's `with jax.set_mesh(...)`
+    block (engine construction, warm_start) must hit the same compiled
+    signatures as ticks dispatched bare (drain on a worker thread), so the
+    scope is made idempotent here.
+    """
+    import contextlib
+    try:
+        from jax._src.mesh import get_concrete_mesh
+        if get_concrete_mesh() == mesh:       # new-style set_mesh active
+            return contextlib.nullcontext()
+    except Exception:
+        pass
+    try:
+        from jax._src.mesh import thread_resources
+        if thread_resources.env.physical_mesh == mesh:   # legacy `with mesh:`
+            return contextlib.nullcontext()
+    except Exception:
+        pass
+    return jax.set_mesh(mesh)
+
+
 class SlotAllocator:
     """Sequence slots for recurrent state / encoder caches."""
 
@@ -77,6 +105,8 @@ class EngineStats:
     padded_decode: int = 0
     scheduled_prefill: int = 0
     scheduled_decode: int = 0
+    host_s: float = 0.0         # host-side per-tick work (meta/fresh/dispatch)
+    device_s: float = 0.0       # host time *blocked* on device readback
 
 
 class JaxBackend(ExecutionBackend):
@@ -86,11 +116,22 @@ class JaxBackend(ExecutionBackend):
     caches, the inter-stage activation carry, and the per-request host state
     (state slots, encoder embeddings).  `prepare` builds the tick metadata at
     schedule time; `execute` stacks the ring's metadata, dispatches the tick,
-    and reads back the sampled tokens of the exiting micro-batch.
+    and returns a *deferred* `ExecResult` — the blocking readback of the
+    exiting micro-batch's tokens lives in its `pending` thunk, so a sync
+    TickLoop forces it immediately while the async loop lets it overlap the
+    next tick's host work (DESIGN.md §12).
+
+    With `bucketed=True` the backend compiles the fixed `bucket_ladder`
+    of serve shapes (all sharing the full-dims caches and carry) and each
+    tick runs in the smallest bucket covering every micro-batch in the
+    ring; `warm_start()` compiles the whole ladder up front so steady
+    state never recompiles (`compile_count()` exposes the jit cache sizes
+    for the zero-recompile assertion).
     """
 
     def __init__(self, cfg: ArchConfig, dims: ServeDims, params, mesh,
-                 kv: PagedKVManager, *, dtype=None) -> None:
+                 kv: PagedKVManager, *, dtype=None,
+                 bucketed: bool = False) -> None:
         from repro.distributed.pipeline import build_serve_tick
 
         self.cfg = cfg
@@ -102,9 +143,12 @@ class JaxBackend(ExecutionBackend):
         self.slots = SlotAllocator(dims.slots)
         self.enc_embeds: Dict[str, np.ndarray] = {}
         self.stats = EngineStats()
+        self.bucketed = bucketed
+        self.ladder: Tuple[ServeDims, ...] = (
+            serve_lib.bucket_ladder(dims) if bucketed else (dims,))
+        self._build_serve_tick = build_serve_tick
+        self._ticks: Dict[Tuple[int, int, int], Any] = {}
 
-        tick, specs = build_serve_tick(cfg, mesh, dims)
-        self._tick = jax.jit(tick, donate_argnums=(1, 2))
         self._embed = jax.jit(
             lambda p, t: jnp.take(p["embed"]["tok"], t, axis=0))
         S = cfg.plan.pp
@@ -116,6 +160,99 @@ class JaxBackend(ExecutionBackend):
                 "xd": jnp.zeros((S, dims.Sd, 1, cfg.d_model), self.dtype),
             }
         self._seed = 0
+        self._prep_s = 0.0          # host prepare() time since last execute
+        self._zero_meta_np()        # build the template now: one-time jnp
+        #                             dispatch must not bill the first tick
+
+    # ------------------------------------------------------- bucket programs
+    def _get_tick(self, bucket: ServeDims):
+        key = (bucket.Sp, bucket.C, bucket.Sd)
+        fn = self._ticks.get(key)
+        if fn is None:
+            carry_dims = self.dims if bucket != self.dims else None
+            tick, _ = self._build_serve_tick(self.cfg, self.mesh, bucket,
+                                             carry_dims=carry_dims)
+            fn = jax.jit(tick, donate_argnums=(1, 2))
+            self._ticks[key] = fn
+        return fn
+
+    def compile_count(self) -> int:
+        """Total jit-compiled signatures across the bucket programs (the
+        zero-recompile-in-steady-state assertion reads this)."""
+        total = 0
+        for fn in self._ticks.values():
+            if hasattr(fn, "_cache_size"):
+                total += fn._cache_size()
+        return total
+
+    def warm_start(self) -> None:
+        """Compile every ladder program with a bubble tick (zero metadata —
+        a state no-op, like any pipeline bubble) before serving begins.
+
+        The ladder's first program runs once more at the end: its first call
+        took the freshly-allocated caches/carry, whose shardings differ from
+        the donated program outputs every steady-state call receives, so it
+        alone needs its steady-state signature compiled separately.  After
+        warm_start no serving tick compiles (``compile_count()`` is flat).
+        """
+        def bubble(bucket: ServeDims) -> None:
+            meta_dev = self._stack_meta(zero_ring, bucket)
+            fresh = self._build_fresh(None, bucket)
+            sampling = {
+                "temps": jnp.zeros(bucket.Sp + bucket.Sd, jnp.float32),
+                "seed": jnp.asarray(0, jnp.uint32),
+            }
+            # same mesh context as execute(): the jit cache keys on the
+            # ambient mesh, so warming under a different context would
+            # compile signatures serving never hits
+            with _mesh_scope(self.mesh):
+                self.carry, self.caches, tokens, _ = self._get_tick(bucket)(
+                    self.params, self.caches, self.carry, meta_dev, fresh,
+                    sampling)
+            np.asarray(tokens)      # block: compile + execute now, not later
+
+        zero_ring = tuple(
+            (None, self._zero_meta_np()) for _ in range(self.depth))
+        for bucket in self.ladder:
+            bubble(bucket)
+        bubble(self.ladder[0])
+
+    def _select_bucket(self, ring: Sequence[Tuple[Optional[int], Any]]
+                       ) -> ServeDims:
+        if not self.bucketed:
+            return self.dims
+        need_c = 0
+        need_d = 0
+        for _, m in ring:
+            if m["p_chunk_lens"].size:
+                need_c = max(need_c, int(m["p_chunk_lens"].max()))
+            if m["d_valid"].size:
+                need_d = max(need_d, int(np.count_nonzero(m["d_valid"])))
+        return serve_lib.select_bucket(self.ladder, need_c, need_d)
+
+    @staticmethod
+    def _slice_meta_field(key: str, arr: np.ndarray,
+                          bucket: ServeDims) -> np.ndarray:
+        """Cut one stage-stacked full-dims meta field down to bucket shape."""
+        if key.startswith("p_"):
+            arr = arr[:, :bucket.Sp]
+            if key in ("p_positions", "p_slot_pages", "p_slot_offsets"):
+                arr = arr[:, :, :bucket.C]
+        else:
+            arr = arr[:, :bucket.Sd]
+        return arr
+
+    def _stack_meta(self, ring: Sequence[Tuple[Optional[int], Any]],
+                    bucket: ServeDims) -> dict:
+        full = bucket == self.dims
+        out = {}
+        for k in self._zero_meta_np():
+            stacked = np.stack([m[1][k] for m in ring], axis=0)
+            if not full:
+                stacked = np.ascontiguousarray(
+                    self._slice_meta_field(k, stacked, bucket))
+            out[k] = jnp.asarray(stacked)
+        return out
 
     # --------------------------------------------------------------- protocol
     @property
@@ -126,44 +263,58 @@ class JaxBackend(ExecutionBackend):
         return time.monotonic()
 
     def prepare(self, batch: Optional[ScheduledBatch]) -> dict:
-        if batch is None:
-            return self._zero_meta_np()
-        return self._build_meta(batch)
+        t0 = time.perf_counter()
+        out = self._zero_meta_np() if batch is None else self._build_meta(batch)
+        self._prep_s += time.perf_counter() - t0
+        return out
 
     def execute(self, ring: Sequence[Tuple[Optional[int], Any]],
                 exiting_id: Optional[int], now: float) -> ExecResult:
-        meta_dev = {
-            k: jnp.asarray(np.stack([m[1][k] for m in ring], axis=0))
-            for k in self._zero_meta_np()
-        }
+        t0 = time.perf_counter()
+        bucket = self._select_bucket(ring)
+        meta_dev = self._stack_meta(ring, bucket)
         entering = (self.scheduler.get_batch(ring[0][0])
                     if ring[0][0] is not None else None)
-        fresh = self._build_fresh(entering)
-        sampling = self._build_sampling(exiting_id)
-        self.carry, self.caches, tokens, top_lp = self._tick(
-            self.params, self.caches, self.carry, meta_dev, fresh, sampling)
+        fresh = self._build_fresh(entering, bucket)
+        sampling = self._build_sampling(exiting_id, bucket)
+        with _mesh_scope(self.mesh):
+            self.carry, self.caches, tokens, top_lp = self._get_tick(bucket)(
+                self.params, self.caches, self.carry, meta_dev, fresh,
+                sampling)
 
-        dims = self.dims
         n_p = entering.num_prefill_tokens if entering is not None else 0
         n_d = entering.num_decode_tokens if entering is not None else 0
         self.stats.ticks += 1
         self.stats.scheduled_prefill += n_p
         self.stats.scheduled_decode += n_d
-        self.stats.padded_prefill += dims.Sp * dims.C - n_p
-        self.stats.padded_decode += dims.Sd - n_d
+        self.stats.padded_prefill += bucket.Sp * bucket.C - n_p
+        self.stats.padded_decode += bucket.Sd - n_d
+        # host_s: everything this tick spent off-device — the prepare()
+        # calls since the last execute plus the stack/embed/dispatch above
+        host_s = self._prep_s + (time.perf_counter() - t0)
+        self._prep_s = 0.0
+        self.stats.host_s += host_s
 
-        toks: List[int] = []
-        if exiting_id is not None:
-            exiting = self.scheduler.get_batch(exiting_id)
-            if exiting is not None:
-                host = np.asarray(tokens)
-                for i, seq in enumerate(exiting.prefill):
-                    if seq.produces_token:
-                        toks.append(int(host[i]))
-                for j, seq in enumerate(exiting.decode):
-                    toks.append(int(host[dims.Sp + j]))
-        self.stats.tokens_out += len(toks)
-        return ExecResult(tokens=toks, completed_at=now)
+        exiting = (self.scheduler.get_batch(exiting_id)
+                   if exiting_id is not None else None)
+        if exiting is None:
+            return ExecResult(completed_at=now, host_s=host_s)
+
+        prefill_rows = [i for i, seq in enumerate(exiting.prefill)
+                        if seq.produces_token]
+        n_decode = len(exiting.decode)
+        d_off = bucket.Sp
+
+        def readback() -> List[int]:
+            t1 = time.perf_counter()
+            host = np.asarray(tokens)       # blocks until the tick finishes
+            self.stats.device_s += time.perf_counter() - t1
+            toks = [int(host[i]) for i in prefill_rows]
+            toks += [int(host[d_off + j]) for j in range(n_decode)]
+            self.stats.tokens_out += len(toks)
+            return toks
+
+        return ExecResult(completed_at=now, host_s=host_s, pending=readback)
 
     def finish_request(self, req: Request) -> None:
         self.slots.release(req.request_id)
@@ -247,9 +398,10 @@ class JaxBackend(ExecutionBackend):
                         jnp.asarray(leaves[key], arr.dtype))
 
     # -------------------------------------------------------------- internals
-    def _build_sampling(self, exiting_id):
+    def _build_sampling(self, exiting_id, dims: Optional[ServeDims] = None):
         """Per-row temperatures for the micro-batch exiting this tick."""
-        rows = self.dims.Sp + self.dims.Sd
+        dims = dims or self.dims
+        rows = dims.Sp + dims.Sd
         temps = np.zeros(rows, np.float32)
         batch = (self.scheduler.get_batch(exiting_id)
                  if exiting_id is not None else None)
@@ -257,7 +409,7 @@ class JaxBackend(ExecutionBackend):
             for i, seq in enumerate(batch.prefill):
                 temps[i] = seq.request.sampling.temperature
             for j, seq in enumerate(batch.decode):
-                temps[self.dims.Sp + j] = seq.request.sampling.temperature
+                temps[dims.Sp + j] = seq.request.sampling.temperature
         self._seed = (self._seed + 1) % (2**31)
         return {"temps": jnp.asarray(temps),
                 "seed": jnp.asarray(self._seed, jnp.uint32)}
@@ -270,61 +422,82 @@ class JaxBackend(ExecutionBackend):
 
     def _build_meta(self, batch: ScheduledBatch) -> dict:
         dims = self.dims
-        m = {k: np.asarray(v) for k, v in serve_lib.zero_meta(dims).items()}
-        m = {k: v.copy() for k, v in m.items()}
+        zm = self._zero_meta_np()
+        # copy-on-write off the cached zero template: a field is copied the
+        # first time the batch writes it, untouched fields alias the shared
+        # template (safe — consumers only read; `_stack_meta` copies via
+        # np.stack).  A decode-only batch never materializes the p_* fields.
+        m = dict(zm)
+
+        def w(k: str) -> np.ndarray:
+            if m[k] is zm[k]:
+                m[k] = zm[k].copy()
+            return m[k]
+
         for s, seq in enumerate(batch.prefill):
             req = seq.request
             L = seq.num_tokens
-            m["p_positions"][s, :L] = seq.start_pos + np.arange(L)
-            m["p_chunk_lens"][s] = L
-            m["p_context_lens"][s] = seq.start_pos + L
+            w("p_positions")[s, :L] = seq.start_pos + np.arange(L)
+            w("p_chunk_lens")[s] = L
+            w("p_context_lens")[s] = seq.start_pos + L
             table = self.kv.block_table(req.request_id)[: dims.Bp]
-            m["p_block_tables"][s, : len(table)] = table
+            w("p_block_tables")[s, : len(table)] = table
             pages = [p for p, _ in seq.slots]
             offs = [o for _, o in seq.slots]
-            m["p_slot_pages"][s, :L] = pages
-            m["p_slot_offsets"][s, :L] = offs
-            m["p_state_slots"][s] = self.slots.get(req.request_id)
-            m["p_sample"][s] = int(seq.produces_token)
+            w("p_slot_pages")[s, :L] = pages
+            w("p_slot_offsets")[s, :L] = offs
+            w("p_state_slots")[s] = self.slots.get(req.request_id)
+            w("p_sample")[s] = int(seq.produces_token)
         for s, seq in enumerate(batch.decode):
             req = seq.request
-            m["d_positions"][s] = seq.start_pos
-            m["d_context_lens"][s] = seq.start_pos + 1
+            w("d_positions")[s] = seq.start_pos
+            w("d_context_lens")[s] = seq.start_pos + 1
             table = self.kv.block_table(req.request_id)[: dims.Bd]
-            m["d_block_tables"][s, : len(table)] = table
-            m["d_slot_pages"][s] = seq.slots[0][0]
-            m["d_slot_offsets"][s] = seq.slots[0][1]
-            m["d_state_slots"][s] = self.slots.get(req.request_id)
-            m["d_valid"][s] = 1
+            w("d_block_tables")[s, : len(table)] = table
+            w("d_slot_pages")[s] = seq.slots[0][0]
+            w("d_slot_offsets")[s] = seq.slots[0][1]
+            w("d_state_slots")[s] = self.slots.get(req.request_id)
+            w("d_valid")[s] = 1
         return m
 
-    def _build_fresh(self, batch: Optional[ScheduledBatch]) -> dict:
-        dims, cfg = self.dims, self.cfg
+    def _build_fresh(self, batch: Optional[ScheduledBatch],
+                     dims: Optional[ServeDims] = None) -> dict:
+        dims, cfg = dims or self.dims, self.cfg
         prefill = batch.prefill if batch is not None else []
         decode = batch.decode if batch is not None else []
         W = dims.prefill_width
+        full = self.dims
         xp = np.zeros((max(dims.Sp, 0), W, cfg.d_model), np.float32)
         xd = np.zeros((dims.Sd, 1, cfg.d_model), np.float32)
-        p_tok = np.zeros((max(dims.Sp, 0), max(dims.C, 1)), np.int32)
-        d_tok = np.zeros((dims.Sd, 1), np.int32)
+        # token buffers stay at FULL dims even for smaller buckets, so the
+        # embed jit keeps one signature across the whole ladder (warmed at
+        # startup) instead of compiling per chunk width mid-serve
+        p_tok = np.zeros((max(full.Sp, 1), max(full.C, 1)), np.int32)
+        d_tok = np.zeros((max(full.Sd, 1), 1), np.int32)
         for s, seq in enumerate(prefill):
             toks = seq.request.effective_prompt[
                 seq.start_pos : seq.start_pos + seq.num_tokens]
             p_tok[s, : len(toks)] = toks
         for s, seq in enumerate(decode):
             d_tok[s, 0] = seq.request.effective_prompt[seq.start_pos]
+        # the embed jit keys on the ambient mesh context like any other
+        # program: run it under the same scope as the tick call so the
+        # warm-time and serve-time signatures coincide
         if dims.Sp:
-            emb = np.asarray(self._embed(self.params,
-                                         jnp.asarray(p_tok)), np.float32)
-            xp[:, dims.Te : dims.Te + emb.shape[1], :] = emb[:, : dims.C]
+            with _mesh_scope(self.mesh):
+                emb = np.asarray(self._embed(self.params,
+                                             jnp.asarray(p_tok)), np.float32)
+            emb = emb[: dims.Sp, : max(dims.C, 1)]
+            xp[:, dims.Te : dims.Te + emb.shape[1], :] = emb
             for s, seq in enumerate(prefill):
                 enc = self.enc_embeds.get(seq.request.request_id)
                 if enc is not None:
                     xp[s, : enc.shape[0], :] = enc
         if dims.Sd:
-            xd[:, 0, :] = np.asarray(
-                self._embed(self.params, jnp.asarray(d_tok)),
-                np.float32)[:, 0, :]
+            with _mesh_scope(self.mesh):
+                xd[:, 0, :] = np.asarray(
+                    self._embed(self.params, jnp.asarray(d_tok)),
+                    np.float32)[: dims.Sd, 0, :]
         return {"xp": jnp.asarray(xp, self.dtype),
                 "xd": jnp.asarray(xd, self.dtype)}
 
@@ -345,7 +518,15 @@ class PipelineEngine:
         num_pages: Optional[int] = None,
         dtype=None,
         trace_path: Optional[str] = None,
+        async_dispatch: bool = False,
+        bucketed: bool = False,
     ) -> None:
+        if trace_path is not None and async_dispatch:
+            # the recorder writes each tick's exit tokens at execute time;
+            # a deferred retire would interleave records out of order and
+            # break strict replay, so traced engines stay synchronous
+            raise ValueError("async_dispatch is incompatible with trace_path "
+                             "(traces require synchronous retirement)")
         self.cfg = cfg
         self.dims = dims
         self.mesh = mesh
@@ -358,7 +539,9 @@ class PipelineEngine:
             max_chunk_tokens=max(dims.C, 1),
             max_decode_seqs=dims.Sd)
         self.backend = JaxBackend(cfg, dims, params, mesh, self.kv,
-                                  dtype=dtype)
+                                  dtype=dtype, bucketed=bucketed)
+        if bucketed:
+            self.backend.warm_start()
         # with --trace-out, every tick of the live engine is logged to a
         # replayable JSONL trace (runtime/trace.py); the recorder is a
         # transparent shim around the backend.  The serving layer submits
@@ -377,7 +560,8 @@ class PipelineEngine:
             self.recorder = TraceRecorder(self.backend, trace_path)
             self._trace_lock = threading.Lock()
             loop_backend = self.recorder
-        self.loop = TickLoop(self.scheduler, loop_backend)
+        self.loop = TickLoop(self.scheduler, loop_backend,
+                             async_dispatch=async_dispatch)
         # state slots are tied to residency: free them when the scheduler
         # evicts a request (preemption or batch abort), not only on finish
         self.scheduler.on_preempt = self.backend.release_resident_state
@@ -480,9 +664,13 @@ class PipelineEngine:
             return self.loop.drain(self._now_fn, max_ticks)
         out: List[Request] = []
         for _ in range(max_ticks):          # lock per tick, not per drain
-            if not (self.has_work or self.busy):
-                break
-            out.extend(self.step())
+            # the no-work check and the step share ONE lock acquisition:
+            # with a check outside the lock, an add_request landing between
+            # check and step would be missed by this drain pass
+            with self._trace_lock:
+                if not (self.has_work or self.busy):
+                    break
+                out.extend(self.loop.step(self._now_fn()))
         return out
 
     # -------------------------------------------------------- checkpointing

@@ -178,6 +178,38 @@ class RuntimeModel:
         # ~17% of execution serialized on input prep (paper §3.4)
         return RuntimeModel(overhead_serial=0.0025, overhead_overlap=0.0)
 
+    @property
+    def host_s_per_tick(self) -> float:
+        """Total modeled host work per non-bubble tick — the quantity trace
+        schema 1.3 records as `host_s` (how much of it blocks the pipeline
+        is the serial/overlap split)."""
+        return self.overhead_serial + self.overhead_overlap
+
+    @staticmethod
+    def fit_from_trace(trace, *, overlap_fraction: float = 0.0
+                       ) -> "RuntimeModel":
+        """Calibrate the host-overhead term from a schema ≥ 1.3 trace: the
+        mean per-tick `host_s` over non-bubble ticks, split by
+        `overlap_fraction` into the part hidden behind compute (the async
+        double-buffered engine overlaps nearly all of it → fraction near 1)
+        versus the part that serializes with the pipeline (a sync engine →
+        fraction 0).  Raises ValueError on traces without `host_s` — sim
+        throughput would otherwise silently assume a free host."""
+        from repro.runtime.trace import host_overhead_samples
+
+        samples = host_overhead_samples(trace)
+        if not samples:
+            raise ValueError(
+                "trace records no per-tick host_s (pre-1.3 schema, or a "
+                "backend without host accounting) — cannot calibrate "
+                "RuntimeModel")
+        if not 0.0 <= overlap_fraction <= 1.0:
+            raise ValueError("overlap_fraction must be within [0, 1]")
+        mean = float(np.mean(samples))
+        return RuntimeModel(
+            overhead_serial=mean * (1.0 - overlap_fraction),
+            overhead_overlap=mean * overlap_fraction)
+
 
 @dataclass
 class SimMetrics:
@@ -288,9 +320,15 @@ class SimBackend(ExecutionBackend):
                 t = start + dt
             self._completion_time[entering_id] = t
         self.metrics.sim_time = max(self.metrics.sim_time, self.time)
+        # Modeled per-tick host work (schema 1.3 `host_s`): dispatching a
+        # real batch costs the full serial+overlap budget, a bubble costs
+        # nothing.  Deterministic, so golden fixtures stay reproducible and
+        # RuntimeModel.fit_from_trace recovers the model exactly.
+        host_s = self.runtime.host_s_per_tick if entering_id is not None \
+            else 0.0
 
         if exiting_id is None:
-            return ExecResult([], now, stage_times=stage_times)
+            return ExecResult([], now, stage_times=stage_times, host_s=host_s)
         done_at = self._completion_time.pop(exiting_id, now)
         exiting = self.scheduler.get_batch(exiting_id)
         n = sum(1 for s in exiting.seqs if s.produces_token) \
@@ -299,7 +337,8 @@ class SimBackend(ExecutionBackend):
         # the driver cannot act on this completion before it happened
         self.time = max(self.time, done_at)
         self.metrics.sim_time = max(self.metrics.sim_time, self.time)
-        return ExecResult([0] * n, done_at, stage_times=stage_times)
+        return ExecResult([0] * n, done_at, stage_times=stage_times,
+                          host_s=host_s)
 
     def reset(self, now: float) -> None:
         self._completion_time.clear()

@@ -78,8 +78,12 @@ from repro.runtime.core import ExecResult, ExecutionBackend, TickLoop
 SCHEMA = "gllm-trace"
 ROUTE_SCHEMA = "gllm-route"
 SCHEMA_MAJOR = 1
-SCHEMA_MINOR = 2    # 1.1: "abort" record kind; 1.2: req/migrate carry
-                    # per-request priority + SLO class
+SCHEMA_MINOR = 3    # 1.1: "abort" record kind; 1.2: req/migrate carry
+                    # per-request priority + SLO class; 1.3: ticks may carry
+                    # "host_s" (per-tick host overhead — engine measures it,
+                    # sim models it, RuntimeModel.fit_from_trace calibrates
+                    # against it); absent on backends that don't report it,
+                    # so 1.2 traces remain byte-identical
 
 
 class TraceSchemaError(ValueError):
@@ -214,13 +218,20 @@ class Trace:
 
 # Canonical tick field order, exactly as `TraceRecorder.execute` writes it —
 # compaction and expansion both key off this so the round trip is
-# byte-identical under `dumps_record`.
+# byte-identical under `dumps_record`.  "host_s" (schema 1.3) is optional:
+# backends that report no host overhead omit it on every tick, so a trace is
+# uniformly with or without it (never mixed) and pre-1.3 streams keep their
+# exact bytes.
 TICK_FIELDS = ("now", "batch", "prefill_budget", "decode_budget", "kv_free",
-               "wp", "rd", "preempts", "stage_times", "exit")
+               "wp", "rd", "preempts", "stage_times", "host_s", "exit")
+_OPTIONAL_TICK_FIELDS = ("host_s",)
 _CANONICAL_TICK_KEYS = ["kind", "tick"] + list(TICK_FIELDS)
+_CANONICAL_TICK_KEYS_LEGACY = [
+    k for k in _CANONICAL_TICK_KEYS if k not in _OPTIONAL_TICK_FIELDS]
 
 
 STEADY_DECODE = "+1"    # batch marker: the cohort's previous batch, +1 step
+_ABSENT = object()      # sentinel: field not present on the previous tick
 
 
 def _is_steady_decode(cohort_batch: Optional[Dict[str, Any]],
@@ -277,7 +288,8 @@ def compact_records(records: Sequence[Dict[str, Any]]
         if rec.get("kind") != "tick":
             out.append(rec)
             continue
-        if list(rec) != _CANONICAL_TICK_KEYS:
+        if list(rec) not in (_CANONICAL_TICK_KEYS,
+                             _CANONICAL_TICK_KEYS_LEGACY):
             raise TraceSchemaError(
                 f"tick {rec.get('tick')} is not in canonical field order; "
                 "cannot delta-encode losslessly")
@@ -286,7 +298,9 @@ def compact_records(records: Sequence[Dict[str, Any]]
             small["tick"] = rec["tick"]
         counter = rec["tick"] + 1
         for f in TICK_FIELDS:
-            if prev is None or prev[f] != rec[f]:
+            if f not in rec:                 # optional field, omitted trace-wide
+                continue
+            if prev is None or prev.get(f, _ABSENT) != rec[f]:
                 small[f] = rec[f]
         if len(ring) == depth and _is_steady_decode(ring[0]["batch"],
                                                     rec["batch"], depth):
@@ -324,8 +338,10 @@ def expand_records(records: Sequence[Dict[str, Any]]
                 full[f] = _steady_decode_batch(ring[0]["batch"], depth)
             elif f in rec:
                 full[f] = rec[f]
-            elif prev is not None:
+            elif prev is not None and f in prev:
                 full[f] = prev[f]
+            elif f in _OPTIONAL_TICK_FIELDS:
+                continue                     # omitted trace-wide (pre-1.3)
             else:
                 raise TraceSchemaError(
                     f"compacted tick {full['tick']} omits {f!r} but no "
@@ -527,6 +543,10 @@ class TraceRecorder(ExecutionBackend):
     def execute(self, ring, exiting_id, now) -> ExecResult:
         self._ensure_header()
         result = self.inner.execute(ring, exiting_id, now)
+        # the recorder logs exit tokens at execute time, so a deferred
+        # result is forced here — traced engines are synchronous by
+        # construction (PipelineEngine rejects async_dispatch + trace_path)
+        result.resolve()
         sched = self.scheduler
         entering_id = ring[0][0]
         batch = (sched.get_batch(entering_id)
@@ -537,7 +557,7 @@ class TraceRecorder(ExecutionBackend):
                         "tokens": [int(t) for t in result.tokens],
                         "at": result.completed_at}
         preempts = sched.stats.preemptions
-        self.writer.write({
+        rec: Dict[str, Any] = {
             "kind": "tick",
             "tick": self._tick,
             "now": now,
@@ -549,8 +569,11 @@ class TraceRecorder(ExecutionBackend):
             "rd": sched.num_running_decode,
             "preempts": preempts - self._last_preempts,
             "stage_times": result.stage_times,
-            "exit": exit_rec,
-        })
+        }
+        if result.host_s is not None:        # schema 1.3, optional per-backend
+            rec["host_s"] = result.host_s
+        rec["exit"] = exit_rec
+        self.writer.write(rec)
         self._last_preempts = preempts
         self._tick += 1
         return result
@@ -633,10 +656,12 @@ class TraceBackend(ExecutionBackend):
                     ("tick", "<end of trace>", "replay still has work")])
             self._check_tick(k, rec, ring, exiting_id, n_produce)
             if exiting_id is None:
-                return ExecResult([], now, stage_times=rec["stage_times"])
+                return ExecResult([], now, stage_times=rec["stage_times"],
+                                  host_s=rec.get("host_s"))
             return ExecResult(list(rec["exit"]["tokens"]),
                               rec["exit"]["at"],
-                              stage_times=rec["stage_times"])
+                              stage_times=rec["stage_times"],
+                              host_s=rec.get("host_s"))
 
         # timing-only: recorded latency, scheduler free to diverge
         if rec is not None and rec["exit"] is not None:
@@ -644,14 +669,16 @@ class TraceBackend(ExecutionBackend):
         else:
             latency = 0.0
         stage_times = rec["stage_times"] if rec is not None else None
+        host_s = rec.get("host_s") if rec is not None else None
         if exiting_id is None:
-            return ExecResult([], now, stage_times=stage_times)
+            return ExecResult([], now, stage_times=stage_times, host_s=host_s)
         tokens = None
         if rec is not None and rec["exit"] is not None \
                 and len(rec["exit"]["tokens"]) == n_produce:
             tokens = list(rec["exit"]["tokens"])
         return ExecResult(tokens if tokens is not None else [0] * n_produce,
-                          now + latency, stage_times=stage_times)
+                          now + latency, stage_times=stage_times,
+                          host_s=host_s)
 
     # ------------------------------------------------------------- divergence
     def _check_tick(self, k: int, rec: Dict[str, Any], ring,
@@ -864,6 +891,7 @@ class TickSample:
     prefill_ctx: int
     decode_ctx: int
     stage_time: float       # un-straggled per-stage latency (min over stages)
+    host_s: Optional[float] = None   # per-tick host overhead (schema 1.3)
 
 
 def tick_samples(trace: Trace) -> List[TickSample]:
@@ -883,8 +911,16 @@ def tick_samples(trace: Trace) -> List[TickSample]:
             prefill_ctx=p_ctx,
             decode_ctx=d_ctx,
             stage_time=float(min(times)),
+            host_s=rec.get("host_s"),
         ))
     return out
+
+
+def host_overhead_samples(trace: Trace) -> List[float]:
+    """Per-tick `host_s` values of non-bubble ticks (schema ≥ 1.3).  Empty
+    for traces whose backend reported no host overhead."""
+    return [float(rec["host_s"]) for rec in trace.ticks
+            if rec.get("host_s") is not None and rec["batch"] is not None]
 
 
 def calibration_error(trace: Trace, cost) -> float:

@@ -111,7 +111,9 @@ def _build_engine(spec: ServeSpec) -> Tuple[Any, Any]:
         # replicas share the (read-only) parameter tree; each owns its KV
         # pool, caches, scheduler, and TickLoop
         engines = [PipelineEngine(cfg, dims, params, mesh, th,
-                                  trace_path=_replica_trace(record, i, n))
+                                  trace_path=_replica_trace(record, i, n),
+                                  async_dispatch=es.dispatch == "async",
+                                  bucketed=es.bucketed)
                    for i in range(n)]
     if spec.cluster is None and n == 1:
         return engines[0], cfg

@@ -36,6 +36,13 @@ class EngineSpec:
     `throttle` / `dims` are sparse overrides onto the backend's defaults
     (`ThrottleConfig` fields, `ServeDims` fields); `reduced_overrides` is
     passed to `make_reduced` (e.g. ``{"d_model": 128}``).
+
+    `dispatch` selects the tick driving mode: ``"sync"`` (retire each
+    batch the tick it exits — required for trace recording) or ``"async"``
+    (double-buffered: retirement lags one tick so host prep overlaps
+    device execution, DESIGN.md §12).  `bucketed=True` compiles the
+    static-shape ladder and pads each tick to the smallest covering
+    bucket instead of the full serve cell.
     """
 
     arch: str = "qwen1.5-0.5b"
@@ -45,6 +52,14 @@ class EngineSpec:
     throttle: Optional[Dict[str, Any]] = None
     dims: Optional[Dict[str, Any]] = None
     reduced_overrides: Optional[Dict[str, Any]] = None
+    dispatch: str = "sync"          # sync | async (double-buffered ticks)
+    bucketed: bool = False
+
+    def __post_init__(self) -> None:
+        if self.dispatch not in ("sync", "async"):
+            raise ValueError(
+                f"unknown dispatch {self.dispatch!r}; expected 'sync' or "
+                "'async'")
 
 
 @dataclass(frozen=True)

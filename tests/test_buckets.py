@@ -1,0 +1,108 @@
+"""Bucket ladder properties (models/serve.py, DESIGN.md §12).
+
+`bucket_ladder` builds the static ladder of serve shapes; `select_bucket`
+picks the smallest entry covering a tick.  These are pure shape functions
+(no jax execution), so the properties are checked exhaustively over the
+reachable need-space and — when hypothesis is installed — over random
+geometries too.  The engine-level contract (zero recompiles after warmup)
+lives in tests/test_async_dispatch.py.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:      # pragma: no cover - exercised on minimal installs
+    HAS_HYPOTHESIS = False
+
+from repro.models.serve import ServeDims, bucket_ladder, select_bucket
+
+
+def make_dims(Sp=1, C=16, Sd=8):
+    return ServeDims(Sp=Sp, C=C, Sd=Sd, pages=256, page=8, Bp=32, Bd=32,
+                     slots=16)
+
+
+def check_ladder(dims):
+    ladder = bucket_ladder(dims)
+    assert dims in ladder, "full shape must be servable"
+    keys = [(b.Sp, b.C, b.Sd) for b in ladder]
+    assert len(set(keys)) == len(keys), "ladder entries must be distinct"
+    for b in ladder:
+        assert not (b.Sp == 0 and b.Sd == 0), "empty shape is not a bucket"
+        assert b.Sp in (0, dims.Sp) and 0 < b.C <= dims.C
+        assert 0 <= b.Sd <= dims.Sd
+        # one KV pool / carry / param tree serves the whole ladder
+        assert (b.pages, b.page, b.Bp, b.Bd, b.slots, b.Te) == \
+            (dims.pages, dims.page, dims.Bp, dims.Bd, dims.slots, dims.Te)
+    return ladder
+
+
+def check_selection(dims, ladder, need_c, need_d):
+    b = select_bucket(ladder, need_c, need_d)
+    # covers the demand
+    assert b.Sd >= need_d
+    if need_c > 0:
+        assert b.Sp > 0 and b.C >= need_c
+    # minimal: no other covering entry pads fewer rows (ties break toward
+    # the narrower prefill bucket, then the smaller decode bucket)
+    for other in ladder:
+        covers = ((need_c == 0 or (other.Sp > 0 and other.C >= need_c))
+                  and other.Sd >= need_d)
+        if covers:
+            assert (b.rows, b.C, b.Sd) <= (other.rows, other.C, other.Sd)
+
+
+def test_ladder_and_selection_exhaustive_default_cell():
+    """Every reachable (need_c, need_d) of the reduced serving cell."""
+    dims = make_dims()
+    ladder = check_ladder(dims)
+    for need_c in range(dims.C + 1):
+        for need_d in range(dims.Sd + 1):
+            if need_c == 0 and need_d == 0:
+                continue        # bubble ticks use the smallest bucket
+            check_selection(dims, ladder, need_c, need_d)
+
+
+def test_decode_only_cell():
+    dims = make_dims(Sp=0, Sd=8)
+    ladder = check_ladder(dims)
+    assert all(b.Sp == 0 for b in ladder)
+    for need_d in range(1, dims.Sd + 1):
+        check_selection(dims, ladder, 0, need_d)
+
+
+def test_overdemand_raises():
+    dims = make_dims()
+    ladder = bucket_ladder(dims)
+    with pytest.raises(ValueError, match="no bucket"):
+        select_bucket(ladder, dims.C + 1, 0)
+    with pytest.raises(ValueError, match="no bucket"):
+        select_bucket(ladder, 0, dims.Sd + 1)
+
+
+def test_tiny_cells_do_not_degenerate():
+    """C=1 / Sd=1 collapse the ladder steps onto each other; dedup must
+    leave a valid single-entry-per-class ladder."""
+    for dims in (make_dims(C=1, Sd=1), make_dims(C=2, Sd=1),
+                 make_dims(C=1, Sd=8)):
+        ladder = check_ladder(dims)
+        check_selection(dims, ladder, dims.C, dims.Sd)
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(Sp=st.integers(0, 2), C=st.integers(1, 64), Sd=st.integers(0, 32),
+           need_c=st.integers(0, 64), need_d=st.integers(0, 32))
+    def test_selection_covers_and_is_minimal(Sp, C, Sd, need_c, need_d):
+        if Sp == 0 and Sd == 0:
+            return              # no servable rows: not a valid cell
+        dims = make_dims(Sp=Sp, C=C, Sd=Sd)
+        ladder = check_ladder(dims)
+        need_c = min(need_c, C) if Sp > 0 else 0
+        need_d = min(need_d, Sd)
+        if need_c == 0 and need_d == 0:
+            return
+        check_selection(dims, ladder, need_c, need_d)

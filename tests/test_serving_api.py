@@ -398,6 +398,7 @@ async def _collect(stream):
                                  {"straggler_stage": 1,
                                   "straggler_factor": 2.0},
                                  {"pp": 8, "pages": 512}))),
+    ServeSpec(engine=EngineSpec(dispatch="async", bucketed=True)),
 ])
 def test_spec_json_round_trip(spec):
     assert ServeSpec.from_json(spec.to_json()) == spec
@@ -407,6 +408,13 @@ def test_spec_json_round_trip(spec):
 def test_spec_rejects_unknown_fields():
     with pytest.raises(ValueError, match="unknown"):
         ServeSpec.from_json('{"backend": "sim", "typo": 1}')
+
+
+def test_spec_rejects_unknown_dispatch():
+    with pytest.raises(ValueError, match="dispatch"):
+        EngineSpec(dispatch="eager")
+    with pytest.raises(ValueError, match="dispatch"):
+        ServeSpec.from_json('{"engine": {"dispatch": "eager"}}')
 
 
 def test_spec_validates_shapes():

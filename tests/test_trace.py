@@ -278,6 +278,65 @@ class TestFitFromTrace:
 
 
 # ---------------------------------------------------------------------------
+# Per-tick host overhead (schema 1.3 `host_s`)
+# ---------------------------------------------------------------------------
+
+class TestHostOverhead:
+    def test_sim_traces_record_host_s(self):
+        """SimBackend models host work per non-bubble tick; the recorder
+        writes it, and the golden fixtures therefore pin it."""
+        from repro.runtime.trace import host_overhead_samples
+        trace = load_fixture(FIXTURES[0])
+        samples = host_overhead_samples(trace)
+        assert len(samples) == sum(1 for r in trace.ticks if r["batch"])
+        assert all(s > 0 for s in samples)
+        # bubble ticks cost no host work in the sim model
+        assert all(r.get("host_s") == 0.0 for r in trace.ticks
+                   if r["batch"] is None and "host_s" in r)
+
+    def test_fit_from_trace_recovers_runtime_model(self):
+        """The sim's host_s is deterministic per non-bubble tick, so the
+        calibration recovers `host_s_per_tick` exactly and splits it by the
+        requested overlap fraction."""
+        from repro.runtime.simulator import RuntimeModel
+        trace = load_fixture(FIXTURES[0])
+        truth = RuntimeModel.gllm().host_s_per_tick
+        fitted = RuntimeModel.fit_from_trace(trace)
+        assert fitted.host_s_per_tick == pytest.approx(truth)
+        assert fitted.overhead_overlap == 0.0
+        split = RuntimeModel.fit_from_trace(trace, overlap_fraction=0.75)
+        assert split.host_s_per_tick == pytest.approx(truth)
+        assert split.overhead_overlap == pytest.approx(0.75 * truth)
+        with pytest.raises(ValueError, match="overlap_fraction"):
+            RuntimeModel.fit_from_trace(trace, overlap_fraction=1.5)
+
+    def test_fit_from_trace_rejects_legacy_traces(self):
+        """A pre-1.3 trace (no host_s anywhere) cannot calibrate the host
+        model — explicit error, not a silent zero."""
+        from repro.runtime.simulator import RuntimeModel
+        trace = load_fixture(FIXTURES[0])
+        legacy = Trace(copy.deepcopy(trace.header),
+                       copy.deepcopy(trace.records))
+        for rec in legacy.records:
+            rec.pop("host_s", None)
+        with pytest.raises(ValueError, match="host_s"):
+            RuntimeModel.fit_from_trace(legacy)
+
+    def test_legacy_records_round_trip_without_host_s(self):
+        """Stripping host_s yields exactly the pre-1.3 byte layout: the
+        field is uniformly optional, never null-filled."""
+        from repro.runtime.trace import (compact_records, dumps_record,
+                                         expand_records)
+        with open(fixture_path(FIXTURES[0])) as fh:
+            records = [json.loads(line) for line in fh if line.strip()]
+        for rec in records:
+            rec.pop("host_s", None)
+        out = [dumps_record(r) for r in expand_records(compact_records(records))]
+        assert out == [dumps_record(r) for r in records]
+        assert all('"host_s"' not in line for line in out)
+
+
+# ---------------------------------------------------------------------------
 # Tracing across the runtime: live engine and multi-replica cluster
 # ---------------------------------------------------------------------------
 
@@ -336,6 +395,8 @@ class TestEngineTrace:
                                     for r in reqs}
         # engine backends cannot attribute per-stage time: recorded as null
         assert all(r["stage_times"] is None for r in trace.ticks)
+        # ...but they do measure per-tick host overhead (schema 1.3)
+        assert all(r["host_s"] > 0 for r in trace.ticks)
 
 
 class TestClusterTrace:
