@@ -7,6 +7,9 @@
 #                     any batching change in scheduler/throttle fails here
 #   make rebalance-check  sim-only control-plane smoke: steal+migrate must
 #                     beat admission-only p95 TTFT on the straggler cluster
+#   make prefix-check  sim-only prefix-caching smoke: cache-aware routing
+#                     must beat a cache-blind router on prefill tokens
+#                     avoided without losing mean TTFT
 #   make examples-check  run the examples end-to-end against the public
 #                     serving API (reduced engine on CPU + the HTTP demo)
 #   make docs-check   run every fenced python block in README.md + docs/
@@ -16,7 +19,7 @@
 #                     plus schema validation of the checked-in
 #                     BENCH_engine.json
 #   make ci           dev-deps + tier-1 + golden traces + rebalance smoke
-#                     + examples + docs + bench smoke
+#                     + prefix smoke + examples + docs + bench smoke
 #   make bench        fast benchmark sweep (CSV rows on stdout)
 
 PY ?= python
@@ -26,8 +29,8 @@ export PYTHONPATH
 TRACE_FIXTURES := tests/fixtures/traces/prefill_heavy.trace.jsonl \
                   tests/fixtures/traces/decode_saturated.trace.jsonl
 
-.PHONY: dev-deps test trace-check rebalance-check examples-check \
-        docs-check bench-smoke ci bench
+.PHONY: dev-deps test trace-check rebalance-check prefix-check \
+        examples-check docs-check bench-smoke ci bench
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -40,6 +43,9 @@ trace-check:
 
 rebalance-check:
 	$(PY) -m benchmarks.fig_rebalance --check
+
+prefix-check:
+	$(PY) -m benchmarks.fig_prefix_cache --check
 
 examples-check:
 	$(PY) examples/quickstart.py
@@ -54,8 +60,8 @@ bench-smoke:
 	$(PY) benchmarks/bench_engine.py --smoke
 	$(PY) benchmarks/bench_engine.py --validate BENCH_engine.json
 
-ci: dev-deps test trace-check rebalance-check examples-check docs-check \
-    bench-smoke
+ci: dev-deps test trace-check rebalance-check prefix-check examples-check \
+    docs-check bench-smoke
 
 bench:
 	$(PY) -m benchmarks.run --fast

@@ -186,6 +186,24 @@ class PagedKVManager:
             parent = h
         return len(matched) * self.page_size, matched
 
+    def peek_prefix(self, token_ids: Sequence[int]) -> int:
+        """Length (in tokens) of the longest cached prefix, without side
+        effects: refcounts and the LRU order are untouched.  The router's
+        cache-affinity probe — safe to call on every candidate replica per
+        routing decision."""
+        if not self.enable_prefix_caching:
+            return 0
+        matched = 0
+        parent = 0
+        for i in range(0, len(token_ids) - self.page_size + 1, self.page_size):
+            chunk = tuple(token_ids[i : i + self.page_size])
+            h = hash_page(parent, chunk)
+            if h not in self._prefix_index:
+                break
+            matched += 1
+            parent = h
+        return matched * self.page_size
+
     def adopt_prefix(self, request_id: str, num_tokens: int, page_ids: List[int]) -> None:
         """Attach matched prefix pages as the head of a fresh block table."""
         assert request_id not in self._block_tables, "adopt before first allocate"

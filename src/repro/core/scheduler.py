@@ -102,6 +102,15 @@ class SchedulerStats:
     service_rate_alpha: float = 0.1
     _rate_clock: Optional[float] = None
     _rate_tokens: int = 0
+    # Prefix caching (DESIGN.md §13): admission probes the pool's prefix
+    # index for every first chunk; hits adopt the cached head and skip its
+    # prefill entirely.  `cached_prefill_tokens` is the per-tick series —
+    # the trace's optional `cached` field (schema 1.4) and the surface
+    # benchmarks/fig_prefix_cache.py plots.
+    prefix_lookups: int = 0
+    prefix_hits: int = 0
+    prefix_tokens_avoided: int = 0
+    cached_prefill_tokens: List[int] = field(default_factory=list)
 
     def note_retire(self, num_tokens: int, now: float) -> None:
         """Fold one batch completion into the service-rate EWMA.  Tokens
@@ -158,6 +167,7 @@ class PipelineScheduler:
         self.stats = SchedulerStats()
         self._last_prefill_budget = 0
         self._last_decode_budget = 0
+        self._last_cached_tokens = 0
         # Notified whenever a request loses its resident state (preemption or
         # batch abort) so the execution layer can release per-request
         # resources (state slots, caches) tied to residency.
@@ -226,6 +236,7 @@ class PipelineScheduler:
         self.stats.kv_free_rate.append(self.kv.kv_free_rate)
         self.stats.prefill_budgets.append(self._last_prefill_budget)
         self.stats.decode_budgets.append(self._last_decode_budget)
+        self.stats.cached_prefill_tokens.append(self._last_cached_tokens)
         return batch
 
     # ----------------------------------------------------------------- decode
@@ -330,6 +341,7 @@ class PipelineScheduler:
                 self.num_waiting_prefill_tokens, self.kv.kv_free_rate, self.cfg
             )
         self._last_prefill_budget = budget             # raw eq. 3 decision
+        self._last_cached_tokens = 0
         if budget <= 0:
             return []
 
@@ -358,15 +370,32 @@ class PipelineScheduler:
                 if self.kv.kv_free_rate <= self.cfg.kv_threshold:
                     break
             # prefix-cache reuse on first chunk
+            adopted = 0
             if req.num_prefilled == 0 and self.kv.enable_prefix_caching \
                     and not self.kv.has_request(req.request_id):
+                self.stats.prefix_lookups += 1
                 cached, pages = self.kv.match_prefix(req.effective_prompt[:-1])
                 if cached:
                     self.kv.adopt_prefix(req.request_id, cached, pages)
                     req.num_prefilled = cached
+                    adopted = cached
             took = self._take_prefill_chunk(req, budget, now)
             if took is None:
+                if adopted:
+                    # Release-on-stall: the chunk could not take even one
+                    # token (KV exhausted), so the request stays WAITING —
+                    # it must not pin the adopted head under the very KV
+                    # pressure that stalled it.  The pages return to the
+                    # evictable LRU still hashed, so a later admission
+                    # re-matches them for free.  Invariant restored: a
+                    # WAITING request never holds KV.
+                    self.kv.free(req.request_id)
+                    req.num_prefilled = 0
                 break
+            if adopted:
+                self.stats.prefix_hits += 1
+                self.stats.prefix_tokens_avoided += adopted
+                self._last_cached_tokens += adopted
             admitted.add(req.request_id)
             req.state = RequestState.PREFILLING
             if req.metrics.first_scheduled_time is None:
@@ -525,6 +554,16 @@ class PipelineScheduler:
         for req in self.waiting:
             if req.request_id == request_id:
                 self.waiting.remove(req)
+                # A WAITING request owns no migratable state: if it holds an
+                # adopted prefix-cache head, release it here (the pages stay
+                # hashed in the evictable LRU) and let the destination
+                # re-match against *its* cache at admission.  Without this
+                # the steal path strands the source block table and the
+                # destination's `adopt_request` rejects the orphaned
+                # `num_prefilled` count.
+                if self.kv.has_request(request_id):
+                    self.kv.free(request_id)
+                    req.num_prefilled = 0
                 return req
         return None
 
@@ -544,14 +583,17 @@ class PipelineScheduler:
             raise ValueError(
                 f"request {rid}: {req.num_prefilled} prefilled tokens but "
                 f"{resident} with resident KV — import_kv before adopt")
-        # Placement follows the drained state: a DECODING request keeps one
-        # KV slot unwritten (its next decode step consumes the newest
-        # sampled token), so progress counters alone cannot distinguish it
-        # from a nearly-done prefill.
+        # Placement follows the drained *state*, not progress counters: a
+        # DECODING request keeps one KV slot unwritten (its next decode step
+        # consumes the newest sampled token), so counters alone cannot
+        # distinguish it from a nearly-done prefill — and a WAITING request
+        # with an adopted prefix head has num_prefilled > 0 without ever
+        # having been admitted.  Only requests that were already admitted
+        # (PREFILLING mid-chunk) may bypass the UT guard and SLO-class
+        # admission order; everything else re-enters through `waiting`.
         if req.state is RequestState.DECODING:
             self.running_decode.append(req)
-        elif req.num_prefilled > 0:
-            req.state = RequestState.PREFILLING
+        elif req.state is RequestState.PREFILLING and req.num_prefilled > 0:
             self.running_prefill.append(req)
         else:
             req.state = RequestState.WAITING

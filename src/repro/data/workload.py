@@ -65,3 +65,104 @@ def sample_requests(
         prompt = rng.integers(0, vocab, int(li)).tolist()
         out.append((float(t), prompt, int(lo)))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Prefix-heavy workloads (cross-request KV reuse)
+#
+# At production scale most traffic shares prefixes: every request from an
+# application carries the same system prompt / few-shot template, and every
+# turn of a conversation re-sends the whole history.  These generators model
+# the two shapes so prefix caching and cache-aware routing have a measurable
+# workload (benchmarks/fig_prefix_cache.py).
+# ---------------------------------------------------------------------------
+
+def shared_prefix_requests(
+    num_requests: int,
+    request_rate: float,
+    *,
+    num_pools: int = 4,
+    prefix_len: int = 256,
+    mean_suffix: float = 64.0,
+    mean_output: float = 48.0,
+    sigma: float = 0.6,
+    max_suffix: int = 2048,
+    max_output: int = 512,
+    seed: int = 0,
+    vocab: int = 32000,
+) -> List[Tuple[float, List[int], int]]:
+    """Shared-system-prompt pools: each request draws one of `num_pools`
+    fixed `prefix_len`-token prefixes (an application's system prompt +
+    few-shot template) followed by a fresh log-normal suffix (the user
+    turn).  Poisson arrivals at `request_rate` req/s.
+
+    Every request after the first in a pool can reuse `prefix_len` tokens
+    of prefill if it lands on a replica that already served that pool —
+    exactly the affinity signal cache-aware routing exploits."""
+    rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(0, vocab, prefix_len).tolist()
+                for _ in range(num_pools)]
+    gaps = rng.exponential(1.0 / max(request_rate, 1e-9), num_requests)
+    arrivals = np.cumsum(gaps)
+    pools = rng.integers(0, num_pools, num_requests)
+    suf_lens = np.clip(_lognormal(rng, mean_suffix, sigma, num_requests),
+                       1, max_suffix).astype(int)
+    out_lens = np.clip(_lognormal(rng, mean_output, sigma, num_requests),
+                       1, max_output).astype(int)
+    out = []
+    for t, p, ls, lo in zip(arrivals, pools, suf_lens, out_lens):
+        suffix = rng.integers(0, vocab, int(ls)).tolist()
+        out.append((float(t), prefixes[int(p)] + suffix, int(lo)))
+    return out
+
+
+def multi_turn_requests(
+    num_conversations: int,
+    request_rate: float,
+    *,
+    mean_turns: float = 4.0,
+    max_turns: int = 12,
+    mean_user: float = 48.0,
+    mean_output: float = 64.0,
+    sigma: float = 0.6,
+    max_user: int = 1024,
+    max_output: int = 512,
+    think_time: float = 2.0,
+    seed: int = 0,
+    vocab: int = 32000,
+) -> List[Tuple[float, List[int], int]]:
+    """Multi-turn chat: each conversation is a sequence of turns where turn
+    k's prompt is the *entire* history so far (all previous user turns and
+    synthetic assistant replies) plus a fresh user message — so all but the
+    final user message is prefill a cache-holding replica skips.
+
+    Conversations open with Poisson arrivals at `request_rate`; follow-up
+    turns arrive an exponential `think_time` after the previous turn's
+    deadline (history length / reading speed is not modeled — think time
+    dominates).  The synthetic assistant reply appended to the history is
+    `output_len` tokens drawn from the same rng, standing in for whatever
+    the engine actually sampled (sim and engine runs stay workload-
+    identical: arrivals depend only on the seed, not on served outputs)."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / max(request_rate, 1e-9), num_conversations)
+    starts = np.cumsum(gaps)
+    out = []
+    for c in range(num_conversations):
+        turns = int(np.clip(rng.geometric(1.0 / max(mean_turns, 1.0)),
+                            1, max_turns))
+        history: List[int] = []
+        t = float(starts[c])
+        for _ in range(turns):
+            user_len = int(np.clip(_lognormal(rng, mean_user, sigma, 1)[0],
+                                   1, max_user))
+            out_len = int(np.clip(_lognormal(rng, mean_output, sigma, 1)[0],
+                                  1, max_output))
+            user = rng.integers(0, vocab, user_len).tolist()
+            prompt = history + user
+            out.append((t, prompt, out_len))
+            # synthetic assistant reply extends the next turn's history
+            reply = rng.integers(0, vocab, out_len).tolist()
+            history = prompt + reply
+            t += float(rng.exponential(think_time))
+    out.sort(key=lambda a: a[0])
+    return out

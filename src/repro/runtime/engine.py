@@ -520,6 +520,7 @@ class PipelineEngine:
         trace_path: Optional[str] = None,
         async_dispatch: bool = False,
         bucketed: bool = False,
+        enable_prefix_caching: bool = False,
     ) -> None:
         if trace_path is not None and async_dispatch:
             # the recorder writes each tick's exit tokens at execute time;
@@ -531,7 +532,8 @@ class PipelineEngine:
         self.dims = dims
         self.mesh = mesh
         self.params = params
-        self.kv = PagedKVManager(num_pages or dims.pages, dims.page)
+        self.kv = PagedKVManager(num_pages or dims.pages, dims.page,
+                                 enable_prefix_caching=enable_prefix_caching)
         self.scheduler = PipelineScheduler(
             throttle, self.kv,
             max_model_len=dims.page * max(dims.Bp, dims.Bd),

@@ -72,6 +72,14 @@ class BalanceWeights:
     decode_tokens: float = 128.0
     kv_pressure: float = 4.0
     kv_activation_margin: float = 4.0
+    # Prefill-token-equivalent credit per token of the candidate's prompt
+    # already cached on a replica (`ReplicaSnapshot.cached_prefix_tokens`,
+    # probed via the non-mutating `PagedKVManager.peek_prefix`).  At 1.0 a
+    # replica is charged only the *uncached* remainder of the prompt — the
+    # work it would actually do — so cache affinity and load balance trade
+    # in the same currency.  Zero disables cache-aware routing; the term is
+    # inert whenever prefix caching is off (probes return 0).
+    cache_affinity: float = 1.0
 
 
 @dataclass(frozen=True)
@@ -185,14 +193,27 @@ class ReplicaSnapshot:
     # the hook for class-aware placement (DESIGN.md §11).
     waiting_interactive: int = 0
     waiting_batch: int = 0
+    # Tokens of the candidate request's prompt whose KV is already cached
+    # here (longest hash-chained full-page prefix, non-mutating probe).
+    # 0 when the snapshot was taken without a candidate prompt or the
+    # replica has prefix caching disabled.
+    cached_prefix_tokens: int = 0
 
     @staticmethod
-    def of(replica) -> "ReplicaSnapshot":
+    def of(replica,
+           prompt: Optional[Sequence[int]] = None) -> "ReplicaSnapshot":
         sched = replica.scheduler
         pool = sched.kv.num_pages * sched.kv.page_size
         growth = remaining_decode_growth(sched)
         n_batch = sum(1 for r in sched.waiting
                       if r.sampling.slo_class == SLO_BATCH)
+        cached = 0
+        if prompt is not None and getattr(sched.kv, "enable_prefix_caching",
+                                          False):
+            # mirror the admission probe exactly (it matches the effective
+            # prompt minus the final token, which the first chunk must
+            # still consume to sample from)
+            cached = sched.kv.peek_prefix(list(prompt)[:-1])
         return ReplicaSnapshot(
             waiting_prefill_tokens=sched.num_waiting_prefill_tokens,
             running_decode=sched.num_running_decode,
@@ -202,6 +223,7 @@ class ReplicaSnapshot:
             service_rate=sched.stats.service_rate,
             waiting_interactive=len(sched.waiting) - n_batch,
             waiting_batch=n_batch,
+            cached_prefix_tokens=cached,
         )
 
 
@@ -209,8 +231,17 @@ def balance_score(snap: ReplicaSnapshot, prompt_tokens: int,
                   weights: BalanceWeights, capacity: float = 1.0) -> float:
     """Estimated completion burden of placing `prompt_tokens` on a replica:
     pending work (incl. the candidate request) per unit capacity, inflated
-    by proximity to the KV stall point.  Lower is better."""
-    load = (snap.waiting_prefill_tokens + prompt_tokens
+    by proximity to the KV stall point.  Lower is better.
+
+    Cache affinity: tokens of the candidate's prompt already cached on
+    this replica (`snap.cached_prefix_tokens`) are prefill work it will
+    never do — they are credited against the candidate's burden at
+    `weights.cache_affinity` per token (clamped so a cache hit can reduce
+    the candidate's own charge to zero, never below)."""
+    burden = prompt_tokens - min(
+        weights.cache_affinity * snap.cached_prefix_tokens,
+        float(prompt_tokens))
+    load = (snap.waiting_prefill_tokens + burden
             + weights.decode_tokens * snap.running_decode)
     activation = kv_activation(weights, snap.kv_threshold)
     free = snap.kv_free_rate
@@ -313,19 +344,29 @@ class ReplicaRouter:
             self._trace.close()
 
     # ---------------------------------------------------------------- routing
-    def scores(self, prompt_tokens: int = 0) -> List[float]:
-        return [balance_score(ReplicaSnapshot.of(r), prompt_tokens,
+    def scores(self, prompt_tokens: int = 0,
+               prompt: Optional[Sequence[int]] = None) -> List[float]:
+        """Per-replica balance scores for a candidate request.  Passing the
+        actual `prompt` token ids (not just the count) lets each snapshot
+        probe its replica's prefix cache (`peek_prefix`, non-mutating) and
+        apply the `cache_affinity` credit — cache-aware routing."""
+        if prompt is not None:
+            prompt_tokens = len(prompt)
+        return [balance_score(ReplicaSnapshot.of(r, prompt), prompt_tokens,
                               self.weights, c)
                 for r, c in zip(self.replicas, self.capacities)]
 
-    def select(self, prompt_tokens: int = 0) -> int:
+    def select(self, prompt_tokens: int = 0,
+               prompt: Optional[Sequence[int]] = None) -> int:
         """Index of the replica the next request should land on."""
+        if prompt is not None:
+            prompt_tokens = len(prompt)
         scores: Optional[List[float]] = None
         if self.policy is RoutingPolicy.ROUND_ROBIN:
             i = self._rr_next
             self._rr_next = (self._rr_next + 1) % len(self.replicas)
         else:
-            scores = self.scores(prompt_tokens)
+            scores = self.scores(prompt_tokens, prompt)
             i = int(np.argmin(scores))
         self.routed_counts[i] += 1
         if self._trace is not None:
@@ -663,7 +704,7 @@ class ReplicaRouter:
     def add_request(self, prompt: Sequence[int],
                     sampling: Optional[SamplingParams] = None,
                     request_id: Optional[str] = None, **kw) -> Request:
-        i = self.select(len(prompt))
+        i = self.select(len(prompt), prompt=prompt)
         return self.replicas[i].add_request(prompt, sampling, request_id,
                                             **kw)
 
@@ -900,7 +941,7 @@ class SimCluster:
             if t > until:
                 break
             self._advance_to(t)
-            i = self.router.select(len(prompt))
+            i = self.router.select(len(prompt), prompt=prompt)
             self.sims[i].inject_request(t, prompt, out_len)
         pol = self.router.rebalance_policy
         if pol is None:

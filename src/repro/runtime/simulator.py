@@ -600,6 +600,7 @@ def record_sim_trace(
     straggler_factor: float = 1.0,
     fail_at: Optional[float] = None,
     downtime: float = 1.0,
+    enable_prefix_caching: bool = False,
 ) -> PipelineSimulator:
     """Run a traced simulation of `arrivals` — the canonical way to mint a
     golden trace (tests/fixtures/traces/make_fixtures.py) or a calibration
@@ -610,7 +611,8 @@ def record_sim_trace(
 
     cfg = get_config(arch)
     th = ThrottleConfig(pipeline_depth=pp, policy=policy)
-    kv = PagedKVManager(num_pages=pages, page_size=page_size)
+    kv = PagedKVManager(num_pages=pages, page_size=page_size,
+                        enable_prefix_caching=enable_prefix_caching)
     sched = PipelineScheduler(th, kv, max_model_len=pages * page_size)
     sim = PipelineSimulator(sched, pp, cost_model_for(cfg, pp=pp), runtime,
                             straggler_stage=straggler_stage,

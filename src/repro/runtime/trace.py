@@ -56,6 +56,7 @@ CLI (used by `make trace-check`):
 
 from __future__ import annotations
 
+import itertools
 import json
 import threading
 from collections import deque
@@ -78,12 +79,16 @@ from repro.runtime.core import ExecResult, ExecutionBackend, TickLoop
 SCHEMA = "gllm-trace"
 ROUTE_SCHEMA = "gllm-route"
 SCHEMA_MAJOR = 1
-SCHEMA_MINOR = 3    # 1.1: "abort" record kind; 1.2: req/migrate carry
+SCHEMA_MINOR = 4    # 1.1: "abort" record kind; 1.2: req/migrate carry
                     # per-request priority + SLO class; 1.3: ticks may carry
                     # "host_s" (per-tick host overhead — engine measures it,
                     # sim models it, RuntimeModel.fit_from_trace calibrates
                     # against it); absent on backends that don't report it,
-                    # so 1.2 traces remain byte-identical
+                    # so 1.2 traces remain byte-identical; 1.4: ticks carry
+                    # "cached" (prefill tokens skipped via adopted cached
+                    # prefixes this tick) iff the scheduler has prefix
+                    # caching enabled — pre-1.4 traces (and all recordings
+                    # with caching off) keep their exact bytes
 
 
 class TraceSchemaError(ValueError):
@@ -218,16 +223,22 @@ class Trace:
 
 # Canonical tick field order, exactly as `TraceRecorder.execute` writes it —
 # compaction and expansion both key off this so the round trip is
-# byte-identical under `dumps_record`.  "host_s" (schema 1.3) is optional:
-# backends that report no host overhead omit it on every tick, so a trace is
-# uniformly with or without it (never mixed) and pre-1.3 streams keep their
-# exact bytes.
+# byte-identical under `dumps_record`.  Optional fields ("cached", schema
+# 1.4; "host_s", schema 1.3) are present uniformly or omitted trace-wide
+# (never mixed): "host_s" appears iff the backend reports host overhead,
+# "cached" iff the scheduler has prefix caching enabled — so earlier-schema
+# streams keep their exact bytes.
 TICK_FIELDS = ("now", "batch", "prefill_budget", "decode_budget", "kv_free",
-               "wp", "rd", "preempts", "stage_times", "host_s", "exit")
-_OPTIONAL_TICK_FIELDS = ("host_s",)
+               "wp", "rd", "preempts", "stage_times", "cached", "host_s",
+               "exit")
+_OPTIONAL_TICK_FIELDS = ("cached", "host_s")
 _CANONICAL_TICK_KEYS = ["kind", "tick"] + list(TICK_FIELDS)
-_CANONICAL_TICK_KEYS_LEGACY = [
-    k for k in _CANONICAL_TICK_KEYS if k not in _OPTIONAL_TICK_FIELDS]
+# Every omit-in-place subset of the optional fields is a valid canonical
+# layout (a trace may carry any combination, each uniformly).
+_VALID_TICK_KEY_LISTS = [
+    [k for k in _CANONICAL_TICK_KEYS if k not in omitted]
+    for r in range(len(_OPTIONAL_TICK_FIELDS) + 1)
+    for omitted in itertools.combinations(_OPTIONAL_TICK_FIELDS, r)]
 
 
 STEADY_DECODE = "+1"    # batch marker: the cohort's previous batch, +1 step
@@ -288,8 +299,7 @@ def compact_records(records: Sequence[Dict[str, Any]]
         if rec.get("kind") != "tick":
             out.append(rec)
             continue
-        if list(rec) not in (_CANONICAL_TICK_KEYS,
-                             _CANONICAL_TICK_KEYS_LEGACY):
+        if list(rec) not in _VALID_TICK_KEY_LISTS:
             raise TraceSchemaError(
                 f"tick {rec.get('tick')} is not in canonical field order; "
                 "cannot delta-encode losslessly")
@@ -570,6 +580,8 @@ class TraceRecorder(ExecutionBackend):
             "preempts": preempts - self._last_preempts,
             "stage_times": result.stage_times,
         }
+        if sched.kv.enable_prefix_caching:   # schema 1.4, optional
+            rec["cached"] = sched.stats.cached_prefill_tokens[-1]
         if result.host_s is not None:        # schema 1.3, optional per-backend
             rec["host_s"] = result.host_s
         rec["exit"] = exit_rec
@@ -709,6 +721,9 @@ class TraceBackend(ExecutionBackend):
         cmp("wp", rec["wp"], sched.num_waiting_prefill_tokens)
         cmp("rd", rec["rd"], sched.num_running_decode)
         cmp("preempts", rec["preempts"], preempts - self._last_preempts)
+        if "cached" in rec:                  # schema 1.4: prefix-cache adoption
+            cmp("cached", rec["cached"],
+                sched.stats.cached_prefill_tokens[-1])
         want_exit = rec["exit"]
         if (want_exit is None) != (exiting_id is None):
             cmp("exit", want_exit,

@@ -113,7 +113,9 @@ def _build_engine(spec: ServeSpec) -> Tuple[Any, Any]:
         engines = [PipelineEngine(cfg, dims, params, mesh, th,
                                   trace_path=_replica_trace(record, i, n),
                                   async_dispatch=es.dispatch == "async",
-                                  bucketed=es.bucketed)
+                                  bucketed=es.bucketed,
+                                  enable_prefix_caching=
+                                  es.enable_prefix_caching)
                    for i in range(n)]
     if spec.cluster is None and n == 1:
         return engines[0], cfg
@@ -128,11 +130,15 @@ def _replica_trace(record: Optional[str], i: int, n: int) -> Optional[str]:
 
 def _wrap_router(spec: ServeSpec, replicas: List[Any],
                  record: Optional[str]):
-    from repro.runtime.router import ReplicaRouter
+    from repro.runtime.router import BalanceWeights, ReplicaRouter
     cl = spec.cluster
+    weights = None
+    if cl.cache_affinity is not None:
+        weights = BalanceWeights(cache_affinity=cl.cache_affinity)
     return ReplicaRouter(
         replicas,
         policy=cl.route,
+        weights=weights,
         rebalance=cl.rebalance,
         capacities=cl.capacities,
         trace_path=None if record is None else f"{record}.router",
@@ -167,7 +173,8 @@ def _build_sim(spec: ServeSpec) -> Tuple[Any, Any]:
         th = _throttle_config(spec, ss.pp, reduced=False)
         runtime = (RuntimeModel.vllm_like() if ss.runtime == "vllm"
                    else RuntimeModel.gllm())
-        kv = PagedKVManager(num_pages=ss.pages, page_size=ss.page_size)
+        kv = PagedKVManager(num_pages=ss.pages, page_size=ss.page_size,
+                            enable_prefix_caching=ss.enable_prefix_caching)
         sched = PipelineScheduler(th, kv,
                                   max_model_len=ss.pages * ss.page_size)
         return PipelineSimulator(

@@ -110,6 +110,12 @@ class ReplicaStats:
     # absent classes omitted) — the signal an operator reads to tell "loaded
     # with latency-sensitive work" from "deep but all-batch" (docs/operations.md)
     waiting_by_class: Dict[str, int] = field(default_factory=dict)
+    # Prefix-cache effectiveness (all zero with caching disabled):
+    # admission-time lookups, hits (lookups that adopted a cached head),
+    # and prefill tokens skipped because their KV was already resident.
+    prefix_lookups: int = 0
+    prefix_hits: int = 0
+    prefix_tokens_avoided: int = 0
 
 
 @dataclass
@@ -431,6 +437,9 @@ class LLMServer:
                 running_decode=sched.num_running_decode,
                 preemptions=sched.stats.preemptions,
                 waiting_by_class=by_class,
+                prefix_lookups=sched.stats.prefix_lookups,
+                prefix_hits=sched.stats.prefix_hits,
+                prefix_tokens_avoided=sched.stats.prefix_tokens_avoided,
             ))
         router = self.router
         if router is not None:

@@ -54,6 +54,10 @@ class EngineSpec:
     reduced_overrides: Optional[Dict[str, Any]] = None
     dispatch: str = "sync"          # sync | async (double-buffered ticks)
     bucketed: bool = False
+    # Hash-chained full-page prefix caching (DESIGN.md §13): admission
+    # adopts the longest cached prefix of each new request, skipping its
+    # prefill; freed full pages stay matchable (LRU-evicted on pressure).
+    enable_prefix_caching: bool = False
 
     def __post_init__(self) -> None:
         if self.dispatch not in ("sync", "async"):
@@ -74,6 +78,9 @@ class SimSpec:
     straggler_stage: Optional[int] = None
     straggler_factor: float = 1.0
     chips_per_stage: int = 1
+    # Per-replica prefix caching (overridable via ClusterSpec.sim_overrides,
+    # so a cluster can mix caching and non-caching replicas).
+    enable_prefix_caching: bool = False
 
 
 @dataclass(frozen=True)
@@ -96,6 +103,11 @@ class ClusterSpec:
     rebalance: Optional[RebalancePolicy] = None
     capacities: Optional[Tuple[Union[ReplicaCapacity, float], ...]] = None
     sim_overrides: Optional[Tuple[Optional[Dict[str, Any]], ...]] = None
+    # Cache-aware routing strength: prefill-token credit per cached prompt
+    # token when scoring a candidate replica (BalanceWeights.cache_affinity).
+    # None keeps the router default (1.0); 0.0 routes load-only.  Inert
+    # unless prefix caching is enabled on the replicas.
+    cache_affinity: Optional[float] = None
 
     def __post_init__(self) -> None:
         if self.replicas < 1:

@@ -124,7 +124,8 @@ def test_stats_snapshot(frontend):
     rep = stats["replicas"][0]
     for key in ("ticks", "tokens_retired", "service_rate", "kv_free_rate",
                 "waiting", "running_decode", "preemptions",
-                "waiting_by_class"):
+                "waiting_by_class", "prefix_lookups", "prefix_hits",
+                "prefix_tokens_avoided"):
         assert key in rep
     assert stats["tokens_retired"] >= 6
     assert rep["ticks"] > 0

@@ -1,0 +1,601 @@
+"""Cross-request prefix caching and its interaction with migration
+(DESIGN.md §13).
+
+Four layers:
+
+  * pool — `peek_prefix` is the router's non-mutating probe: same answer
+    as `match_prefix`, zero side effects on refcounts or the LRU;
+  * scheduler — admission adopts cached heads (hit/avoided counters), and
+    the invariant *a WAITING request never holds KV* is enforced on both
+    paths that used to violate it: adopt-then-stall under KV pressure
+    (release-on-stall) and drain-for-migration (release-on-drain).  The
+    latter is the regression test for the steal-of-adopted-prefix crash:
+    before the fix, draining a waiting request with an adopted head
+    stranded the source block table and the destination's
+    `adopt_request` raised ValueError;
+  * control plane — `migrate_request` on such a request degrades to a
+    plain steal (no KV shipped, re-match at the destination), and a
+    cache-aware `select` routes a shared-prefix request to the replica
+    that already holds its head;
+  * property — random interleavings of adopt/freeze with abort,
+    preemption, steal and migrate keep page accounting balanced on every
+    replica after every single operation.
+
+The engine-level bit-identity test (a prefix-adopted request's tokens
+equal the dense reference, with no steady-state recompile) lives in
+tests/test_engine_prefix.py because it needs jax.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:      # pragma: no cover - exercised on minimal installs
+    HAS_HYPOTHESIS = False
+
+from repro.configs import get_config
+from repro.core import (
+    PagedKVManager,
+    PipelineScheduler,
+    PrefillPolicy,
+    Request,
+    RequestState,
+    SamplingParams,
+    ThrottleConfig,
+)
+from repro.data.workload import multi_turn_requests, shared_prefix_requests
+from repro.runtime.router import (
+    BalanceWeights,
+    RebalancePolicy,
+    ReplicaRouter,
+    ReplicaSnapshot,
+    SimCluster,
+    balance_score,
+)
+from repro.runtime.simulator import PipelineSimulator, cost_model_for
+
+CFG = get_config("qwen2.5-14b")
+
+
+def make_sched(pages=64, page_size=4, *, caching=True, **kw):
+    th = ThrottleConfig(pipeline_depth=3, policy=PrefillPolicy.GLLM)
+    kv = PagedKVManager(num_pages=pages, page_size=page_size,
+                        enable_prefix_caching=caching)
+    return PipelineScheduler(th, kv, max_model_len=pages * page_size, **kw)
+
+
+def _run_ticks(sched, n, clock_start=0.0):
+    now = clock_start
+    for _ in range(n):
+        batch = sched.schedule(now)
+        toks = [7] * sum(1 for s in batch.seqs if s.produces_token)
+        sched.complete(batch.batch_id, toks, now)
+        now += 1.0
+    return now
+
+
+def _warm(sched, prompt, rid="warm", max_new=1):
+    """Run one request to completion so its full prompt pages are frozen
+    into the prefix index (and, being finished, sit in the evictable LRU)."""
+    req = Request(rid, list(prompt), SamplingParams(max_new_tokens=max_new))
+    sched.add_request(req)
+    _run_ticks(sched, max_new + 8)
+    assert req.is_finished
+    return req
+
+
+# ---------------------------------------------------------------------------
+# Pool: peek_prefix
+# ---------------------------------------------------------------------------
+
+class TestPeekPrefix:
+    def test_peek_matches_match_without_side_effects(self):
+        a = make_sched()
+        prompt = list(range(10))                     # 2 full pages + 2 loose
+        _warm(a, prompt)
+        free_before = a.kv.num_free_pages
+        assert a.kv.peek_prefix(prompt) == 8
+        assert a.kv.peek_prefix(prompt) == 8         # idempotent
+        assert a.kv.num_free_pages == free_before    # nothing pinned
+        # match_prefix still finds the same pages afterwards: peek bumped
+        # no refcounts and evicted nothing
+        cached, pages = a.kv.match_prefix(prompt)
+        assert cached == 8 and len(pages) == 2
+        a.kv.release_pages(pages)
+        a.kv.check_invariants()
+
+    def test_peek_partial_chain_and_miss(self):
+        a = make_sched()
+        prompt = list(range(12))                     # 3 full pages
+        _warm(a, prompt)
+        assert a.kv.peek_prefix(prompt[:7]) == 4     # one full page only
+        assert a.kv.peek_prefix([99] * 12) == 0      # diverges at page 0
+        # divergence mid-chain: first page matches, second does not
+        assert a.kv.peek_prefix(prompt[:4] + [99] * 8) == 4
+
+    def test_peek_disabled_is_zero(self):
+        a = make_sched(caching=False)
+        _warm(a, list(range(12)))
+        assert a.kv.peek_prefix(list(range(12))) == 0
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: admission adoption + counters
+# ---------------------------------------------------------------------------
+
+class TestAdmissionAdoption:
+    def test_second_request_skips_cached_prefill(self):
+        a = make_sched()
+        shared = list(range(16))                     # 4 full pages
+        _warm(a, shared)
+        req = Request("r2", shared + [90, 91, 92, 93, 94],
+                      SamplingParams(max_new_tokens=4))
+        a.add_request(req)
+        _run_ticks(a, 12)
+        assert req.is_finished and req.num_output_tokens == 4
+        assert a.stats.prefix_lookups >= 1
+        assert a.stats.prefix_hits == 1
+        assert a.stats.prefix_tokens_avoided == 16
+        # the per-tick series (the trace's optional `cached` field) carries
+        # the adoption on exactly one tick
+        assert sum(a.stats.cached_prefill_tokens) == 16
+        a.check_invariants()
+
+    def test_identical_prompt_leaves_final_token_uncached(self):
+        """The probe is effective_prompt[:-1]: the first chunk must still
+        consume at least the final prompt token to sample from."""
+        a = make_sched()
+        shared = list(range(16))
+        _warm(a, shared)
+        req = Request("r2", list(shared), SamplingParams(max_new_tokens=2))
+        a.add_request(req)
+        _run_ticks(a, 10)
+        assert req.is_finished
+        assert a.stats.prefix_tokens_avoided == 12   # 3 of 4 pages
+        a.check_invariants()
+
+    def test_caching_off_never_probes(self):
+        a = make_sched(caching=False)
+        _warm(a, list(range(16)))
+        req = Request("r2", list(range(16)), SamplingParams(max_new_tokens=2))
+        a.add_request(req)
+        _run_ticks(a, 10)
+        assert req.is_finished
+        assert a.stats.prefix_lookups == 0
+        assert a.stats.prefix_hits == 0
+
+    def test_release_on_stall_under_kv_pressure(self):
+        """Adopt-then-stall: the chunk allocator has no headroom, so the
+        request stays WAITING — and must not keep pinning the adopted head
+        under the very KV pressure that stalled it."""
+        a = make_sched(pages=6, page_size=4)
+        shared = list(range(8))                      # 2 full pages
+        _warm(a, shared)                             # -> evictable, hashed
+        # pin every plain-free page with a resident decode
+        pin = Request("pin", list(range(100, 113)),  # 13 tokens = 4 pages
+                      SamplingParams(max_new_tokens=3))
+        a.add_request(pin)
+        _run_ticks(a, 2)
+        assert pin.state is RequestState.DECODING
+        assert a.kv.num_free_pages == 2              # just the cached head
+        hot = Request("hot", shared + [90, 91, 92, 93],
+                      SamplingParams(max_new_tokens=2))
+        a.add_request(hot)
+        lookups_before = a.stats.prefix_lookups      # warm/pin probed too
+        batch = a.schedule(10.0)
+        toks = [7] * sum(1 for s in batch.seqs if s.produces_token)
+        a.complete(batch.batch_id, toks, 10.0)
+        # admission adopted the 8-token head, found no page for the chunk,
+        # and released the head instead of stranding it
+        assert a.stats.prefix_lookups == lookups_before + 1
+        assert a.stats.prefix_hits == 0
+        assert hot in a.waiting
+        assert not a.kv.has_request("hot")
+        assert hot.num_prefilled == 0
+        assert a.stats.prefix_tokens_avoided == 0
+        # pin finished in that same tick's complete(): all 6 pages are free
+        # or evictable again — the released head among them, still hashed
+        assert a.kv.num_free_pages == 6
+        a.check_invariants()
+        # pressure is gone: hot re-matches the head for free
+        _run_ticks(a, 20, clock_start=11.0)
+        assert hot.is_finished
+        assert a.stats.prefix_hits == 1
+        a.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Regression: stealing a waiting request with an adopted prefix head
+# ---------------------------------------------------------------------------
+
+class TestStealOfAdoptedPrefix:
+    def _waiting_with_adopted_head(self, a, shared):
+        """Construct the pre-fix hazard state directly: a WAITING request
+        whose block table is an adopted prefix head (what admission creates
+        between match_prefix and its first chunk)."""
+        victim = Request("victim", shared + [90, 91, 92, 93, 94],
+                         SamplingParams(max_new_tokens=3))
+        cached, pages = a.kv.match_prefix(victim.effective_prompt[:-1])
+        assert cached == len(shared)
+        a.kv.adopt_prefix("victim", cached, pages)
+        victim.num_prefilled = cached
+        a.waiting.append(victim)
+        return victim
+
+    def test_drain_releases_head_and_destination_admits(self):
+        a, b = make_sched(), make_sched()
+        shared = list(range(16))
+        _warm(a, shared)
+        free_all = a.kv.num_free_pages
+        victim = self._waiting_with_adopted_head(a, shared)
+
+        drained = a.drain_request("victim")
+        assert drained is victim
+        # before the fix: the block table stayed resident on A (page leak)…
+        assert not a.kv.has_request("victim")
+        assert a.kv.num_free_pages == free_all
+        assert victim.num_prefilled == 0
+        # …and this raised ValueError (0 resident tokens vs num_prefilled)
+        b.adopt_request(drained)
+        assert victim in b.waiting
+        assert victim not in b.running_prefill
+        a.check_invariants()
+        b.check_invariants()
+        # the destination re-matches against *its* cache at admission: B is
+        # cold, so the request simply prefills from scratch and completes
+        _run_ticks(b, 20)
+        assert victim.is_finished
+        assert b.stats.prefix_hits == 0
+
+    def test_steal_candidates_still_skip_kv_holders(self):
+        """Defense in depth: the policy layer keeps preferring requests with
+        no resident KV, so adopted heads are stolen only as a last resort."""
+        a = make_sched()
+        shared = list(range(16))
+        _warm(a, shared)
+        victim = self._waiting_with_adopted_head(a, shared)
+        clean = Request("clean", [1] * 8, SamplingParams(max_new_tokens=2))
+        a.add_request(clean)
+        cands = a.steal_candidates()
+        assert clean in cands and victim not in cands
+
+    def test_migrate_request_degrades_to_steal(self):
+        """Control-plane path: `migrate_request` on a waiting request with an
+        adopted head ships no KV (release-on-drain makes it a plain steal)
+        and the destination queues it through normal admission — not
+        `running_prefill`, which would bypass the UT guard."""
+        pp = 2
+        cost = cost_model_for(CFG, pp=pp)
+        sims = [PipelineSimulator(make_sched(pages=256, page_size=4), pp, cost)
+                for _ in range(2)]
+        router = ReplicaRouter(sims, policy="balanced")
+        src = sims[0].sched
+        shared = list(range(16))
+        _warm(src, shared)
+        victim = self._waiting_with_adopted_head(src, shared)
+
+        assert router.migrate_request("victim", 0, 1)
+        assert router.rebalance_stats.stolen == 1
+        assert router.rebalance_stats.migrated == 0  # no KV crossed the wire
+        assert not src.kv.has_request("victim")
+        dst = sims[1].sched
+        assert victim in dst.waiting and victim not in dst.running_prefill
+        assert victim.num_prefilled == 0
+        src.check_invariants()
+        dst.check_invariants()
+        sims[1].drain()
+        assert victim.is_finished
+
+    def test_adopt_mid_prefill_keeps_running_prefill_lane(self):
+        """A genuinely mid-prefill drain (state PREFILLING, KV resident)
+        still resumes in running_prefill — placement follows state, and only
+        never-admitted requests re-enter through `waiting`."""
+        a = make_sched(max_chunk_tokens=8)
+        b = make_sched(max_chunk_tokens=8)
+        req = Request("x", list(range(32)), SamplingParams(max_new_tokens=2))
+        a.add_request(req)
+        _run_ticks(a, 1)
+        assert req in a.running_prefill
+        assert req.state is RequestState.PREFILLING
+        assert 0 < req.num_prefilled < 32
+        drained = a.drain_request("x")
+        export = a.kv.export_kv("x")
+        a.kv.free("x")
+        b.kv.import_kv(export)
+        b.adopt_request(drained)
+        assert req in b.running_prefill and req not in b.waiting
+        a.check_invariants()
+        b.check_invariants()
+        _run_ticks(b, 20)
+        assert req.is_finished
+
+
+# ---------------------------------------------------------------------------
+# Cache-aware routing
+# ---------------------------------------------------------------------------
+
+class TestCacheAwareRouting:
+    def test_balance_score_credits_cached_tokens(self):
+        w = BalanceWeights(decode_tokens=0.0)
+        cold = ReplicaSnapshot(waiting_prefill_tokens=0, running_decode=0,
+                               kv_free_rate=1.0)
+        hot = ReplicaSnapshot(waiting_prefill_tokens=0, running_decode=0,
+                              kv_free_rate=1.0, cached_prefix_tokens=96)
+        assert balance_score(hot, 128, w) < balance_score(cold, 128, w)
+        # the credit is clamped at the candidate's own charge: a huge cache
+        # hit cannot make the replica look *negatively* loaded
+        huge = ReplicaSnapshot(waiting_prefill_tokens=10, running_decode=0,
+                               kv_free_rate=1.0, cached_prefix_tokens=10_000)
+        assert balance_score(huge, 128, w) == pytest.approx(10.0)
+        # cache_affinity=0 disables the term entirely
+        w0 = BalanceWeights(decode_tokens=0.0, cache_affinity=0.0)
+        assert balance_score(hot, 128, w0) == balance_score(cold, 128, w0)
+
+    def test_select_prefers_replica_holding_the_prefix(self):
+        pp = 2
+        cost = cost_model_for(CFG, pp=pp)
+        sims = [PipelineSimulator(make_sched(pages=256, page_size=4), pp,
+                                  cost) for _ in range(2)]
+        shared = list(range(32))
+        _warm(sims[1].sched, shared)                 # only replica 1 is warm
+        prompt = shared + [90, 91, 92, 93]
+        router = ReplicaRouter(sims, policy="balanced")
+        assert router.select(prompt=prompt) == 1
+        # without the prompt there is no probe: the tie falls to replica 0
+        assert router.select(len(prompt)) == 0
+        # load-only weights ignore the cache and break the tie the same way
+        blind = ReplicaRouter(sims, policy="balanced",
+                              weights=BalanceWeights(cache_affinity=0.0))
+        assert blind.select(prompt=prompt) == 0
+
+    def test_snapshot_probe_mirrors_admission(self):
+        pp = 2
+        sim = PipelineSimulator(make_sched(pages=256, page_size=4), pp,
+                                cost_model_for(CFG, pp=pp))
+        shared = list(range(16))
+        _warm(sim.sched, shared)
+        # identical re-ask: the probe drops the final token, like admission
+        snap = ReplicaSnapshot.of(sim, prompt=list(shared))
+        assert snap.cached_prefix_tokens == 12
+        free_before = sim.sched.kv.num_free_pages
+        ReplicaSnapshot.of(sim, prompt=shared + [9, 9, 9])
+        assert sim.sched.kv.num_free_pages == free_before  # non-mutating
+
+    def test_cluster_end_to_end_avoids_prefill_and_stays_sound(self):
+        """Cache-aware routing on a 2-replica cluster with a rebalancing
+        control plane: every request completes, pages balance, and the
+        pooled-prefix workload actually reuses cached heads."""
+        pp = 2
+        cost = cost_model_for(CFG, pp=pp)
+        sims = [PipelineSimulator(make_sched(pages=1024, page_size=8), pp,
+                                  cost) for _ in range(2)]
+        router = ReplicaRouter(sims, policy="balanced",
+                               rebalance=RebalancePolicy())
+        cluster = SimCluster(sims, router)
+        arrivals = shared_prefix_requests(80, 40.0, num_pools=4,
+                                          prefix_len=64, seed=3)
+        finished = cluster.run(arrivals)
+        assert len(finished) == 80
+        avoided = sum(s.sched.stats.prefix_tokens_avoided for s in sims)
+        assert avoided > 0
+        for sim in sims:
+            sim.sched.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Simulator billing: cached tokens are prefill the replica never does
+# ---------------------------------------------------------------------------
+
+class TestSimBilling:
+    def _run(self, caching):
+        pp = 2
+        sched = make_sched(pages=2048, page_size=8, caching=caching)
+        sim = PipelineSimulator(sched, pp, cost_model_for(CFG, pp=pp))
+        sim.add_workload(shared_prefix_requests(
+            60, 200.0, num_pools=2, prefix_len=512, mean_suffix=32.0,
+            seed=11))
+        sim.run()
+        assert len(sim.metrics.finished) == 60
+        sched.check_invariants()
+        return sim
+
+    def test_caching_shortens_the_run(self):
+        cold = self._run(caching=False)
+        warm = self._run(caching=True)
+        assert cold.sched.stats.prefix_tokens_avoided == 0
+        assert warm.sched.stats.prefix_tokens_avoided > 0
+        # avoided prefill is avoided virtual time: same workload, same cost
+        # model, strictly earlier makespan
+        assert warm.backend.time < cold.backend.time
+
+
+# ---------------------------------------------------------------------------
+# Workload generators
+# ---------------------------------------------------------------------------
+
+class TestPrefixWorkloads:
+    def test_shared_prefix_pools_share_heads(self):
+        reqs = shared_prefix_requests(50, 10.0, num_pools=3, prefix_len=64,
+                                      seed=5)
+        assert len(reqs) == 50
+        heads = {tuple(p[:64]) for _, p, _ in reqs}
+        assert len(heads) == 3
+        times = [t for t, _, _ in reqs]
+        assert times == sorted(times)
+        assert all(len(p) > 64 and o >= 1 for _, p, o in reqs)
+
+    def test_multi_turn_histories_nest(self):
+        reqs = multi_turn_requests(12, 5.0, seed=7)
+        assert len(reqs) >= 12
+        times = [t for t, _, _ in reqs]
+        assert times == sorted(times)
+        # group turns by conversation via strict prefix nesting: some
+        # conversation has >1 turn, and each later turn extends an earlier
+        # prompt (that is what makes the workload prefix-heavy)
+        prompts = [tuple(p) for _, p, _ in reqs]
+        nested = sum(1 for i, p in enumerate(prompts)
+                     for q in prompts[:i] if p[:len(q)] == q and len(p) > len(q))
+        assert nested > 0
+
+    def test_generators_are_deterministic(self):
+        assert shared_prefix_requests(20, 4.0, seed=9) == \
+            shared_prefix_requests(20, 4.0, seed=9)
+        assert multi_turn_requests(6, 4.0, seed=9) == \
+            multi_turn_requests(6, 4.0, seed=9)
+
+
+# ---------------------------------------------------------------------------
+# Trace schema 1.4: the optional per-tick `cached` field
+# ---------------------------------------------------------------------------
+
+class TestTraceSchema14:
+    def _record(self, caching):
+        import io
+        from repro.runtime.simulator import record_sim_trace
+        sink = io.StringIO()
+        arrivals = shared_prefix_requests(12, 50.0, num_pools=2,
+                                          prefix_len=64, seed=2)
+        sim = record_sim_trace(sink, arrivals, pp=2, pages=1024, page_size=8,
+                               enable_prefix_caching=caching)
+        return sim, sink.getvalue()
+
+    def test_cached_recorded_and_strict_replay_is_bit_identical(self):
+        from repro.runtime.trace import Trace, replay_trace
+        sim, text = self._record(caching=True)
+        assert sim.sched.stats.prefix_tokens_avoided > 0
+        trace = Trace.loads(text)
+        assert tuple(trace.header["version"]) == (1, 4)
+        # present on every tick (uniformly trace-wide), and the series sums
+        # to the scheduler's adoption counter
+        assert all("cached" in r for r in trace.ticks)
+        assert sum(r["cached"] for r in trace.ticks) \
+            == sim.sched.stats.prefix_tokens_avoided
+        report = replay_trace(trace, record=True)
+        assert report.recorded.dumps() == text
+
+    def test_cached_omitted_uniformly_when_caching_off(self):
+        from repro.runtime.trace import Trace
+        _, text = self._record(caching=False)
+        trace = Trace.loads(text)
+        assert all("cached" not in r for r in trace.ticks)
+
+    def test_divergent_cached_value_fails_strict_replay(self):
+        import copy
+        from repro.runtime.trace import Trace, TraceDivergence, replay_trace
+        _, text = self._record(caching=True)
+        trace = Trace.loads(text)
+        bad = Trace(copy.deepcopy(trace.header), copy.deepcopy(trace.records))
+        rec = next(r for r in bad.records
+                   if r["kind"] == "tick" and r.get("cached"))
+        rec["cached"] += 8
+        with pytest.raises(TraceDivergence) as ei:
+            replay_trace(bad)
+        assert any(f == "cached" for f, _, _ in ei.value.diffs)
+
+    def test_compaction_round_trips_cached(self):
+        import json
+        from repro.runtime.trace import (compact_records, dumps_record,
+                                         expand_records)
+        _, text = self._record(caching=True)
+        records = [json.loads(line) for line in text.splitlines() if line]
+        out = [dumps_record(r)
+               for r in expand_records(compact_records(records))]
+        assert out == [dumps_record(r) for r in records]
+
+
+# ---------------------------------------------------------------------------
+# Property: interleaved prefix ops keep every pool balanced
+# ---------------------------------------------------------------------------
+
+if HAS_HYPOTHESIS:
+    class TestInterleavedOpsProperty:
+        @given(data=st.data())
+        @settings(max_examples=60, deadline=None)
+        def test_invariants_after_every_operation(self, data):
+            """Random interleavings of admission (with prefix adoption and
+            freezing), ticking, abort, waiting-steal and decode-migration
+            across two cache-enabled replicas: page accounting balances on
+            both after *every* operation, no request is ever resident on two
+            replicas, and everything eventually finishes."""
+            scheds = [make_sched(pages=48, page_size=4) for _ in range(2)]
+            clocks = [0.0, 0.0]
+            pools = [[p * 100 + j for j in range(8)] for p in range(3)]
+            reqs = []
+
+            def tick(i):
+                batch = scheds[i].schedule(clocks[i])
+                toks = [7] * sum(1 for s in batch.seqs if s.produces_token)
+                scheds[i].complete(batch.batch_id, toks, clocks[i])
+                clocks[i] += 1.0
+
+            n_ops = data.draw(st.integers(8, 30), label="n_ops")
+            for step in range(n_ops):
+                op = data.draw(st.sampled_from(
+                    ["add", "tick", "tick", "abort", "steal", "migrate"]),
+                    label=f"op{step}")
+                if op == "add" and len(reqs) < 10:
+                    i = data.draw(st.integers(0, 1))
+                    head = pools[data.draw(st.integers(0, 2))]
+                    tail_len = data.draw(st.integers(1, 12))
+                    r = Request(f"q{len(reqs)}",
+                                head + [7000 + len(reqs)] * tail_len,
+                                SamplingParams(max_new_tokens=data.draw(
+                                    st.integers(1, 6))))
+                    reqs.append(r)
+                    scheds[i].add_request(r)
+                elif op == "tick":
+                    tick(data.draw(st.integers(0, 1)))
+                elif op == "abort" and reqs:
+                    rid = data.draw(st.sampled_from(
+                        [r.request_id for r in reqs]))
+                    for i, s in enumerate(scheds):
+                        if s.abort_request(rid, clocks[i]) is not None:
+                            break
+                elif op == "steal":
+                    src = data.draw(st.integers(0, 1))
+                    dst = 1 - src
+                    cands = scheds[src].steal_candidates()
+                    if cands:
+                        drained = scheds[src].drain_request(
+                            cands[-1].request_id)
+                        if drained is not None:
+                            scheds[dst].adopt_request(drained)
+                elif op == "migrate":
+                    src = data.draw(st.integers(0, 1))
+                    dst = 1 - src
+                    moved = False
+                    for r in list(scheds[src].running_decode):
+                        rid = r.request_id
+                        drained = scheds[src].drain_request(rid)
+                        if drained is None:
+                            continue
+                        export = scheds[src].kv.export_kv(rid)
+                        if scheds[dst].kv.can_allocate(rid, export.num_tokens):
+                            scheds[src].kv.free(rid)
+                            scheds[dst].kv.import_kv(export)
+                            scheds[dst].adopt_request(drained)
+                        else:
+                            scheds[src].adopt_request(drained)  # no room: stay
+                        moved = True
+                        break
+                    if not moved:
+                        tick(src)
+                for s in scheds:
+                    s.check_invariants()
+                    s.kv.check_invariants()
+                ids = [{r.request_id
+                        for g in (s.waiting, s.running_prefill,
+                                  s.running_decode) for r in g}
+                       for s in scheds]
+                assert not (ids[0] & ids[1]), "resident on both replicas"
+
+            for _ in range(300):
+                if all(r.is_finished for r in reqs):
+                    break
+                tick(0)
+                tick(1)
+            assert all(r.is_finished for r in reqs)
+            for s in scheds:
+                s.check_invariants()
