@@ -11,6 +11,9 @@ writes ``BENCH_engine.json`` at the repo root:
     readback_s_per_tick host time *blocked* on device token readback
     host_wait_per_tick  the sum — everything the host cannot overlap
     padded_ratio        padded tokens / (scheduled + padded) per class
+    scanned_pages       KV pages the attention scan walked (bucket width)
+    live_pages          KV pages actually holding context
+    attn_padded_ratio   1 - live/scanned — dead-page scan waste (schema /2)
 
 The checked-in JSON is the perf trajectory record: regenerate with
 ``python benchmarks/bench_engine.py`` after engine changes and commit the
@@ -41,7 +44,7 @@ from repro.jax_compat import ensure_jax_compat  # noqa: E402
 
 ensure_jax_compat()
 
-BENCH_SCHEMA = "gllm-bench-engine/1"
+BENCH_SCHEMA = "gllm-bench-engine/2"
 
 VARIANTS = {
     "sync_fixed": dict(async_dispatch=False, bucketed=False),
@@ -160,6 +163,10 @@ def run_variant(name: str, params_cache: dict, waves, *,
             "scheduled_prefill": st.scheduled_prefill,
             "scheduled_decode": st.scheduled_decode,
             "padded_ratio": round(padded / max(sched + padded, 1), 4),
+            "scanned_pages": st.scanned_pages,
+            "live_pages": st.live_pages,
+            "attn_padded_ratio": round(
+                1.0 - st.live_pages / max(st.scanned_pages, 1), 4),
             "compiles_after_warm": compiles_warm,
             "recompiles_during_serve": compiles_final - compiles_warm,
         },
@@ -185,6 +192,7 @@ def validate(doc: Dict[str, Any]) -> None:
                "host_s_per_tick", "readback_s_per_tick",
                "host_wait_per_tick", "padded_prefill", "padded_decode",
                "scheduled_prefill", "scheduled_decode", "padded_ratio",
+               "scanned_pages", "live_pages", "attn_padded_ratio",
                "compiles_after_warm", "recompiles_during_serve")
     for vn, rep in doc["variants"].items():
         for k in numeric:
@@ -193,10 +201,16 @@ def validate(doc: Dict[str, Any]) -> None:
                  f"{rep.get(k)!r}")
         need(0.0 <= rep["padded_ratio"] <= 1.0,
              f"variants.{vn}.padded_ratio", "out of [0, 1]")
+        need(0.0 <= rep["attn_padded_ratio"] <= 1.0,
+             f"variants.{vn}.attn_padded_ratio", "out of [0, 1]")
+        need(0 <= rep["live_pages"] <= rep["scanned_pages"],
+             f"variants.{vn}.live_pages",
+             "must satisfy 0 <= live_pages <= scanned_pages")
     cmp_ = doc.get("comparison")
     need(isinstance(cmp_, dict), "comparison", "missing dict")
     for k in ("baseline", "candidate", "padded_ratio_reduced",
-              "host_wait_reduced", "outputs_bit_identical"):
+              "attn_padded_ratio_reduced", "host_wait_reduced",
+              "tick_counts_sane", "outputs_bit_identical"):
         need(k in cmp_, f"comparison.{k}", "missing")
 
 
@@ -235,6 +249,13 @@ def main(argv=None) -> int:
                     for n in VARIANTS)
     base = results[BASELINE]["report"]
     cand = results[CANDIDATE]["report"]
+    # tick-count sanity (async inflation regression, DESIGN.md §12): deferred
+    # retirement must not materially inflate device ticks vs the sync variant
+    # on the same workload
+    ticks_sane = all(
+        results[f"async_{s}"]["report"]["ticks"]
+        <= results[f"sync_{s}"]["report"]["ticks"] * 1.15 + 2
+        for s in ("fixed", "bucketed"))
     doc = {
         "schema": BENCH_SCHEMA,
         "config": {
@@ -250,8 +271,11 @@ def main(argv=None) -> int:
             "candidate": CANDIDATE,
             "padded_ratio_reduced":
                 cand["padded_ratio"] < base["padded_ratio"],
+            "attn_padded_ratio_reduced":
+                cand["attn_padded_ratio"] < base["attn_padded_ratio"],
             "host_wait_reduced":
                 cand["host_wait_per_tick"] < base["host_wait_per_tick"],
+            "tick_counts_sane": ticks_sane,
             "outputs_bit_identical": identical,
         },
     }
@@ -270,13 +294,19 @@ def main(argv=None) -> int:
         print(f"  {n:15s} tok/s={r['tokens_per_s']:>8} "
               f"host_wait/tick={r['host_wait_per_tick']:.6f} "
               f"padded_ratio={r['padded_ratio']:.4f} "
+              f"attn_padded_ratio={r['attn_padded_ratio']:.4f} "
               f"recompiles={r['recompiles_during_serve']}")
     print(f"  comparison: {doc['comparison']}")
 
     if not identical:
         print("[bench_engine] FAIL: variant outputs diverged", file=sys.stderr)
         return 1
+    if not ticks_sane:
+        print("[bench_engine] FAIL: async dispatch inflated tick counts "
+              "vs sync", file=sys.stderr)
+        return 1
     if not args.smoke and not (doc["comparison"]["padded_ratio_reduced"]
+                               and doc["comparison"]["attn_padded_ratio_reduced"]
                                and doc["comparison"]["host_wait_reduced"]):
         print(f"[bench_engine] FAIL: {CANDIDATE} does not strictly improve "
               f"on {BASELINE}", file=sys.stderr)

@@ -30,6 +30,7 @@ def _kernel(
     # scalar prefetch
     tables_ref,            # [S * B] int32 (flattened block tables)
     ctx_ref,               # [S] int32 context lens
+    live_ref,              # [S] int32 live pages per sequence
     # inputs
     q_ref,                 # [1, TQ, H, D]
     qpos_ref,              # [1, TQ] int32 global positions
@@ -53,45 +54,53 @@ def _kernel(
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0].astype(jnp.float32)                    # [TQ, H, D]
-    TQ, H, D = q.shape
-    KH = kv_heads
-    G = H // KH
-    kv = kv_ref[0].astype(jnp.float32)                  # [page, 2, KH, D]
-    k, v = kv[:, 0], kv[:, 1]                           # [page, KH, D]
+    # Dead-page skip: pages at or past live_ref[s] hold no in-context keys,
+    # so their masked contribution is exactly zero (every score is NEG_INF,
+    # which after the running-max subtraction underflows to p == 0.0 and
+    # alpha == 1.0).  Skipping the whole update is therefore bit-identical
+    # while saving the MXU work; the index_map already clamps the DMA to the
+    # last live page so no extra HBM traffic happens either.
+    @pl.when(b < live_ref[s])
+    def _update():
+        q = q_ref[0].astype(jnp.float32)                # [TQ, H, D]
+        TQ, H, D = q.shape
+        KH = kv_heads
+        G = H // KH
+        kv = kv_ref[0].astype(jnp.float32)              # [page, 2, KH, D]
+        k, v = kv[:, 0], kv[:, 1]                       # [page, KH, D]
 
-    kpos = b * page + jax.lax.broadcasted_iota(jnp.int32, (page,), 0)
-    ctx = ctx_ref[s]
-    qpos = qpos_ref[0]                                  # [TQ]
-    mask = (kpos[None, :] < ctx) & (kpos[None, :] <= qpos[:, None])  # [TQ,page]
+        kpos = b * page + jax.lax.broadcasted_iota(jnp.int32, (page,), 0)
+        ctx = ctx_ref[s]
+        qpos = qpos_ref[0]                              # [TQ]
+        mask = (kpos[None, :] < ctx) & (kpos[None, :] <= qpos[:, None])
 
-    scale = D ** -0.5
-    parts = []
-    for kh in range(KH):
-        qg = q[:, kh * G:(kh + 1) * G, :].reshape(TQ * G, D)
-        sc = jax.lax.dot_general(qg, k[:, kh, :],
-                                 (((1,), (1,)), ((), ())),
-                                 preferred_element_type=jnp.float32)
-        parts.append(sc.reshape(TQ, G, page))
-    scores = jnp.concatenate(parts, axis=1) * scale     # [TQ, H, page]
-    scores = jnp.where(mask[:, None, :], scores, NEG_INF)
+        scale = D ** -0.5
+        parts = []
+        for kh in range(KH):
+            qg = q[:, kh * G:(kh + 1) * G, :].reshape(TQ * G, D)
+            sc = jax.lax.dot_general(qg, k[:, kh, :],
+                                     (((1,), (1,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+            parts.append(sc.reshape(TQ, G, page))
+        scores = jnp.concatenate(parts, axis=1) * scale  # [TQ, H, page]
+        scores = jnp.where(mask[:, None, :], scores, NEG_INF)
 
-    m_prev, l_prev = m_ref[...], l_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
-    p = jnp.exp(scores - m_new[..., None])              # [TQ, H, page]
-    alpha = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1)
-    m_ref[...] = m_new
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+        p = jnp.exp(scores - m_new[..., None])          # [TQ, H, page]
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1)
+        m_ref[...] = m_new
 
-    pv_parts = []
-    for kh in range(KH):
-        pg = p[:, kh * G:(kh + 1) * G, :].reshape(TQ * G, page)
-        pv = jax.lax.dot_general(pg, v[:, kh, :],
-                                 (((1,), (0,)), ((), ())),
-                                 preferred_element_type=jnp.float32)
-        pv_parts.append(pv.reshape(TQ, G, D))
-    pv = jnp.concatenate(pv_parts, axis=1)              # [TQ, H, D]
-    acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
+        pv_parts = []
+        for kh in range(KH):
+            pg = p[:, kh * G:(kh + 1) * G, :].reshape(TQ * G, page)
+            pv = jax.lax.dot_general(pg, v[:, kh, :],
+                                     (((1,), (0,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+            pv_parts.append(pv.reshape(TQ, G, D))
+        pv = jnp.concatenate(pv_parts, axis=1)          # [TQ, H, D]
+        acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
 
     @pl.when(b == num_pages - 1)
     def _finalize():
@@ -118,20 +127,27 @@ def paged_flash_attention(
 
     grid = (S, TQ // tq, B)
 
-    def q_index(s, qb, b, tables, ctx):
+    # Pages >= ceil(ctx / page) hold no in-context keys; the kernel skips
+    # them (bit-identically — see _kernel) and the index_map re-fetches the
+    # last live page instead of streaming dead ones from HBM.
+    live_pages = jnp.minimum(
+        jax.lax.div(context_lens + (page - 1), page), B).astype(jnp.int32)
+
+    def q_index(s, qb, b, tables, ctx, live):
         return (s, qb, 0, 0)
 
-    def pos_index(s, qb, b, tables, ctx):
+    def pos_index(s, qb, b, tables, ctx, live):
         return (s, qb)
 
-    def kv_index(s, qb, b, tables, ctx):
-        return (tables[s * B + b], 0, 0, 0, 0)
+    def kv_index(s, qb, b, tables, ctx, live):
+        bb = jnp.minimum(b, jnp.maximum(live[s] - 1, 0))
+        return (tables[s * B + bb], 0, 0, 0, 0)
 
     kernel = functools.partial(_kernel, kv_heads=KH, page=page, num_pages=B)
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=3,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((1, tq, H, D), q_index),
@@ -147,5 +163,6 @@ def paged_flash_attention(
         ),
         out_shape=jax.ShapeDtypeStruct((S, TQ, H, D), q.dtype),
         interpret=interpret,
-    )(block_tables.reshape(-1), context_lens, q, q_positions, kv_pages)
+    )(block_tables.reshape(-1), context_lens, live_pages, q, q_positions,
+      kv_pages)
     return out

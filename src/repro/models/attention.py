@@ -163,6 +163,16 @@ def write_kv_pages(
     return cache.at[pages, offs].set(flat_kv, mode="drop")
 
 
+def _check_table_alignment(Bmax: int, pages_per_block: int) -> None:
+    if pages_per_block <= 0 or Bmax % pages_per_block != 0:
+        raise ValueError(
+            f"block-table width {Bmax} is not a positive multiple of "
+            f"pages_per_block={pages_per_block} (the flash gather "
+            f"granularity, env knob REPRO_PAGES_PER_BLOCK): pick table "
+            f"widths (ServeDims.Bp/Bd and any depth-bucket steps, "
+            f"REPRO_DEPTH_STEPS) divisible by it, or change the knob")
+
+
 def paged_attention(
     q: jax.Array,                     # [S, C, H, D] (C==1 for decode)
     cache: jax.Array,                 # [Pages, page, 2, KH, D]
@@ -184,7 +194,7 @@ def paged_attention(
     S, Bmax = block_tables.shape
     page = cache.shape[1]
     KH, D = cache.shape[-2], cache.shape[-1]
-    assert Bmax % pages_per_block == 0, (Bmax, pages_per_block)
+    _check_table_alignment(Bmax, pages_per_block)
     n_blocks = Bmax // pages_per_block
     Bk = pages_per_block * page
 
@@ -242,7 +252,7 @@ def paged_attention_mla(
     dn, dv = qk_nope_dim, v_head_dim
     H = q.shape[-2]
     dr = q.shape[-1] - dn
-    assert Bmax % pages_per_block == 0
+    _check_table_alignment(Bmax, pages_per_block)
     n_blocks = Bmax // pages_per_block
     Bk = pages_per_block * page
 

@@ -18,6 +18,7 @@ TPU form of a pipeline bubble — stays small (DESIGN.md §2).
 
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field, replace
 from functools import partial
 from typing import Any, Dict, Optional, Sequence, Tuple
@@ -32,6 +33,16 @@ from repro.models import ssm as ssm_lib
 from repro.models import moe as moe_lib
 from repro.models.layers import apply_mrope, apply_norm, apply_rope, mlp_apply, rmsnorm
 from repro.models.transformer import _block_key, _heads
+
+# Flash KV-block granularity (pages per gather step).  Read once at import —
+# see `_pages_per_block` for why a live re-read is wrong.
+PAGES_PER_BLOCK = int(os.environ.get("REPRO_PAGES_PER_BLOCK", "8"))
+
+# KV-depth bucket divisors k -> depth step ⌈B/k⌉ (DESIGN.md §14).  "4,2,1"
+# is the {⌈B/4⌉, ⌈B/2⌉, B} ladder; "1" disables depth bucketing.
+DEPTH_DIVISORS: Tuple[int, ...] = tuple(
+    int(x) for x in os.environ.get("REPRO_DEPTH_STEPS", "4,2,1").split(",")
+    if x.strip())
 
 
 @dataclass(frozen=True)
@@ -58,17 +69,42 @@ class ServeDims:
         return self.Sp * self.prefill_width + self.Sd
 
 
-def bucket_ladder(dims: ServeDims) -> Tuple[ServeDims, ...]:
-    """Fixed ladder of serve shapes for bucketed execution (DESIGN.md §12).
+def depth_steps(B: int, *, pages_per_block: Optional[int] = None,
+                divisors: Optional[Sequence[int]] = None) -> Tuple[int, ...]:
+    """Block-table depth buckets for a phase whose full table is `B` pages:
+    {⌈B/k⌉ for k in `divisors`} rounded up to multiples of the flash gather
+    granularity (`pages_per_block`), deduplicated, always including B.  A
+    full width not divisible by `pages_per_block` gets no sub-buckets — the
+    attention path requires the same divisibility at every width."""
+    ppb = pages_per_block if pages_per_block is not None else _pages_per_block()
+    if B <= 0 or ppb <= 0 or B % ppb != 0:
+        return (B,)
+    divisors = tuple(divisors) if divisors is not None else DEPTH_DIVISORS
+    steps = {B}
+    for k in divisors:
+        if k > 0:
+            need = -(-B // k)                       # ⌈B/k⌉ pages demanded
+            steps.add(min(B, ppb * -(-need // ppb)))  # …rounded to blocks
+    return tuple(sorted(steps))
 
-    Prefill-chunk buckets {0, ⌈C/4⌉, ⌈C/2⌉, C} × decode-row buckets
-    {⌈Sd/4⌉, ⌈Sd/2⌉, Sd}, deduplicated.  Every entry keeps the full `dims`
-    cache geometry (pages/page/slots/Te untouched), so one KV pool, one
-    parameter tree, and one carry buffer serve every program in the ladder.
-    The Sp=0 entries are the "0 prefill tokens" buckets; decode-only shapes
-    keep C at its full value since the prefill payload has no rows there.
-    The fully-empty (Sp=0, Sd=0) shape is excluded — bubble ticks run in the
-    smallest non-empty bucket.
+
+def bucket_ladder(dims: ServeDims,
+                  depth_divisors: Optional[Sequence[int]] = None
+                  ) -> Tuple[ServeDims, ...]:
+    """Fixed ladder of serve shapes for bucketed execution (DESIGN.md §12/§14).
+
+    Three bucket dimensions, deduplicated: prefill-chunk buckets
+    {0, ⌈C/4⌉, ⌈C/2⌉, C} × decode-row buckets {⌈Sd/4⌉, ⌈Sd/2⌉, Sd} × KV
+    depth — the block-table widths Bp/Bd stepped per `depth_steps`.  One
+    shared depth index scales both phases together (×len(steps) ladder
+    growth, not the Bp×Bd cross product); a phase with no rows in an entry
+    keeps its full table width, since its meta carries no live tables there.
+    Every entry keeps the full `dims` cache geometry (pages/page/slots/Te
+    untouched), so one KV pool, one parameter tree, and one carry buffer
+    serve every program in the ladder.  The Sp=0 entries are the "0 prefill
+    tokens" buckets; decode-only shapes keep C at its full value since the
+    prefill payload has no rows there.  The fully-empty (Sp=0, Sd=0) shape
+    is excluded — bubble ticks run in the smallest non-empty bucket.
     """
     def ceil_div(a: int, b: int) -> int:
         return -(-a // b)
@@ -78,6 +114,17 @@ def bucket_ladder(dims: ServeDims) -> Tuple[ServeDims, ...]:
     d_steps = ([0] if dims.Sd == 0 else
                sorted({max(1, ceil_div(dims.Sd, 4)),
                        max(1, ceil_div(dims.Sd, 2)), dims.Sd}))
+    bp_steps = depth_steps(dims.Bp, divisors=depth_divisors)
+    bd_steps = depth_steps(dims.Bd, divisors=depth_divisors)
+    n_depth = max(len(bp_steps), len(bd_steps))
+    # shared depth index i = "fraction i of both phases"; the shorter
+    # phase's list saturates at its full width
+    depth_pairs = []
+    for i in range(n_depth):
+        pair = (bp_steps[min(i, len(bp_steps) - 1)],
+                bd_steps[min(i, len(bd_steps) - 1)])
+        if pair not in depth_pairs:
+            depth_pairs.append(pair)
     ladder = []
     seen = set()
     for Sd_b in d_steps:
@@ -85,33 +132,47 @@ def bucket_ladder(dims: ServeDims) -> Tuple[ServeDims, ...]:
         if dims.Sp > 0:
             variants += [(dims.Sp, c) for c in c_steps]
         for Sp_b, C_b in variants:
-            key = (Sp_b, C_b, Sd_b)
-            if key in seen or (Sp_b == 0 and Sd_b == 0):
-                continue
-            seen.add(key)
-            ladder.append(replace(dims, Sp=Sp_b, C=C_b, Sd=Sd_b))
+            for Bp_b, Bd_b in depth_pairs:
+                bp = Bp_b if Sp_b > 0 else dims.Bp
+                bd = Bd_b if Sd_b > 0 else dims.Bd
+                key = (Sp_b, C_b, Sd_b, bp, bd)
+                if key in seen or (Sp_b == 0 and Sd_b == 0):
+                    continue
+                seen.add(key)
+                ladder.append(replace(dims, Sp=Sp_b, C=C_b, Sd=Sd_b,
+                                      Bp=bp, Bd=bd))
     return tuple(ladder)
 
 
-def select_bucket(ladder: Sequence[ServeDims], need_c: int,
-                  need_d: int) -> ServeDims:
+def select_bucket(ladder: Sequence[ServeDims], need_c: int, need_d: int,
+                  need_bp: int = 0, need_bd: int = 0) -> ServeDims:
     """Smallest ladder entry covering a tick whose widest prefill chunk is
-    `need_c` tokens and whose decode rows number `need_d`.  Minimality is by
-    padded row count (`rows`); ties break toward the narrower prefill bucket,
-    then the smaller decode bucket."""
+    `need_c` tokens, whose decode rows number `need_d`, and whose deepest
+    prefill/decode block tables hold `need_bp`/`need_bd` live pages.
+    Minimality is by padded row count (`rows`); ties break toward the
+    narrower prefill bucket, the smaller decode bucket, then the shallower
+    block tables.  Depth demands only bind for phases with rows (`need_c`
+    resp. `need_d` nonzero): a phase with no rows reads no tables."""
     best: Optional[ServeDims] = None
     for b in ladder:
-        covers = ((need_c == 0 or (b.Sp > 0 and b.C >= need_c))
-                  and b.Sd >= need_d)
+        covers = ((need_c == 0 or (b.Sp > 0 and b.C >= need_c
+                                   and b.Bp >= need_bp))
+                  and b.Sd >= need_d
+                  and (need_d == 0 or b.Bd >= need_bd))
         if not covers:
             continue
-        if best is None or (b.rows, b.C, b.Sd) < (best.rows, best.C, best.Sd):
+        key = (b.rows, b.C, b.Sd, b.Bp, b.Bd)
+        if best is None or key < (best.rows, best.C, best.Sd,
+                                  best.Bp, best.Bd):
             best = b
     if best is None:
         raise ValueError(
-            f"no bucket covers need_c={need_c}, need_d={need_d} "
+            f"no bucket covers need_c={need_c}, need_d={need_d}, "
+            f"need_bp={need_bp}, need_bd={need_bd} "
             f"(ladder max C={max(b.C for b in ladder)}, "
-            f"Sd={max(b.Sd for b in ladder)})")
+            f"Sd={max(b.Sd for b in ladder)}, "
+            f"Bp={max(b.Bp for b in ladder)}, "
+            f"Bd={max(b.Bd for b in ladder)})")
     return best
 
 
@@ -271,9 +332,12 @@ def _qkv_rows(cfg, p, x, positions, prefix=""):
 
 
 def _pages_per_block() -> int:
-    """Flash KV-block granularity (pages per gather step) — §Perf knob."""
-    import os
-    return int(os.environ.get("REPRO_PAGES_PER_BLOCK", "8"))
+    """Flash KV-block granularity (pages per gather step) — §Perf knob.
+    Read once at import (`PAGES_PER_BLOCK` below): this value participates
+    in traced shape math, so a per-call env read would burn host time in
+    the tick hot path and a mid-process change would silently split the
+    jit cache."""
+    return PAGES_PER_BLOCK
 
 
 def _paged_self_attention(cfg, p, xs, cache, meta, dims: ServeDims,

@@ -50,6 +50,10 @@ class ExecResult:
     yields the token list.  `resolve()` forces it (idempotently) and caches
     into `tokens`; callers must resolve before reading `tokens`.  Plain
     synchronous results leave `pending` None and `resolve()` is a no-op.
+    `ready` optionally carries a *non-blocking* probe for whether the
+    deferred readback has already materialized (the engine wires it to
+    `jax.Array.is_ready`); the async TickLoop uses it to retire a finished
+    batch before scheduling instead of a full tick later.
     """
 
     tokens: List[int] = field(default_factory=list)
@@ -57,6 +61,7 @@ class ExecResult:
     stage_times: Optional[List[float]] = None
     host_s: Optional[float] = None
     pending: Optional[Callable[[], List[int]]] = None
+    ready: Optional[Callable[[], bool]] = None
 
     def resolve(self) -> List[int]:
         """Force the deferred readback (if any) and return the tokens."""
@@ -64,6 +69,14 @@ class ExecResult:
             thunk, self.pending = self.pending, None
             self.tokens = list(thunk())
         return self.tokens
+
+    def is_ready(self) -> bool:
+        """True when `resolve()` would not block: synchronous results always,
+        deferred ones when the backend's probe says the device is done (a
+        deferred result without a probe conservatively reports False)."""
+        if self.pending is None:
+            return True
+        return bool(self.ready()) if self.ready is not None else False
 
 
 class ExecutionBackend:
@@ -215,6 +228,18 @@ class TickLoop:
         """One pipeline tick.  Returns requests finishing this tick."""
         if now is None:
             now = self.backend.clock()
+        finished_early: List[Request] = []
+        if (self.async_dispatch and self._pending is not None
+                and self._pending[1].is_ready()):
+            # The deferred readback already materialized on the device, so
+            # retiring it costs no wait — and doing it BEFORE scheduling
+            # makes its requests schedulable this very tick.  Without this,
+            # deferred retirement delays every completion by a full tick and
+            # the decode population freezes into two alternating disjoint
+            # cohorts, inflating the tick count (~51 vs 36 on the bench
+            # workload).  When the probe says "still running", the parked
+            # result waits as before and the overlap is preserved.
+            finished_early = self._retire_pending(now)
         batch = self.scheduler.schedule(now)
         if batch.is_empty:
             # nothing resident this tick: retire the empty batch immediately
@@ -227,7 +252,7 @@ class TickLoop:
                 and self._pending is not None):
             # nothing to execute — only the deferred batch remains; retire it
             # without paying a bubble device tick
-            return self._retire_pending(now)
+            return finished_early + self._retire_pending(now)
         # Rotate: the new batch enters stage 0; the entry reaching the ring's
         # tail is the one executing its LAST stage this tick — its results
         # materialize when `execute` returns.  (For depth 1 that is this
@@ -247,7 +272,7 @@ class TickLoop:
             if exiting_id is not None:
                 self._pending = (exiting_id, result)
             self.ring[-1] = (None, self.backend.prepare(None))
-            return finished
+            return finished_early + finished
 
         result.resolve()
         if exiting_id is None:

@@ -105,8 +105,11 @@ class EngineStats:
     padded_decode: int = 0
     scheduled_prefill: int = 0
     scheduled_decode: int = 0
+    scanned_pages: int = 0      # KV pages the attention scan walks per tick
+    live_pages: int = 0         # KV pages actually holding context
     host_s: float = 0.0         # host-side per-tick work (meta/fresh/dispatch)
     device_s: float = 0.0       # host time *blocked* on device readback
+    last_bucket: Optional[Dict[str, int]] = None  # selected serve shape
 
 
 class JaxBackend(ExecutionBackend):
@@ -147,7 +150,7 @@ class JaxBackend(ExecutionBackend):
         self.ladder: Tuple[ServeDims, ...] = (
             serve_lib.bucket_ladder(dims) if bucketed else (dims,))
         self._build_serve_tick = build_serve_tick
-        self._ticks: Dict[Tuple[int, int, int], Any] = {}
+        self._ticks: Dict[Tuple[int, int, int, int, int], Any] = {}
 
         self._embed = jax.jit(
             lambda p, t: jnp.take(p["embed"]["tok"], t, axis=0))
@@ -166,7 +169,7 @@ class JaxBackend(ExecutionBackend):
 
     # ------------------------------------------------------- bucket programs
     def _get_tick(self, bucket: ServeDims):
-        key = (bucket.Sp, bucket.C, bucket.Sd)
+        key = (bucket.Sp, bucket.C, bucket.Sd, bucket.Bp, bucket.Bd)
         fn = self._ticks.get(key)
         if fn is None:
             carry_dims = self.dims if bucket != self.dims else None
@@ -221,14 +224,21 @@ class JaxBackend(ExecutionBackend):
                        ) -> ServeDims:
         if not self.bucketed:
             return self.dims
-        need_c = 0
-        need_d = 0
+        need_c = need_d = need_bp = need_bd = 0
+        page = self.dims.page
         for _, m in ring:
             if m["p_chunk_lens"].size:
                 need_c = max(need_c, int(m["p_chunk_lens"].max()))
+                # block-table depth demand = ring-wide max pages-in-use;
+                # context_lens is 0 on empty rows so the max is safe
+                need_bp = max(need_bp,
+                              -(-int(m["p_context_lens"].max()) // page))
             if m["d_valid"].size:
                 need_d = max(need_d, int(np.count_nonzero(m["d_valid"])))
-        return serve_lib.select_bucket(self.ladder, need_c, need_d)
+                need_bd = max(need_bd,
+                              -(-int(m["d_context_lens"].max()) // page))
+        return serve_lib.select_bucket(self.ladder, need_c, need_d,
+                                       need_bp=need_bp, need_bd=need_bd)
 
     @staticmethod
     def _slice_meta_field(key: str, arr: np.ndarray,
@@ -238,8 +248,14 @@ class JaxBackend(ExecutionBackend):
             arr = arr[:, :bucket.Sp]
             if key in ("p_positions", "p_slot_pages", "p_slot_offsets"):
                 arr = arr[:, :, :bucket.C]
+            elif key == "p_block_tables":
+                # depth bucket: the selector guarantees every live page index
+                # sits below bucket.Bp, so the tail is always zero padding
+                arr = arr[:, :, :bucket.Bp]
         else:
             arr = arr[:, :bucket.Sd]
+            if key == "d_block_tables":
+                arr = arr[:, :, :bucket.Bd]
         return arr
 
     def _stack_meta(self, ring: Sequence[Tuple[Optional[int], Any]],
@@ -289,6 +305,19 @@ class JaxBackend(ExecutionBackend):
         self.stats.scheduled_decode += n_d
         self.stats.padded_prefill += bucket.Sp * bucket.C - n_p
         self.stats.padded_decode += bucket.Sd - n_d
+        # attention-depth accounting (same entering-batch convention as the
+        # padded_* counters): what the bucket scans vs. what holds context
+        self.stats.scanned_pages += bucket.Sp * bucket.Bp + bucket.Sd * bucket.Bd
+        if entering is not None:
+            page = self.dims.page
+            live = sum(-(-(seq.start_pos + seq.num_tokens) // page)
+                       for seq in entering.prefill)
+            live += sum(-(-(seq.start_pos + 1) // page)
+                        for seq in entering.decode)
+            self.stats.live_pages += live
+        self.stats.last_bucket = {"Sp": bucket.Sp, "C": bucket.C,
+                                  "Sd": bucket.Sd, "Bp": bucket.Bp,
+                                  "Bd": bucket.Bd}
         # host_s: everything this tick spent off-device — the prepare()
         # calls since the last execute plus the stack/embed/dispatch above
         host_s = self._prep_s + (time.perf_counter() - t0)
@@ -314,7 +343,16 @@ class JaxBackend(ExecutionBackend):
             self.stats.tokens_out += len(toks)
             return toks
 
-        return ExecResult(completed_at=now, host_s=host_s, pending=readback)
+        def probe() -> bool:
+            # non-blocking: lets the async loop retire this batch the moment
+            # the device is done instead of a fixed tick later
+            try:
+                return bool(tokens.is_ready())
+            except AttributeError:
+                return False
+
+        return ExecResult(completed_at=now, host_s=host_s, pending=readback,
+                          ready=probe)
 
     def finish_request(self, req: Request) -> None:
         self.slots.release(req.request_id)

@@ -59,14 +59,45 @@ class CostModel:
     comm_bytes_per_token: float = 0.0
     comm_latency: float = 0.0         # per-tick serialized all-reduce latency
     net_bw: float = 50e9              # interconnect (ICI link / sim-network)
+    # Paged-attention depth term (DESIGN.md §14).  When > 0, attention HBM
+    # traffic is billed per *scanned KV page* (attn_page_bytes each) instead
+    # of per context token — mirroring the engine, whose depth-bucketed
+    # tables + dead-page-skipping kernel make cost track pages walked, not
+    # the pool maximum.  0 keeps the legacy per-token formula (and every
+    # previously fitted model / golden fixture) bit-for-bit unchanged.
+    attn_page_bytes: float = 0.0
+    page_size: int = 16               # tokens per KV page (for the estimator)
+
+    def est_scanned_pages(self, prefill_tokens: int, decode_tokens: int,
+                          prefill_ctx: int, decode_ctx: int) -> float:
+        """Scanned KV pages per stage estimated from the batch aggregates a
+        `TickSample` records — the *same* estimator backs `stage_time` (when
+        no exact count is passed), `fit_from_trace`, and
+        `calibration_error`, so sim, fit, and validation bill one term."""
+        pg = max(self.page_size, 1)
+        pages = 0.0
+        if decode_tokens:
+            pages += decode_tokens * float(-(-max(decode_ctx, 1) // pg))
+        if prefill_tokens:
+            pages += float(-(-int(prefill_tokens * 0.5 * max(prefill_ctx, 1))
+                             // pg))
+        return pages
 
     def stage_time(self, prefill_tokens: int, decode_tokens: int,
-                   prefill_ctx: int, decode_ctx: int) -> float:
+                   prefill_ctx: int, decode_ctx: int,
+                   scanned_pages: Optional[float] = None) -> float:
         tokens = prefill_tokens + decode_tokens
         t_comp = tokens * self.flops_per_token_stage / (
             PEAK_FLOPS * self.mfu * self.chips_per_stage)
-        kv_bytes = (prefill_tokens * 0.5 * prefill_ctx
-                    + decode_tokens * decode_ctx) * self.kv_bytes_per_ctx_token
+        if self.attn_page_bytes > 0.0:
+            pages = (scanned_pages if scanned_pages is not None else
+                     self.est_scanned_pages(prefill_tokens, decode_tokens,
+                                            prefill_ctx, decode_ctx))
+            kv_bytes = pages * self.attn_page_bytes
+        else:
+            kv_bytes = (prefill_tokens * 0.5 * prefill_ctx
+                        + decode_tokens * decode_ctx
+                        ) * self.kv_bytes_per_ctx_token
         weight_bytes = self.param_bytes_stage if tokens else 0.0
         t_mem = (weight_bytes + kv_bytes) / (
             HBM_BW * self.hbm_eff * self.chips_per_stage)
@@ -116,9 +147,16 @@ class CostModel:
             tokens = s.prefill_tokens + s.decode_tokens
             F[i] = tokens * base.flops_per_token_stage / (
                 PEAK_FLOPS * base.chips_per_stage)
-            kv_bytes = (s.prefill_tokens * 0.5 * s.prefill_ctx
-                        + s.decode_tokens * s.decode_ctx
-                        ) * base.kv_bytes_per_ctx_token
+            if base.attn_page_bytes > 0.0:
+                # structural constant like the per-token rate: the fit keeps
+                # the same per-page billing `stage_time` uses
+                kv_bytes = base.attn_page_bytes * base.est_scanned_pages(
+                    s.prefill_tokens, s.decode_tokens,
+                    s.prefill_ctx, s.decode_ctx)
+            else:
+                kv_bytes = (s.prefill_tokens * 0.5 * s.prefill_ctx
+                            + s.decode_tokens * s.decode_ctx
+                            ) * base.kv_bytes_per_ctx_token
             M[i] = (base.param_bytes_stage + kv_bytes) / (
                 HBM_BW * base.chips_per_stage)
             comm[i] = tokens * base.comm_bytes_per_token / base.net_bw
@@ -146,19 +184,25 @@ class CostModel:
                                    fixed_us=fixed * 1e6)
 
 
-def cost_model_for(cfg, *, chips_per_stage: int = 1, pp: int = None
-                   ) -> CostModel:
+def cost_model_for(cfg, *, chips_per_stage: int = 1, pp: int = None,
+                   page_size: Optional[int] = None) -> CostModel:
     """Stage-cost model for a pipeline of depth `pp` (defaults to the arch's
-    plan).  Per stage: 1/pp of the layers on `chips_per_stage` chips."""
+    plan).  Per stage: 1/pp of the layers on `chips_per_stage` chips.
+    Passing `page_size` (the KV page length, `ServeDims.page`) enables the
+    per-scanned-page attention term at page_size × the per-token KV rate —
+    the depth-bucketed engine's cost shape."""
     from repro.roofline.analysis import param_count
     n_active = param_count(cfg, active_only=True)
     pp = pp or cfg.plan.pp
     kv_bytes = cfg.kv_cache_dim_per_token * (cfg.num_layers / pp) * 2  # bf16
+    extra = ({"attn_page_bytes": page_size * kv_bytes, "page_size": page_size}
+             if page_size else {})
     return CostModel(
         flops_per_token_stage=2.0 * n_active / pp,
         param_bytes_stage=2.0 * n_active / pp,
         kv_bytes_per_ctx_token=kv_bytes,
         chips_per_stage=chips_per_stage,
+        **extra,
     )
 
 
@@ -601,11 +645,14 @@ def record_sim_trace(
     fail_at: Optional[float] = None,
     downtime: float = 1.0,
     enable_prefix_caching: bool = False,
+    attn_page_billing: bool = False,
 ) -> PipelineSimulator:
     """Run a traced simulation of `arrivals` — the canonical way to mint a
     golden trace (tests/fixtures/traces/make_fixtures.py) or a calibration
     trace (`benchmarks.run --trace-out`).  Returns the finished simulator;
     the trace is at `trace_path` (or in `sim.recorder` for in-memory sinks).
+    `attn_page_billing` bills attention HBM traffic per scanned KV page
+    (the depth-bucketed engine's cost shape) instead of per context token.
     """
     from repro.configs import get_config
 
@@ -614,7 +661,9 @@ def record_sim_trace(
     kv = PagedKVManager(num_pages=pages, page_size=page_size,
                         enable_prefix_caching=enable_prefix_caching)
     sched = PipelineScheduler(th, kv, max_model_len=pages * page_size)
-    sim = PipelineSimulator(sched, pp, cost_model_for(cfg, pp=pp), runtime,
+    cost = cost_model_for(cfg, pp=pp,
+                          page_size=page_size if attn_page_billing else None)
+    sim = PipelineSimulator(sched, pp, cost, runtime,
                             straggler_stage=straggler_stage,
                             straggler_factor=straggler_factor,
                             trace_path=trace_path)

@@ -116,6 +116,13 @@ class ReplicaStats:
     prefix_lookups: int = 0
     prefix_hits: int = 0
     prefix_tokens_avoided: int = 0
+    # Bucketed-engine attention-depth signals (None/zero for sim replicas or
+    # unbucketed engines): the last tick's selected serve shape
+    # ({"Sp", "C", "Sd", "Bp", "Bd"}, DESIGN.md §14) and the cumulative KV
+    # pages the attention scan walked vs. those actually holding context.
+    bucket: Optional[Dict[str, int]] = None
+    scanned_pages: int = 0
+    live_pages: int = 0
 
 
 @dataclass
@@ -427,6 +434,10 @@ class LLMServer:
                 for req in sched.waiting:
                     cls = req.sampling.slo_class
                     by_class[cls] = by_class.get(cls, 0) + 1
+            # engine replicas expose per-tick attention-depth stats on their
+            # backend; sim/trace replicas have no EngineStats — leave defaults
+            eng_stats = getattr(getattr(replica, "backend", None), "stats",
+                                None)
             out.replicas.append(ReplicaStats(
                 index=i,
                 ticks=sched.stats.ticks,
@@ -440,6 +451,9 @@ class LLMServer:
                 prefix_lookups=sched.stats.prefix_lookups,
                 prefix_hits=sched.stats.prefix_hits,
                 prefix_tokens_avoided=sched.stats.prefix_tokens_avoided,
+                bucket=getattr(eng_stats, "last_bucket", None),
+                scanned_pages=getattr(eng_stats, "scanned_pages", 0),
+                live_pages=getattr(eng_stats, "live_pages", 0),
             ))
         router = self.router
         if router is not None:

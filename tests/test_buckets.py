@@ -1,11 +1,14 @@
-"""Bucket ladder properties (models/serve.py, DESIGN.md §12).
+"""Bucket ladder properties (models/serve.py, DESIGN.md §12/§14).
 
 `bucket_ladder` builds the static ladder of serve shapes; `select_bucket`
 picks the smallest entry covering a tick.  These are pure shape functions
 (no jax execution), so the properties are checked exhaustively over the
 reachable need-space and — when hypothesis is installed — over random
-geometries too.  The engine-level contract (zero recompiles after warmup)
-lives in tests/test_async_dispatch.py.
+geometries too.  Besides the token dimensions (C, Sd), the ladder carries a
+KV *depth* dimension (Bp/Bd block-table widths, PR 8): depth steps are
+multiples of the flash gather granularity, shared across phases, and the
+selector must cover the ring-wide pages-in-use demand.  The engine-level
+contract (zero recompiles after warmup) lives in tests/test_async_dispatch.py.
 """
 
 import pytest
@@ -17,7 +20,8 @@ try:
 except ImportError:      # pragma: no cover - exercised on minimal installs
     HAS_HYPOTHESIS = False
 
-from repro.models.serve import ServeDims, bucket_ladder, select_bucket
+from repro.models.serve import (ServeDims, bucket_ladder, depth_steps,
+                                select_bucket)
 
 
 def make_dims(Sp=1, C=16, Sd=8):
@@ -28,42 +32,75 @@ def make_dims(Sp=1, C=16, Sd=8):
 def check_ladder(dims):
     ladder = bucket_ladder(dims)
     assert dims in ladder, "full shape must be servable"
-    keys = [(b.Sp, b.C, b.Sd) for b in ladder]
+    keys = [(b.Sp, b.C, b.Sd, b.Bp, b.Bd) for b in ladder]
     assert len(set(keys)) == len(keys), "ladder entries must be distinct"
+    bp_steps = depth_steps(dims.Bp)
+    bd_steps = depth_steps(dims.Bd)
     for b in ladder:
         assert not (b.Sp == 0 and b.Sd == 0), "empty shape is not a bucket"
         assert b.Sp in (0, dims.Sp) and 0 < b.C <= dims.C
         assert 0 <= b.Sd <= dims.Sd
         # one KV pool / carry / param tree serves the whole ladder
-        assert (b.pages, b.page, b.Bp, b.Bd, b.slots, b.Te) == \
-            (dims.pages, dims.page, dims.Bp, dims.Bd, dims.slots, dims.Te)
+        assert (b.pages, b.page, b.slots, b.Te) == \
+            (dims.pages, dims.page, dims.slots, dims.Te)
+        # depth buckets come from the declared step ladders; a phase with no
+        # rows keeps its full table width (its meta is all-zero anyway)
+        assert b.Bp in bp_steps and b.Bd in bd_steps
+        if b.Sp == 0:
+            assert b.Bp == dims.Bp
+        if b.Sd == 0:
+            assert b.Bd == dims.Bd
     return ladder
 
 
-def check_selection(dims, ladder, need_c, need_d):
-    b = select_bucket(ladder, need_c, need_d)
+def check_selection(dims, ladder, need_c, need_d, need_bp=0, need_bd=0):
+    b = select_bucket(ladder, need_c, need_d, need_bp=need_bp,
+                      need_bd=need_bd)
     # covers the demand
     assert b.Sd >= need_d
     if need_c > 0:
-        assert b.Sp > 0 and b.C >= need_c
+        assert b.Sp > 0 and b.C >= need_c and b.Bp >= need_bp
+    if need_d > 0:
+        assert b.Bd >= need_bd
     # minimal: no other covering entry pads fewer rows (ties break toward
-    # the narrower prefill bucket, then the smaller decode bucket)
+    # the narrower prefill bucket, the smaller decode bucket, then the
+    # shallower block tables)
     for other in ladder:
-        covers = ((need_c == 0 or (other.Sp > 0 and other.C >= need_c))
-                  and other.Sd >= need_d)
+        covers = ((need_c == 0 or (other.Sp > 0 and other.C >= need_c
+                                   and other.Bp >= need_bp))
+                  and other.Sd >= need_d
+                  and (need_d == 0 or other.Bd >= need_bd))
         if covers:
-            assert (b.rows, b.C, b.Sd) <= (other.rows, other.C, other.Sd)
+            assert (b.rows, b.C, b.Sd, b.Bp, b.Bd) <= \
+                (other.rows, other.C, other.Sd, other.Bp, other.Bd)
+
+
+def test_depth_steps_shape():
+    assert depth_steps(32, pages_per_block=8) == (8, 16, 32)
+    assert depth_steps(32, pages_per_block=8, divisors=(1,)) == (32,)
+    # ⌈24/4⌉=6 rounds up to the 8-page gather granularity
+    assert depth_steps(24, pages_per_block=8) == (8, 16, 24)
+    # misaligned full width: no sub-buckets (attention requires divisibility)
+    assert depth_steps(30, pages_per_block=8) == (30,)
+    assert depth_steps(0, pages_per_block=8) == (0,)
 
 
 def test_ladder_and_selection_exhaustive_default_cell():
-    """Every reachable (need_c, need_d) of the reduced serving cell."""
+    """Every reachable (need_c, need_d, need_bp, need_bd) of the reduced
+    serving cell (depth demands sampled at the step boundaries ±1)."""
     dims = make_dims()
     ladder = check_ladder(dims)
+    depth_probes = sorted({0, 1, 7, 8, 9, 15, 16, 17, 31, 32})
     for need_c in range(dims.C + 1):
         for need_d in range(dims.Sd + 1):
             if need_c == 0 and need_d == 0:
                 continue        # bubble ticks use the smallest bucket
             check_selection(dims, ladder, need_c, need_d)
+            for bp in depth_probes:
+                for bd in depth_probes:
+                    check_selection(dims, ladder, need_c, need_d,
+                                    need_bp=bp if need_c else 0,
+                                    need_bd=bd if need_d else 0)
 
 
 def test_decode_only_cell():
@@ -72,6 +109,7 @@ def test_decode_only_cell():
     assert all(b.Sp == 0 for b in ladder)
     for need_d in range(1, dims.Sd + 1):
         check_selection(dims, ladder, 0, need_d)
+        check_selection(dims, ladder, 0, need_d, need_bd=dims.Bd)
 
 
 def test_overdemand_raises():
@@ -81,6 +119,25 @@ def test_overdemand_raises():
         select_bucket(ladder, dims.C + 1, 0)
     with pytest.raises(ValueError, match="no bucket"):
         select_bucket(ladder, 0, dims.Sd + 1)
+    with pytest.raises(ValueError, match="no bucket"):
+        select_bucket(ladder, 1, 0, need_bp=dims.Bp + 1)
+    with pytest.raises(ValueError, match="no bucket"):
+        select_bucket(ladder, 0, 1, need_bd=dims.Bd + 1)
+
+
+def test_depth_selection_prefers_shallow_tables():
+    """A shallow-context tick must land in a sub-full block-table bucket —
+    the whole point of the depth dimension."""
+    dims = make_dims()
+    ladder = bucket_ladder(dims)
+    b = select_bucket(ladder, 0, 4, need_bd=3)
+    assert b.Bd == 8            # smallest depth step of Bd=32, ppb=8
+    b = select_bucket(ladder, 4, 0, need_bp=9)
+    assert b.Bp == 16
+    # full-depth demand still lands on the full table
+    b = select_bucket(ladder, dims.C, dims.Sd, need_bp=dims.Bp,
+                      need_bd=dims.Bd)
+    assert (b.Bp, b.Bd) == (dims.Bp, dims.Bd)
 
 
 def test_tiny_cells_do_not_degenerate():
@@ -95,8 +152,10 @@ def test_tiny_cells_do_not_degenerate():
 if HAS_HYPOTHESIS:
     @settings(max_examples=60, deadline=None)
     @given(Sp=st.integers(0, 2), C=st.integers(1, 64), Sd=st.integers(0, 32),
-           need_c=st.integers(0, 64), need_d=st.integers(0, 32))
-    def test_selection_covers_and_is_minimal(Sp, C, Sd, need_c, need_d):
+           need_c=st.integers(0, 64), need_d=st.integers(0, 32),
+           need_bp=st.integers(0, 32), need_bd=st.integers(0, 32))
+    def test_selection_covers_and_is_minimal(Sp, C, Sd, need_c, need_d,
+                                             need_bp, need_bd):
         if Sp == 0 and Sd == 0:
             return              # no servable rows: not a valid cell
         dims = make_dims(Sp=Sp, C=C, Sd=Sd)
@@ -105,4 +164,6 @@ if HAS_HYPOTHESIS:
         need_d = min(need_d, Sd)
         if need_c == 0 and need_d == 0:
             return
-        check_selection(dims, ladder, need_c, need_d)
+        check_selection(dims, ladder, need_c, need_d,
+                        need_bp=need_bp if need_c else 0,
+                        need_bd=need_bd if need_d else 0)

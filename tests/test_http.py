@@ -125,10 +125,13 @@ def test_stats_snapshot(frontend):
     for key in ("ticks", "tokens_retired", "service_rate", "kv_free_rate",
                 "waiting", "running_decode", "preemptions",
                 "waiting_by_class", "prefix_lookups", "prefix_hits",
-                "prefix_tokens_avoided"):
+                "prefix_tokens_avoided", "bucket", "scanned_pages",
+                "live_pages"):
         assert key in rep
     assert stats["tokens_retired"] >= 6
     assert rep["ticks"] > 0
+    assert 0 <= rep["live_pages"] <= rep["scanned_pages"] or \
+        rep["scanned_pages"] == 0    # sim replicas report no attention depth
 
 
 # ---------------------------------------------------------------------------

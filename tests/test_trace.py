@@ -277,6 +277,57 @@ class TestFitFromTrace:
             assert s.stage_time > 0
 
 
+class TestAttnPageTerm:
+    """Per-scanned-page attention billing (DESIGN.md §14): the CostModel
+    mirror of the depth-bucketed engine.  Disabled (attn_page_bytes=0) it is
+    bit-identical to the legacy per-token formula; enabled, the sim, the
+    trace fit, and `calibration_error` all share one page estimator, so a
+    trace minted under the page model fits back to itself."""
+
+    def test_disabled_term_is_legacy_formula(self):
+        base = cost_model_for(get_config("qwen2.5-14b"), pp=4)
+        assert base.attn_page_bytes == 0.0
+        # scanned_pages must be ignored when the term is off
+        assert base.stage_time(64, 8, 400, 900, scanned_pages=10_000) == \
+            base.stage_time(64, 8, 400, 900)
+
+    def test_enabled_term_tracks_pages(self):
+        cfg = get_config("qwen2.5-14b")
+        paged = cost_model_for(cfg, pp=4, page_size=16)
+        assert paged.attn_page_bytes == pytest.approx(
+            16 * paged.kv_bytes_per_ctx_token)
+        # more scanned pages => strictly more memory time (decode is
+        # KV-bound at long context)
+        lo = paged.stage_time(0, 8, 0, 8_000, scanned_pages=100)
+        hi = paged.stage_time(0, 8, 0, 8_000, scanned_pages=100_000)
+        assert hi > lo
+        # the estimator backs the default: explicit == estimated
+        est = paged.est_scanned_pages(0, 8, 0, 8_000)
+        assert paged.stage_time(0, 8, 0, 8_000) == \
+            paged.stage_time(0, 8, 0, 8_000, scanned_pages=est)
+
+    def test_fit_recovers_page_model(self, tmp_path):
+        """Mint a trace under the page-billing model, perturb the
+        efficiencies, fit — the fit must land back on the truth (fit and
+        generation share est_scanned_pages, so the term is identified)."""
+        spec = WorkloadSpec("mix", mean_input=120.0, mean_output=24.0,
+                            sigma=0.6, max_input=256, max_output=48)
+        path = str(tmp_path / "paged.trace.jsonl")
+        sim = record_sim_trace(path, sample_requests(spec, 24, 150.0, seed=3),
+                               pages=512, attn_page_billing=True)
+        base = sim.backend.cost
+        assert base.attn_page_bytes > 0
+        trace = Trace.load(path)
+        perturbed = dataclasses.replace(base, mfu=base.mfu / 3,
+                                        hbm_eff=min(0.99, base.hbm_eff * 1.3),
+                                        fixed_us=base.fixed_us * 5)
+        fitted = CostModel.fit_from_trace(trace, perturbed)
+        assert fitted.attn_page_bytes == base.attn_page_bytes
+        assert calibration_error(trace, fitted) < 0.05
+        assert calibration_error(trace, fitted) < \
+            calibration_error(trace, perturbed)
+
+
 # ---------------------------------------------------------------------------
 # Per-tick host overhead (schema 1.3 `host_s`)
 # ---------------------------------------------------------------------------
