@@ -10,6 +10,9 @@
 #   make prefix-check  sim-only prefix-caching smoke: cache-aware routing
 #                     must beat a cache-blind router on prefill tokens
 #                     avoided without losing mean TTFT
+#   make disagg-check  sim-only disaggregation smoke: the best prefill:decode
+#                     split must not lose to the throttled hybrid on
+#                     interactive goodput or p95 TBT, with handoffs flowing
 #   make examples-check  run the examples end-to-end against the public
 #                     serving API (reduced engine on CPU + the HTTP demo)
 #   make docs-check   run every fenced python block in README.md + docs/
@@ -19,7 +22,8 @@
 #                     plus schema validation of the checked-in
 #                     BENCH_engine.json
 #   make ci           dev-deps + tier-1 + golden traces + rebalance smoke
-#                     + prefix smoke + examples + docs + bench smoke
+#                     + prefix smoke + disagg smoke + examples + docs
+#                     + bench smoke
 #   make bench        fast benchmark sweep (CSV rows on stdout)
 
 PY ?= python
@@ -29,7 +33,7 @@ export PYTHONPATH
 TRACE_FIXTURES := tests/fixtures/traces/prefill_heavy.trace.jsonl \
                   tests/fixtures/traces/decode_saturated.trace.jsonl
 
-.PHONY: dev-deps test trace-check rebalance-check prefix-check \
+.PHONY: dev-deps test trace-check rebalance-check prefix-check disagg-check \
         examples-check docs-check bench-smoke ci bench
 
 dev-deps:
@@ -47,6 +51,9 @@ rebalance-check:
 prefix-check:
 	$(PY) -m benchmarks.fig_prefix_cache --check
 
+disagg-check:
+	$(PY) -m benchmarks.fig_disagg --check
+
 examples-check:
 	$(PY) examples/quickstart.py
 	$(PY) examples/serve_offline.py 8
@@ -60,8 +67,8 @@ bench-smoke:
 	$(PY) benchmarks/bench_engine.py --smoke
 	$(PY) benchmarks/bench_engine.py --validate BENCH_engine.json
 
-ci: dev-deps test trace-check rebalance-check prefix-check examples-check \
-    docs-check bench-smoke
+ci: dev-deps test trace-check rebalance-check prefix-check disagg-check \
+    examples-check docs-check bench-smoke
 
 bench:
 	$(PY) -m benchmarks.run --fast

@@ -1,0 +1,276 @@
+"""Disaggregated prefill/decode serving vs the throttled hybrid
+(DESIGN.md §15): the TD-Pipe question asked on our own stack.
+
+gLLM's Token Throttling balances prefill and decode *within* hybrid
+batches; TD-Pipe argues that *temporally separating* the phases onto
+dedicated replicas wins at high load because prefill chunks stop
+inflating decode ticks (TBT) and decode residents stop starving prefill
+admission (TTFT).  This study runs both cluster shapes from declarative
+`ServeSpec`s on the same prefill-heavy workload:
+
+  hybrid    N mixed replicas, admission balancing + rebalance control
+            plane — the throttled-hybrid baseline this repo is built on
+  P:D       P prefill-role + D decode-role replicas (P+D = N) with the
+            first-decode KV handoff control plane shipping every freshly
+            prefilled request to the decode side
+
+Per SLO class (interactive / batch) each shape reports p95 TTFT, p95 TBT
+(time between tokens ~ TPOT), and goodput — SLO-attaining requests per
+second of makespan.  The ratio sweep traces the frontier: too few
+prefill replicas and TTFT collapses, too few decode replicas and TBT
+does; the interesting question is whether the best ratio beats the
+hybrid at its own game.
+
+`--check` is the CI gate (`make disagg-check`): on the prefill-heavy
+scenario the best disaggregated ratio must not lose to the hybrid on
+interactive goodput, and handoffs must actually flow.
+
+`--engine` runs the same comparison over HTTP on the reduced live
+engine (CPU-sized, smoke-scale): two mixed replicas vs prefill+decode,
+requests POSTed to `/v1/generate`, per-role queue depth and handoff
+counts read back from `GET /v1/stats`.
+
+`--out PATH` writes the sweep as JSON (the checked-in smoke result is
+`BENCH_disagg.json` at the repo root, next to `BENCH_engine.json`).
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core import SLO_BATCH, SLO_INTERACTIVE, SamplingParams
+from repro.data.workload import WorkloadSpec, sample_requests
+from repro.runtime.disagg import HandoffPolicy
+from repro.runtime.router import RebalancePolicy
+from repro.serving import ClusterSpec, ServeSpec, SimSpec, build
+
+# Prefill-heavy: long prompts, outputs long enough that decode residency
+# matters (the regime where phase interference shows — paper Fig. 11's
+# Azure-like shape, scaled to the sim scenario).
+PREFILL_HEAVY = WorkloadSpec("prefill-heavy", mean_input=1200.0,
+                             mean_output=96.0, sigma=0.7)
+
+# Per-class SLO targets for goodput (sim seconds): interactive requests
+# are TTFT- and TBT-bound — the TBT target sits right at the hybrid's
+# observed tail, because decode-tick isolation is exactly what
+# disaggregation sells; batch requests only need a sane token cadence.
+SLOS = {
+    SLO_INTERACTIVE: dict(ttft=2.0, tbt=0.02),
+    SLO_BATCH: dict(ttft=20.0, tbt=0.30),
+}
+
+
+def disagg_arrivals(num_requests: int, rate: float, *, seed: int = 0,
+                    interactive_frac: float = 0.6):
+    """Prefill-heavy Poisson arrivals with an SLO-class mix, in the
+    4-tuple form `SimCluster.run` injects (sampling carries the class)."""
+    base = sample_requests(PREFILL_HEAVY, num_requests, rate, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    out = []
+    for t, prompt, lo in base:
+        cls = (SLO_INTERACTIVE if rng.random() < interactive_frac
+               else SLO_BATCH)
+        out.append((t, prompt, lo,
+                    SamplingParams(max_new_tokens=lo, slo_class=cls)))
+    return out
+
+
+def cluster_spec(roles, *, replicas: int = 4, pp: int = 4,
+                 pages: int = 4096) -> ServeSpec:
+    """The declarative description of one cluster shape: roles=None is
+    the throttled hybrid (+ rebalance control plane); a role tuple turns
+    on the first-decode handoff plane."""
+    handoff = None if roles is None else HandoffPolicy(
+        interval=0.02, handoff_batch=8, max_decode_tokens=8)
+    return ServeSpec(
+        backend="sim",
+        sim=SimSpec(pp=pp, pages=pages),
+        cluster=ClusterSpec(replicas=replicas, route="balanced",
+                            rebalance=RebalancePolicy(),
+                            roles=roles, handoff=handoff))
+
+
+def _per_class(finished, elapsed: float):
+    """{slo_class: {n, goodput, ttft_p95, tbt_p95}} over finished reqs."""
+    out = {}
+    for cls, slo in SLOS.items():
+        reqs = [r for r in finished if r.sampling.slo_class == cls]
+        ttfts = [r.metrics.ttft() for r in reqs
+                 if r.metrics.ttft() is not None]
+        tbts = [r.metrics.tpot(r.num_output_tokens) for r in reqs
+                if r.metrics.tpot(r.num_output_tokens) is not None]
+        ok = sum(1 for r in reqs
+                 if r.metrics.ttft() is not None
+                 and r.metrics.ttft() <= slo["ttft"]
+                 and (r.metrics.tpot(r.num_output_tokens) or 0.0)
+                 <= slo["tbt"])
+        out[cls] = {
+            "n": len(reqs),
+            "goodput": ok / max(elapsed, 1e-9),
+            "ttft_p95": float(np.quantile(ttfts, 0.95)) if ttfts else 0.0,
+            "tbt_p95": float(np.quantile(tbts, 0.95)) if tbts else 0.0,
+        }
+    return out
+
+
+def run_shape(roles, arrivals, *, replicas: int = 4, pp: int = 4,
+              pages: int = 4096):
+    """Build one shape from its spec, serve the arrivals, report."""
+    server = build(cluster_spec(roles, replicas=replicas, pp=pp,
+                                pages=pages))
+    cluster = server.engine
+    finished = cluster.run(arrivals)
+    elapsed = max((r.metrics.finish_time or 0.0) for r in finished)
+    stats = server.stats()
+    report = {
+        "roles": list(roles) if roles is not None else None,
+        "finished": len(finished),
+        "classes": _per_class(finished, elapsed),
+        "queue_depth_by_role": stats.queue_depth_by_role,
+    }
+    if stats.disagg is not None:
+        report["handoffs"] = stats.disagg.handoffs
+        report["handoff_tokens"] = stats.disagg.handoff_tokens
+        report["handoff_fallbacks"] = stats.disagg.fallbacks
+    return report
+
+
+def ratio_roles(p: int, d: int):
+    return ("prefill",) * p + ("decode",) * d
+
+
+def run(verbose: bool = True, *, num_requests: int = 120, rate: float = 24.0,
+        replicas: int = 4, pp: int = 4, pages: int = 4096, seed: int = 0):
+    """The sweep: hybrid baseline, then every P:D split of the fleet."""
+    arrivals = disagg_arrivals(num_requests, rate, seed=seed)
+    shapes = [("hybrid", None)]
+    shapes += [(f"{p}P{replicas - p}D", ratio_roles(p, replicas - p))
+               for p in range(1, replicas)]
+    results = {}
+    rows = []
+    for name, roles in shapes:
+        rep = run_shape(roles, arrivals, replicas=replicas, pp=pp,
+                        pages=pages)
+        results[name] = rep
+        for cls, m in rep["classes"].items():
+            rows.append(csv_row(
+                f"fig_disagg_{name}_{cls}_goodput_rps", m["goodput"],
+                f"ttft_p95={m['ttft_p95']:.3f}s tbt_p95={m['tbt_p95']:.3f}s"
+                + (f" handoffs={rep['handoffs']}" if "handoffs" in rep
+                   else "")))
+    if verbose:
+        for r in rows:
+            print(r)
+    return {"workload": {"num_requests": num_requests, "rate": rate,
+                         "mean_input": PREFILL_HEAVY.mean_input,
+                         "mean_output": PREFILL_HEAVY.mean_output,
+                         "seed": seed},
+            "cluster": {"replicas": replicas, "pp": pp, "pages": pages},
+            "slos": SLOS,
+            "shapes": results}
+
+
+def check(verbose: bool = True) -> bool:
+    """CI smoke gate: on the prefill-heavy scenario the best P:D split
+    must (a) actually hand requests off, and (b) not lose to the
+    throttled hybrid on interactive goodput or interactive p95 TBT."""
+    sweep = run(verbose=False)
+    shapes = sweep["shapes"]
+    hybrid = shapes["hybrid"]["classes"][SLO_INTERACTIVE]
+    best_name, best = max(
+        ((n, s) for n, s in shapes.items() if n != "hybrid"),
+        key=lambda ns: ns[1]["classes"][SLO_INTERACTIVE]["goodput"])
+    bi = best["classes"][SLO_INTERACTIVE]
+    handoffs = best.get("handoffs", 0)
+    ok = (handoffs > 0
+          and bi["goodput"] >= hybrid["goodput"]
+          and bi["tbt_p95"] <= hybrid["tbt_p95"])
+    if verbose:
+        print(f"# disagg-check: hybrid goodput={hybrid['goodput']:.3f}/s "
+              f"tbt_p95={hybrid['tbt_p95']:.3f}s | best={best_name} "
+              f"goodput={bi['goodput']:.3f}/s tbt_p95={bi['tbt_p95']:.3f}s "
+              f"handoffs={handoffs} -> {'OK' if ok else 'FAIL'}")
+    return ok
+
+
+# ---------------------------------------------------------------------------
+# the same comparison over HTTP on the live (reduced) engine
+# ---------------------------------------------------------------------------
+
+def run_http(num_requests: int = 6, *, max_new_tokens: int = 8,
+             verbose: bool = True):
+    """Smoke-scale engine comparison: two mixed replicas vs one prefill +
+    one decode, requests POSTed to `/v1/generate` on the real HTTP
+    frontend, disagg counters read back from `GET /v1/stats`."""
+    import http.client
+
+    from repro.serving import EngineSpec, HTTPFrontend
+
+    def serve(roles):
+        handoff = None if roles is None else HandoffPolicy(
+            interval=0.005, max_decode_tokens=max_new_tokens)
+        spec = ServeSpec(
+            engine=EngineSpec(reduced=True),
+            cluster=ClusterSpec(replicas=2, roles=roles, handoff=handoff))
+        frontend = HTTPFrontend(build(spec), port=0).start()
+        conn = http.client.HTTPConnection(frontend.host, frontend.port)
+        ttfts = []
+        try:
+            rng = np.random.default_rng(0)
+            for i in range(num_requests):
+                body = json.dumps({
+                    "prompt": rng.integers(1, 1000, 24).tolist(),
+                    "max_tokens": max_new_tokens,   # OpenAI alias
+                })
+                conn.request("POST", "/v1/generate", body)
+                resp = json.loads(conn.getresponse().read())
+                assert resp["choices"][0]["finish_reason"] == "length", resp
+                ttfts.append(resp["metrics"]["ttft"])
+            conn.request("GET", "/v1/stats")
+            stats = json.loads(conn.getresponse().read())
+        finally:
+            conn.close()
+            frontend.shutdown()
+        return ttfts, stats
+
+    out = {}
+    for name, roles in (("hybrid", None),
+                        ("disagg", ("prefill", "decode"))):
+        ttfts, stats = serve(roles)
+        out[name] = {
+            "ttft_mean": float(np.mean(ttfts)),
+            "roles": [r["role"] for r in stats["replicas"]],
+            "handoffs": stats.get("disagg", {}).get("handoffs", 0),
+            "queue_depth_by_role": stats.get("queue_depth_by_role"),
+        }
+        if verbose:
+            print(f"# fig_disagg[http/{name}]: mean TTFT "
+                  f"{out[name]['ttft_mean'] * 1e3:.1f}ms roles="
+                  f"{out[name]['roles']} handoffs={out[name]['handoffs']}")
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="CI gate: best disagg ratio must not lose to the "
+                    "throttled hybrid on the prefill-heavy scenario")
+    ap.add_argument("--engine", action="store_true",
+                    help="run the HTTP-on-live-engine comparison (slow)")
+    ap.add_argument("--out", help="write the sim sweep as JSON")
+    args = ap.parse_args()
+    if args.check:
+        raise SystemExit(0 if check() else 1)
+    if args.engine:
+        run_http()
+        raise SystemExit(0)
+    sweep = run()
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump(sweep, fh, indent=2, sort_keys=True)
+            fh.write("\n")

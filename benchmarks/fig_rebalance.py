@@ -111,7 +111,7 @@ def check() -> bool:
     ok = True
     for label, kw, need_migration in (
             ("roomy-pool", dict(rate=45.0), False),
-            ("tight-pool", dict(rate=60.0, pages=2048), True)):
+            ("tight-pool", dict(rate=90.0, pages=1536), True)):
         adm = run_cluster("admission", **kw)
         smg = run_cluster("steal+mig", **kw)
         a, s = adm.ttft_quantile(0.95), smg.ttft_quantile(0.95)

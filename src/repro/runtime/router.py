@@ -43,6 +43,10 @@ import numpy as np
 
 from repro.core import (SLO_BATCH, KVExport, Request, RequestState,
                         SamplingParams)
+from repro.runtime.disagg import (ROLE_MIXED, ROLE_PREFILL, DisaggStats,
+                                  HandoffPolicy, decode_capable,
+                                  handoff_candidates, prefill_capable,
+                                  validate_roles)
 
 
 class RoutingPolicy(enum.Enum):
@@ -80,6 +84,29 @@ class BalanceWeights:
     # in the same currency.  Zero disables cache-aware routing; the term is
     # inert whenever prefix caching is off (probes return 0).
     cache_affinity: float = 1.0
+    # Waiting-queue composition surcharge, per waiting request by SLO
+    # class: `waiting_prefill_tokens` already counts the queue's tokens,
+    # but a queue of interactive requests is *latency debt* (each one has
+    # a TTFT clock running) while an equally deep all-batch queue is not —
+    # the per-request charge makes placement prefer burying new work
+    # behind batch backlog over interactive backlog.
+    interactive_queue: float = 4.0
+    batch_queue: float = 1.0
+    # Blend between static `ReplicaCapacity` hints (0.0) and the
+    # *discovered* per-replica service rate (1.0): when every replica has
+    # retired enough work to report a `SchedulerStats.note_retire` EWMA,
+    # each rate is normalized by the fleet mean and blended over the hint
+    # at this weight.  Discovery closes the loop the static hints only
+    # approximate — a straggler's real throughput deficit is measured,
+    # not declared (fig_rebalance's discovery-only scenarios).  The
+    # default is deliberately conservative: a service rate conflates
+    # capacity with utilization (an under-fed replica *retires* slowly no
+    # matter how fast it could go), so measured rates nudge the score
+    # rather than dominate it; set 1.0 to trust measurement fully on a
+    # cluster you know stays saturated.  Discovery only applies when the
+    # operator declared no capacities at all — explicit hints are truth
+    # and are never diluted by utilization-confounded measurement.
+    discovered_rate: float = 0.25
 
 
 @dataclass(frozen=True)
@@ -189,8 +216,8 @@ class ReplicaSnapshot:
     service_rate: Optional[float] = None
     # Waiting-queue composition by SLO class: a queue of interactive
     # requests is latency debt; an equally deep all-batch queue is not.
-    # Not yet folded into `balance_score` — surfaced for operators and as
-    # the hook for class-aware placement (DESIGN.md §11).
+    # Folded into `balance_score` via `BalanceWeights.interactive_queue` /
+    # `batch_queue` (class-aware placement, DESIGN.md §11).
     waiting_interactive: int = 0
     waiting_batch: int = 0
     # Tokens of the candidate request's prompt whose KV is already cached
@@ -242,7 +269,9 @@ def balance_score(snap: ReplicaSnapshot, prompt_tokens: int,
         weights.cache_affinity * snap.cached_prefix_tokens,
         float(prompt_tokens))
     load = (snap.waiting_prefill_tokens + burden
-            + weights.decode_tokens * snap.running_decode)
+            + weights.decode_tokens * snap.running_decode
+            + weights.interactive_queue * snap.waiting_interactive
+            + weights.batch_queue * snap.waiting_batch)
     activation = kv_activation(weights, snap.kv_threshold)
     free = snap.kv_free_rate
     if snap.projected_kv_free is not None:
@@ -252,6 +281,27 @@ def balance_score(snap: ReplicaSnapshot, prompt_tokens: int,
     shortfall = max(0.0, activation - free) / max(activation, 1e-9)
     pressure = 1.0 + weights.kv_pressure * shortfall
     return load * pressure / max(capacity, 1e-9)
+
+
+def discovered_capacities(snaps: Sequence[ReplicaSnapshot],
+                          static: Sequence[float],
+                          blend: float) -> List[float]:
+    """Effective per-replica capacities: the static hints until *every*
+    replica reports a discovered service rate, then each rate normalized
+    by the fleet mean, blended in at `blend` (1.0 fully replaces the
+    hints).  All-or-nothing on purpose: mixing measured rates with
+    declared hints inside one score vector would compare replicas in two
+    different currencies."""
+    if blend <= 0.0:
+        return list(static)
+    rates = [s.service_rate for s in snaps]
+    if any(r is None or r <= 0.0 for r in rates):
+        return list(static)
+    mean = sum(rates) / len(rates)
+    if mean <= 0.0:
+        return list(static)
+    return [(1.0 - blend) * c + blend * (r / mean)
+            for c, r in zip(static, rates)]
 
 
 @dataclass
@@ -286,6 +336,8 @@ class ReplicaRouter:
         weights: Optional[BalanceWeights] = None,
         capacities: Optional[Sequence[Any]] = None,
         rebalance: Optional[RebalancePolicy] = None,
+        roles: Optional[Sequence[str]] = None,
+        handoff: Optional[HandoffPolicy] = None,
         trace_path: Optional[str] = None,
     ) -> None:
         if not replicas:
@@ -300,13 +352,29 @@ class ReplicaRouter:
             raise ValueError("one capacity per replica")
         self.capacities = [c.scalar() if isinstance(c, ReplicaCapacity)
                            else float(c) for c in self.capacity_hints]
+        # discovery refines the *uniform default*; explicitly declared
+        # hints are operator truth and are never diluted by measured
+        # rates (which conflate capacity with utilization)
+        self._caps_declared = capacities is not None
+        self._caps_eff = list(self.capacities)
+        self.roles = (validate_roles(roles, n) if roles is not None
+                      else (ROLE_MIXED,) * n)
+        # admission is restricted to prefill-capable replicas: a pure
+        # decode replica only ever receives handed-off / migrated work
+        self._admissible = [i for i, r in enumerate(self.roles)
+                            if prefill_capable(r)]
+        self.handoff_policy = handoff
+        self.disagg_stats = DisaggStats()
+        self._handoffs_of: dict = {}        # rid -> times handed off
+        self._next_handoff_due = handoff.interval if handoff is not None \
+            else None
         self._rr_next = 0
         self.routed_counts = [0] * n
         self.rebalance_policy = rebalance
         self.rebalance_stats = RebalanceStats()
         self._next_due = rebalance.interval if rebalance is not None else None
         self._in_transit: List[Tuple[float, int, int, Request, KVExport,
-                                     Any, Any]] = []
+                                     Any, Any, str]] = []
         self._transit_seq = itertools.count()
         self._aborted: List[Request] = []   # aborted while in transit
         self._migrations_of: dict = {}      # rid -> times live-migrated
@@ -337,6 +405,10 @@ class ReplicaRouter:
         }
         if self.rebalance_policy is not None:
             header["rebalance"] = dataclasses.asdict(self.rebalance_policy)
+        if any(r != ROLE_MIXED for r in self.roles):
+            header["roles"] = list(self.roles)
+        if self.handoff_policy is not None:
+            header["handoff"] = dataclasses.asdict(self.handoff_policy)
         self._trace.write(header)
 
     def close_trace(self) -> None:
@@ -352,22 +424,26 @@ class ReplicaRouter:
         apply the `cache_affinity` credit — cache-aware routing."""
         if prompt is not None:
             prompt_tokens = len(prompt)
-        return [balance_score(ReplicaSnapshot.of(r, prompt), prompt_tokens,
-                              self.weights, c)
-                for r, c in zip(self.replicas, self.capacities)]
+        snaps = [ReplicaSnapshot.of(r, prompt) for r in self.replicas]
+        self._caps_eff = discovered_capacities(
+            snaps, self.capacities,
+            0.0 if self._caps_declared else self.weights.discovered_rate)
+        return [balance_score(s, prompt_tokens, self.weights, c)
+                for s, c in zip(snaps, self._caps_eff)]
 
     def select(self, prompt_tokens: int = 0,
                prompt: Optional[Sequence[int]] = None) -> int:
-        """Index of the replica the next request should land on."""
+        """Index of the replica the next request should land on (only
+        prefill-capable replicas are admission candidates)."""
         if prompt is not None:
             prompt_tokens = len(prompt)
         scores: Optional[List[float]] = None
         if self.policy is RoutingPolicy.ROUND_ROBIN:
-            i = self._rr_next
-            self._rr_next = (self._rr_next + 1) % len(self.replicas)
+            i = self._admissible[self._rr_next % len(self._admissible)]
+            self._rr_next = (self._rr_next + 1) % len(self._admissible)
         else:
             scores = self.scores(prompt_tokens, prompt)
-            i = int(np.argmin(scores))
+            i = min(self._admissible, key=lambda j: scores[j])
         self.routed_counts[i] += 1
         if self._trace is not None:
             self._trace.write({"kind": "route", "n": prompt_tokens,
@@ -381,17 +457,25 @@ class ReplicaRouter:
 
     def next_control_event(self) -> Optional[float]:
         """Earliest instant the control plane must run: the next periodic
-        pass, or an in-flight migration completing.  None without a
-        `RebalancePolicy` and nothing in transit."""
+        rebalance or handoff pass, or an in-flight transfer completing.
+        None without any policy and nothing in transit."""
         cands = [t for t, *_ in self._in_transit]
         if self.rebalance_policy is not None and self._next_due is not None:
             cands.append(self._next_due)
+        if self.handoff_policy is not None \
+                and self._next_handoff_due is not None:
+            cands.append(self._next_handoff_due)
         return min(cands) if cands else None
 
     def control_tick(self, now: float) -> None:
-        """Run everything due at `now`: deliver completed migrations, then a
-        rebalance pass if the interval elapsed."""
+        """Run everything due at `now`: deliver completed transfers, then a
+        handoff pass and/or rebalance pass if their intervals elapsed."""
         self._flush_in_transit(now)
+        if self.handoff_policy is not None and now >= self._next_handoff_due:
+            self._handoff_pass(now)
+            interval = self.handoff_policy.interval
+            missed = int((now - self._next_handoff_due) // interval) + 1
+            self._next_handoff_due += missed * interval
         if self.rebalance_policy is None or now < self._next_due:
             return
         self.rebalance(now)
@@ -401,6 +485,58 @@ class ReplicaRouter:
         interval = self.rebalance_policy.interval
         missed = int((now - self._next_due) // interval) + 1
         self._next_due += missed * interval
+
+    # ---------------------------------------------------- first-decode handoff
+    def _handoff_pass(self, now: float) -> None:
+        """One disagg control pass: every prefill-role replica ships its
+        freshly-prefilled requests (first decode: the final chunk sampled
+        the first token, no decode step has run) to the decode-capable
+        replica with the lowest balance score, up to the per-pass cap.
+        Deferred candidates (no destination with KV headroom) stay put —
+        the prefill replica keeps decoding them, and later passes retry
+        until they outgrow `max_decode_tokens`."""
+        pol = self.handoff_policy
+        st = self.disagg_stats
+        st.passes += 1
+        moved = 0
+        for src_i, src in enumerate(self.replicas):
+            if self.roles[src_i] != ROLE_PREFILL:
+                continue
+            for req in handoff_candidates(src, pol, self._handoffs_of):
+                if moved >= pol.handoff_batch:
+                    break
+                dst_i = self._pick_handoff_dst(src_i, req)
+                if dst_i is None:
+                    st.deferred += 1
+                    continue
+                if self._move_request(req.request_id, src_i, dst_i,
+                                      now=now, kind="handoff"):
+                    moved += 1
+        if self._trace is not None and moved:
+            self._trace.write({"kind": "handoff", "now": now,
+                               "moved": moved})
+
+    def _pick_handoff_dst(self, src_i: int, req: Request) -> Optional[int]:
+        """Lowest-balance-score decode-capable replica that can actually
+        take the request: servable, pages allocatable now, and projected
+        KV headroom after absorbing everything it will still write."""
+        best = None
+        best_score = None
+        for i, r in enumerate(self.replicas):
+            if i == src_i or not decode_capable(self.roles[i]):
+                continue
+            if not self._servable_on(r, req):
+                continue
+            if not r.scheduler.kv.can_allocate(req.request_id,
+                                               req.num_prefilled):
+                continue
+            if not self._dst_headroom_ok(r, req):
+                continue
+            score = balance_score(ReplicaSnapshot.of(r), 0, self.weights,
+                                  self._caps_eff[i])
+            if best_score is None or score < best_score:
+                best, best_score = i, score
+        return best
 
     # ------------------------------------------------------------- rebalance
     def _imbalance(self, trigger_ratio: float
@@ -460,8 +596,9 @@ class ReplicaRouter:
         for i, r in enumerate(self.replicas):
             fin = _finished_of(r)
             for req in fin[self._seen_finished[i]:]:
-                # migration counts only matter while the request is alive
+                # move counts only matter while the request is alive
                 self._migrations_of.pop(req.request_id, None)
+                self._handoffs_of.pop(req.request_id, None)
                 if not calibrate:
                     continue
                 n = req.num_output_tokens
@@ -494,16 +631,21 @@ class ReplicaRouter:
                   + self.weights.decode_tokens * bool(req.prefill_done))
         after = balance_score(ReplicaSnapshot.of(self.replicas[dst_i]),
                               int(burden), self.weights,
-                              self.capacities[dst_i])
+                              self._caps_eff[dst_i])
         return after < src_score
 
     def _dst_headroom_ok(self, dst, req: Request) -> bool:
-        """KV-aware destination guard: after absorbing everything this
-        request will still write (remaining prefill + all remaining
+        """KV-aware destination guard for moves that land *resident* state
+        (live migration, first-decode handoff): after absorbing everything
+        this request will still write (remaining prefill + all remaining
         outputs), plus the projected growth of the destination's own decode
-        residents, the pool must stay out of the pressure band — moving
-        work into a pool that is heading for its UT stall trades one hot
-        spot for a worse one (admission there will gate anyway)."""
+        residents, the pool must stay out of the pressure band — shipping
+        KV into a pool that is heading for its UT stall trades one hot
+        spot for a worse one.  Steals of *waiting* requests skip this
+        guard on purpose: they land in the destination's waiting queue
+        with no KV written, the destination's own WT/UT throttle decides
+        when (whether) to start them, and the dst's KV pressure already
+        inflates the `_improves_max` score it must beat."""
         sched = dst.scheduler
         pool = sched.kv.num_pages * sched.kv.page_size
         need = (req.num_effective_prompt_tokens + req.sampling.max_new_tokens
@@ -513,6 +655,17 @@ class ReplicaRouter:
         return projected > kv_activation(self.weights,
                                          sched.cfg.kv_threshold)
 
+    def _role_ok(self, dst_i: int, req: Request) -> bool:
+        """Role guard for rebalance moves: decode residents may only move
+        to decode-capable replicas; anything with prefill still ahead
+        (waiting or mid-prefill) needs a prefill-capable destination —
+        without this the rebalance plane would undo the disagg shape the
+        handoff plane maintains."""
+        role = self.roles[dst_i]
+        if req.state is RequestState.DECODING:
+            return decode_capable(role)
+        return prefill_capable(role)
+
     def _steal_one(self, src_i: int, dst_i: int, now: float,
                    src_score: float) -> bool:
         """Move one *waiting* request (no device state) off the saturated
@@ -520,10 +673,10 @@ class ReplicaRouter:
         destination queue tail."""
         src, dst = self.replicas[src_i], self.replicas[dst_i]
         for req in src.scheduler.steal_candidates():
-            if not self._servable_on(dst, req):
+            if not self._servable_on(dst, req) \
+                    or not self._role_ok(dst_i, req):
                 continue
-            if not self._improves_max(src_i, dst_i, req, src_score) \
-                    or not self._dst_headroom_ok(dst, req):
+            if not self._improves_max(src_i, dst_i, req, src_score):
                 continue
             drained = src.scheduler.drain_request(req.request_id)
             if drained is None:
@@ -532,10 +685,10 @@ class ReplicaRouter:
             # (encoder embeddings) must follow them or the destination
             # prefills without it
             state = src.backend.export_request_state(drained)
-            _record_migrate_out(src, drained.request_id, now)
+            _record_move_out(src, drained.request_id, now, "migrate")
             dst.backend.import_request_state(drained, state, resident=False)
             dst.scheduler.adopt_request(drained)
-            _record_migrate_in(dst, drained, now)
+            _record_move_in(dst, drained, now, "migrate")
             _advance_replica_clock(dst, now)
             self.rebalance_stats.stolen += 1
             return True
@@ -556,20 +709,32 @@ class ReplicaRouter:
         return sched.kv.kv_free_rate <= kv_activation(
             self.weights, sched.cfg.kv_threshold)
 
+    @staticmethod
+    def _remaining_work(req: Request) -> int:
+        """Tokens the request will still produce/consume wherever it runs:
+        unprefilled prompt plus unsampled output (zero prefill remainder
+        for a decode resident)."""
+        return (req.remaining_prefill_tokens
+                + req.sampling.max_new_tokens - req.num_output_tokens)
+
     def _migration_candidates(self, src) -> List[Request]:
         pol = self.rebalance_policy
         if not self._source_pressured(src):
             return []
-        out = [r for r in src.scheduler.running_decode
-               if (r.sampling.max_new_tokens - r.num_output_tokens)
-               >= pol.min_remaining_tokens
+        # decode residents *and* mid-prefill requests are movable: a
+        # partially-prefilled request carries its chunk cursor
+        # (`num_prefilled`) and resident KV — including any adopted prefix
+        # head — through drain/export, and resumes at the right chunk on
+        # the destination (the disagg enabler, DESIGN.md §15)
+        live = list(src.scheduler.running_decode) + [
+            r for r in src.scheduler.running_prefill if r.num_prefilled > 0]
+        out = [r for r in live
+               if self._remaining_work(r) >= pol.min_remaining_tokens
                and self._migrations_of.get(r.request_id, 0)
                < pol.max_request_migrations]
-        # most remaining output first: each transfer should buy the most
+        # most remaining work first: each transfer should buy the most
         # durable relief (ties broken toward smaller resident KV = cheaper)
-        out.sort(key=lambda r: (r.num_output_tokens
-                                - r.sampling.max_new_tokens,
-                                r.num_prefilled))
+        out.sort(key=lambda r: (-self._remaining_work(r), r.num_prefilled))
         return out
 
     def _migrate_one(self, src_i: int, dst_i: int, now: float,
@@ -578,7 +743,8 @@ class ReplicaRouter:
         hand it to `migrate_request`."""
         src, dst = self.replicas[src_i], self.replicas[dst_i]
         for req in self._migration_candidates(src):
-            if not self._servable_on(dst, req):
+            if not self._servable_on(dst, req) \
+                    or not self._role_ok(dst_i, req):
                 continue
             if not dst.scheduler.kv.can_allocate(req.request_id,
                                                  req.num_prefilled):
@@ -599,6 +765,16 @@ class ReplicaRouter:
         request is in flight this tick (the caller may retry next pass).
         Public so operators and tests can force a move the policy would
         not pick."""
+        return self._move_request(rid, src_i, dst_i, now=now,
+                                  kind="migrate")
+
+    def _move_request(self, rid: str, src_i: int, dst_i: int, *,
+                      now: Optional[float] = None,
+                      kind: str = "migrate") -> bool:
+        """Shared mechanism under both planes: `kind` selects the trace
+        record vocabulary and the stats bucket — `"migrate"` for the
+        rebalance control plane, `"handoff"` for the disagg prefill ->
+        decode transfer (identical wire format, distinct intent)."""
         if now is None:
             now = self._clock()
         src = self.replicas[src_i]
@@ -609,10 +785,10 @@ class ReplicaRouter:
             # nothing resident (a waiting request): this is just a steal
             dst = self.replicas[dst_i]
             state = src.backend.export_request_state(drained)
-            _record_migrate_out(src, rid, now)
+            _record_move_out(src, rid, now, kind)
             dst.backend.import_request_state(drained, state, resident=False)
             dst.scheduler.adopt_request(drained)
-            _record_migrate_in(dst, drained, now)
+            _record_move_in(dst, drained, now, kind)
             _advance_replica_clock(dst, now)
             self.rebalance_stats.stolen += 1
             return True
@@ -621,26 +797,33 @@ class ReplicaRouter:
         state = src.backend.export_request_state(drained)
         delay = src.backend.migration_cost(export.num_tokens)
         src.scheduler.kv.free(rid)
-        _record_migrate_out(src, rid, now)
-        self._migrations_of[rid] = self._migrations_of.get(rid, 0) + 1
-        self.rebalance_stats.migrated += 1
-        self.rebalance_stats.migrated_tokens += export.num_tokens
+        _record_move_out(src, rid, now, kind)
+        if kind == "handoff":
+            self._handoffs_of[rid] = self._handoffs_of.get(rid, 0) + 1
+            self.disagg_stats.handoffs += 1
+            self.disagg_stats.handoff_tokens += export.num_tokens
+        else:
+            self._migrations_of[rid] = self._migrations_of.get(rid, 0) + 1
+            self.rebalance_stats.migrated += 1
+            self.rebalance_stats.migrated_tokens += export.num_tokens
         if delay <= 0.0:
-            self._deliver(dst_i, drained, export, payload, state, now)
+            self._deliver(dst_i, drained, export, payload, state, now, kind)
         else:
             heapq.heappush(self._in_transit,
                            (now + delay, next(self._transit_seq), dst_i,
-                            drained, export, payload, state))
+                            drained, export, payload, state, kind))
         return True
 
     def _flush_in_transit(self, now: float) -> None:
         while self._in_transit and self._in_transit[0][0] <= now:
-            at, _, dst_i, req, export, payload, state = heapq.heappop(
+            at, _, dst_i, req, export, payload, state, kind = heapq.heappop(
                 self._in_transit)
-            self._deliver(dst_i, req, export, payload, state, max(at, now))
+            self._deliver(dst_i, req, export, payload, state,
+                          max(at, now), kind)
 
     def _deliver(self, dst_i: int, req: Request, export: KVExport,
-                 payload: Any, state: Any, now: float) -> None:
+                 payload: Any, state: Any, now: float,
+                 kind: str = "migrate") -> None:
         dst = self.replicas[dst_i]
         kv = dst.scheduler.kv
         rid = req.request_id
@@ -663,10 +846,13 @@ class ReplicaRouter:
             # recompute rebuilds recurrent state from scratch, so only
             # recompute-surviving state (encoder embeddings) attaches.
             req.preempt()
-            self.rebalance_stats.migration_fallbacks += 1
+            if kind == "handoff":
+                self.disagg_stats.fallbacks += 1
+            else:
+                self.rebalance_stats.migration_fallbacks += 1
             dst.backend.import_request_state(req, state, resident=False)
         dst.scheduler.adopt_request(req)
-        _record_migrate_in(dst, req, now)
+        _record_move_in(dst, req, now, kind)
         _advance_replica_clock(dst, now)
 
     # ---------------------------------------------------------------- abort
@@ -690,6 +876,7 @@ class ReplicaRouter:
                 self._in_transit.pop(i)
                 heapq.heapify(self._in_transit)
                 self._migrations_of.pop(rid, None)
+                self._handoffs_of.pop(rid, None)
                 req.state = RequestState.FINISHED_ABORTED
                 req.metrics.finish_time = self._clock()
                 self._aborted.append(req)
@@ -697,6 +884,7 @@ class ReplicaRouter:
         for replica in self.replicas:
             if _abort_on_replica(replica, rid):
                 self._migrations_of.pop(rid, None)
+                self._handoffs_of.pop(rid, None)
                 return True
         return False
 
@@ -733,7 +921,8 @@ class ReplicaRouter:
         """One tick on every replica that has work (the single-process
         analogue of N independent driver loops), preceded by any due
         control-plane work on the backend clock."""
-        if self.rebalance_policy is not None or self._in_transit:
+        if self.rebalance_policy is not None \
+                or self.handoff_policy is not None or self._in_transit:
             self.control_tick(self._clock())
         out: List[Request] = []
         for r in self.replicas:
@@ -794,16 +983,16 @@ def _advance_replica_clock(replica, now: float) -> None:
         fn(now)
 
 
-def _record_migrate_out(replica, rid: str, now: float) -> None:
+def _record_move_out(replica, rid: str, now: float, kind: str) -> None:
     rec = getattr(replica, "recorder", None)
     if rec is not None:
-        rec.record_migrate_out(rid, now)
+        rec.record_move_out(rid, now, kind=kind)
 
 
-def _record_migrate_in(replica, req: Request, now: float) -> None:
+def _record_move_in(replica, req: Request, now: float, kind: str) -> None:
     rec = getattr(replica, "recorder", None)
     if rec is not None:
-        rec.record_migrate_in(req, now)
+        rec.record_move_in(req, now, kind=kind)
 
 
 class SimCluster:
@@ -932,29 +1121,34 @@ class SimCluster:
             last = state
         return self._finished_since(marks)
 
-    def run(self, arrivals: Iterable[Tuple[float, List[int], int]],
+    def run(self, arrivals: Iterable[Tuple],
             until: float = float("inf")) -> List[Request]:
-        """arrivals: (time, prompt_tokens, output_len), any order.
-        Returns all finished requests across replicas."""
+        """arrivals: (time, prompt_tokens, output_len[, sampling]), any
+        order — the optional 4th element is a `SamplingParams` (SLO class,
+        priority, ...).  Returns all finished requests across replicas."""
         t = 0.0
-        for t, prompt, out_len in sorted(arrivals, key=lambda a: a[0]):
+        for t, prompt, out_len, *rest in sorted(arrivals,
+                                                key=lambda a: a[0]):
             if t > until:
                 break
             self._advance_to(t)
             i = self.router.select(len(prompt), prompt=prompt)
-            self.sims[i].inject_request(t, prompt, out_len)
-        pol = self.router.rebalance_policy
-        if pol is None:
+            self.sims[i].inject_request(t, prompt, out_len, *rest)
+        intervals = [p.interval for p in (self.router.rebalance_policy,
+                                          self.router.handoff_policy)
+                     if p is not None]
+        if not intervals:
             for sim in self.sims:
                 sim.run(until)
             return self.finished
         # drain with the control plane still ticking: advance in interval
-        # steps so rebalance keeps seeing fresh state until the last replica
-        # goes idle
+        # steps so rebalance/handoff keep seeing fresh state until the last
+        # replica goes idle
+        step = min(intervals)
         for _ in range(10_000_000):
             if not self._cluster_busy or t > until:
                 break
-            t += pol.interval
+            t += step
             self._advance_to(min(t, until))
         for sim in self.sims:
             sim.run(until)

@@ -444,7 +444,8 @@ class PipelineSimulator:
             loop_backend = self.recorder
         self.loop = TickLoop(scheduler, loop_backend)
         self.metrics = self.backend.metrics
-        self._arrivals: List[Tuple[float, int, List[int], int]] = []
+        self._arrivals: List[Tuple[float, int, List[int], int,
+                                   Optional[SamplingParams]]] = []
         self._failures: List[Tuple[float, float]] = []
         self._seq = itertools.count(1)
         # Request-id namespace.  Ids must be unique *cluster*-wide once live
@@ -544,14 +545,19 @@ class PipelineSimulator:
         self.metrics.sim_time = max(self.metrics.sim_time, self.backend.time)
 
     # ------------------------------------------------------------------ intake
-    def add_workload(self, arrivals: List[Tuple[float, List[int], int]]):
-        """arrivals: (time, prompt_tokens, output_len)."""
-        for t, prompt, out_len in arrivals:
-            self.inject_request(t, prompt, out_len)
+    def add_workload(self, arrivals: List[Tuple]):
+        """arrivals: (time, prompt_tokens, output_len[, sampling])."""
+        for t, prompt, out_len, *rest in arrivals:
+            self.inject_request(t, prompt, out_len, *rest)
 
-    def inject_request(self, t: float, prompt: List[int], out_len: int
-                       ) -> None:
-        heapq.heappush(self._arrivals, (t, next(self._seq), prompt, out_len))
+    def inject_request(self, t: float, prompt: List[int], out_len: int,
+                       sampling: Optional[SamplingParams] = None) -> None:
+        """Schedule a future arrival.  `sampling` overrides the default
+        greedy `SamplingParams(max_new_tokens=out_len)` — the hook for
+        SLO-class / priority mixes in cluster studies; when given, its
+        `max_new_tokens` wins over `out_len`."""
+        heapq.heappush(self._arrivals,
+                       (t, next(self._seq), prompt, out_len, sampling))
 
     def inject_failure(self, at: float, downtime: float):
         heapq.heappush(self._failures, (at, downtime))
@@ -599,11 +605,11 @@ class PipelineSimulator:
 
     def _admit_arrivals(self, t: float, until: float) -> None:
         while self._arrivals and self._arrivals[0][0] <= t:
-            at, _, prompt, out_len = heapq.heappop(self._arrivals)
+            at, _, prompt, out_len, sampling = heapq.heappop(self._arrivals)
             if at > until:
                 continue            # past the measurement horizon: dropped
             req = Request(f"{self.rid_prefix}{next(self._seq)}", prompt,
-                          SamplingParams(max_new_tokens=out_len))
+                          sampling or SamplingParams(max_new_tokens=out_len))
             req.metrics.arrival_time = at
             self.metrics.total_input_tokens += len(prompt)
             self.metrics.sim_time = max(self.metrics.sim_time, at)

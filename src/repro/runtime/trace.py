@@ -79,7 +79,7 @@ from repro.runtime.core import ExecResult, ExecutionBackend, TickLoop
 SCHEMA = "gllm-trace"
 ROUTE_SCHEMA = "gllm-route"
 SCHEMA_MAJOR = 1
-SCHEMA_MINOR = 4    # 1.1: "abort" record kind; 1.2: req/migrate carry
+SCHEMA_MINOR = 5    # 1.1: "abort" record kind; 1.2: req/migrate carry
                     # per-request priority + SLO class; 1.3: ticks may carry
                     # "host_s" (per-tick host overhead — engine measures it,
                     # sim models it, RuntimeModel.fit_from_trace calibrates
@@ -88,7 +88,12 @@ SCHEMA_MINOR = 4    # 1.1: "abort" record kind; 1.2: req/migrate carry
                     # "cached" (prefill tokens skipped via adopted cached
                     # prefixes this tick) iff the scheduler has prefix
                     # caching enabled — pre-1.4 traces (and all recordings
-                    # with caching off) keep their exact bytes
+                    # with caching off) keep their exact bytes; 1.5:
+                    # "handoff" record kind (disagg prefill->decode
+                    # transfer, same op=out/in layout as "migrate") and
+                    # compacted ticks may run-length encode "stage_times"
+                    # and exit token lists — raw (non-compact) tick bytes
+                    # are unchanged, so pre-1.5 layouts are preserved
 
 
 class TraceSchemaError(ValueError):
@@ -275,6 +280,47 @@ def _steady_decode_batch(cohort_batch: Dict[str, Any],
                        cohort_batch["decode"]]}
 
 
+def _rle(lst: List[Any]) -> List[List[Any]]:
+    runs: List[List[Any]] = []
+    for v in lst:
+        if runs and runs[-1][0] == v:
+            runs[-1][1] += 1
+        else:
+            runs.append([v, 1])
+    return runs
+
+
+def _rle_expand(runs: Sequence[Sequence[Any]]) -> List[Any]:
+    out: List[Any] = []
+    for v, n in runs:
+        out.extend([v] * int(n))
+    return out
+
+
+def _maybe_rle(lst: Any) -> Any:
+    """Run-length encode a list as `{"r": [[value, count], ...]}` iff the
+    encoding is strictly shorter under the canonical serialization (schema
+    1.5).  Deterministic, so compaction of an expanded stream reproduces
+    the same bytes; a raw list is never a dict, so expansion can always
+    tell the two forms apart."""
+    if not isinstance(lst, list) or len(lst) < 2:
+        return lst
+    enc = {"r": _rle(lst)}
+    if len(dumps_record(enc)) < len(dumps_record(lst)):
+        return enc
+    return lst
+
+
+def _expand_rle_fields(full: Dict[str, Any]) -> None:
+    """Undo `_maybe_rle` on a tick's stage_times / exit token list."""
+    st = full.get("stage_times")
+    if isinstance(st, dict):
+        full["stage_times"] = _rle_expand(st["r"])
+    ex = full.get("exit")
+    if isinstance(ex, dict) and isinstance(ex.get("tokens"), dict):
+        full["exit"] = {**ex, "tokens": _rle_expand(ex["tokens"]["r"])}
+
+
 def compact_records(records: Sequence[Dict[str, Any]]
                     ) -> List[Dict[str, Any]]:
     """Delta-encode a raw trace: each tick keeps only the fields that differ
@@ -315,6 +361,18 @@ def compact_records(records: Sequence[Dict[str, Any]]
         if len(ring) == depth and _is_steady_decode(ring[0]["batch"],
                                                     rec["batch"], depth):
             small["batch"] = STEADY_DECODE
+        # schema 1.5: run-length encode the per-stage latency vector and
+        # the exiting micro-batch's token list when that is a net win —
+        # long decode runs emit [t]*depth latencies and (in sim) constant
+        # token ids every tick, which the field-delta alone cannot touch
+        # because "exit" always differs tick-to-tick
+        if isinstance(small.get("stage_times"), list):
+            small["stage_times"] = _maybe_rle(small["stage_times"])
+        ex = small.get("exit")
+        if isinstance(ex, dict) and isinstance(ex.get("tokens"), list):
+            toks = _maybe_rle(ex["tokens"])
+            if toks is not ex["tokens"]:
+                small["exit"] = {**ex, "tokens": toks}
         prev = rec
         ring.append(rec)
         out.append(small)
@@ -356,6 +414,7 @@ def expand_records(records: Sequence[Dict[str, Any]]
                 raise TraceSchemaError(
                     f"compacted tick {full['tick']} omits {f!r} but no "
                     "previous tick defines it")
+        _expand_rle_fields(full)             # schema 1.5 run-length forms
         counter = full["tick"] + 1
         out.append(full)
         prev = full
@@ -515,19 +574,36 @@ class TraceRecorder(ExecutionBackend):
 
     def record_migrate_out(self, request_id: str, now: float) -> None:
         """The control plane drained a request off this replica (§9)."""
-        self._ensure_header()
-        self.writer.write({"kind": "migrate", "op": "out",
-                           "rid": request_id, "now": now})
+        self.record_move_out(request_id, now, kind="migrate")
 
     def record_migrate_in(self, req: Request, now: float) -> None:
-        """The control plane adopted a request here at its current position.
-        The record embeds the full request state (progress, outputs so far,
-        timing metrics), so this replica's trace replays stand-alone —
-        replay re-materializes the migrant exactly as it arrived."""
+        self.record_move_in(req, now, kind="migrate")
+
+    def record_move_out(self, request_id: str, now: float, *,
+                        kind: str = "migrate") -> None:
+        """The control plane drained a request off this replica — `kind`
+        is "migrate" (§9 rebalance) or "handoff" (schema 1.5: the disagg
+        prefill->decode transfer; identical layout, distinct intent)."""
+        if kind not in ("migrate", "handoff"):
+            raise ValueError(f"unknown move kind {kind!r}")
+        self._ensure_header()
+        self.writer.write({"kind": kind, "op": "out",
+                           "rid": request_id, "now": now})
+
+    def record_move_in(self, req: Request, now: float, *,
+                       kind: str = "migrate") -> None:
+        """The control plane adopted a request here at its current position
+        (possibly mid-prefill: `prefilled` is the chunk cursor the
+        destination resumes from).  The record embeds the full request
+        state (progress, outputs so far, timing metrics), so this
+        replica's trace replays stand-alone — replay re-materializes the
+        migrant exactly as it arrived."""
+        if kind not in ("migrate", "handoff"):
+            raise ValueError(f"unknown move kind {kind!r}")
         self._ensure_header()
         m = req.metrics
         self.writer.write({
-            "kind": "migrate", "op": "in",
+            "kind": kind, "op": "in",
             "rid": req.request_id,
             "now": now,
             "prompt": list(req.prompt_token_ids),
@@ -850,22 +926,25 @@ def replay_trace(trace: Trace, *, mode: str = TraceBackend.STRICT,
                 loop.finished.append(req)
             if recorder is not None:
                 recorder.record_abort(rec["rid"], rec["now"])
-        elif kind == "migrate":
+        elif kind in ("migrate", "handoff"):
             # control-plane moves are applied in stream order, exactly where
-            # the recording interleaved them between ticks (§9)
+            # the recording interleaved them between ticks (§9); "handoff"
+            # (schema 1.5) is the disagg prefill->decode transfer — same
+            # drain/adopt semantics, re-recorded under its own kind
             if rec["op"] == "out":
                 drained = sched.drain_request(rec["rid"])
                 if drained is not None and sched.kv.has_request(rec["rid"]):
                     sched.kv.free(rec["rid"])
                 if recorder is not None:
-                    recorder.record_migrate_out(rec["rid"], rec["now"])
+                    recorder.record_move_out(rec["rid"], rec["now"],
+                                             kind=kind)
             else:
                 req = migrated_request_from_record(rec)
                 if req.num_prefilled:
                     sched.kv.allocate(req.request_id, req.num_prefilled)
                 sched.adopt_request(req)
                 if recorder is not None:
-                    recorder.record_migrate_in(req, rec["now"])
+                    recorder.record_move_in(req, rec["now"], kind=kind)
         elif kind == "route":  # router streams are not tick traces
             raise TraceSchemaError(
                 "route records belong to a gllm-route trace, not a replayable "

@@ -13,6 +13,7 @@ recorded-trace replay, or a globally-balanced multi-replica cluster.
 """
 
 from repro.core import SLO_BATCH, SLO_CLASSES, SLO_INTERACTIVE, SamplingParams
+from repro.runtime.disagg import ROLES, HandoffPolicy
 from repro.runtime.router import RebalancePolicy, ReplicaCapacity
 from repro.serving.build import build
 from repro.serving.http import HTTPFrontend
@@ -43,6 +44,8 @@ __all__ = [
     "SLO_INTERACTIVE",
     "RebalancePolicy",
     "ReplicaCapacity",
+    "HandoffPolicy",
+    "ROLES",
     "build",
     "HTTPFrontend",
     "LLMServer",

@@ -141,6 +141,8 @@ def _wrap_router(spec: ServeSpec, replicas: List[Any],
         weights=weights,
         rebalance=cl.rebalance,
         capacities=cl.capacities,
+        roles=cl.roles,
+        handoff=cl.handoff,
         trace_path=None if record is None else f"{record}.router",
     )
 

@@ -27,7 +27,12 @@ Request fields beyond ``prompt`` map 1:1 onto `SamplingParams` —
 ``stop_token_ids``, and the scheduling class: ``priority`` (int, higher
 admits first within a class) and ``slo_class`` (``"interactive"`` |
 ``"batch"``) — which Token Throttling's admission and preemption honor
-(core/scheduler.py, DESIGN.md §11).
+(core/scheduler.py, DESIGN.md §11).  OpenAI-compatible spellings are
+accepted as aliases: ``max_tokens`` (= max_new_tokens), ``stop`` (= stop
+token ids — prompts are token-id lists, so stops are too), and a
+``"stream": true`` body field (= ``?stream=1``); non-streaming responses
+carry an OpenAI-completions ``choices``/``usage`` shape alongside the
+native fields.
 
 Serve from the launcher::
 
@@ -70,6 +75,15 @@ _SAMPLING_FIELDS = {
     "slo_class": str,
 }
 
+# OpenAI-compatible field names, accepted as aliases of the native ones
+# (prompts stay token-id lists; `stop` is therefore a list of stop token
+# ids, not strings).  `stream` may also arrive as a body field instead of
+# the `?stream=1` query parameter.
+_OPENAI_ALIASES = {
+    "max_tokens": "max_new_tokens",
+    "stop": "stop_token_ids",
+}
+
 
 class BadRequest(ValueError):
     """Client error: reported as a 400 with the message in the body."""
@@ -77,25 +91,42 @@ class BadRequest(ValueError):
 
 def sampling_from_json(body: Dict[str, Any]) -> SamplingParams:
     """`SamplingParams` from a request body's non-``prompt`` fields.
-    Unknown fields are rejected (same contract as the spec layer: a typo'd
-    knob must not silently serve a different request)."""
+    OpenAI-style aliases (`max_tokens`, `stop`) map onto the native
+    names; unknown fields are rejected (same contract as the spec layer:
+    a typo'd knob must not silently serve a different request)."""
     kw = {}
     for name, value in body.items():
-        if name in ("prompt", "request_id"):
+        if name in ("prompt", "request_id", "stream"):
             continue
-        co = _SAMPLING_FIELDS.get(name)
+        native = _OPENAI_ALIASES.get(name, name)
+        co = _SAMPLING_FIELDS.get(native)
         if co is None:
             raise BadRequest(
                 f"unknown request field {name!r}; expected prompt, "
-                f"request_id, or one of {sorted(_SAMPLING_FIELDS)}")
+                f"request_id, stream, one of {sorted(_SAMPLING_FIELDS)}, "
+                f"or an alias {sorted(_OPENAI_ALIASES)}")
+        if native in kw:
+            raise BadRequest(
+                f"field {name!r} duplicates {native!r}; send one or the "
+                "other")
         try:
-            kw[name] = co(value)
+            kw[native] = co(value)
         except (TypeError, ValueError) as e:
             raise BadRequest(f"bad value for {name!r}: {e}")
     try:
         return SamplingParams(**kw)
     except ValueError as e:         # e.g. unknown slo_class
         raise BadRequest(str(e))
+
+
+def stream_requested(body: Dict[str, Any], query: Dict[str, Any]) -> bool:
+    """``?stream=1`` or an OpenAI-style ``"stream": true`` body field."""
+    if query.get("stream", ["0"])[0] in ("1", "true"):
+        return True
+    flag = body.get("stream", False)
+    if not isinstance(flag, bool):
+        raise BadRequest('"stream" must be a JSON boolean')
+    return flag
 
 
 def _prompt_from_json(body: Dict[str, Any]) -> list:
@@ -108,12 +139,27 @@ def _prompt_from_json(body: Dict[str, Any]) -> list:
 
 
 def output_to_json(out: RequestOutput) -> Dict[str, Any]:
+    """Finished-request body: OpenAI-completions-shaped (`choices` +
+    `usage`) with the repo-native fields kept alongside, so both client
+    generations read one response."""
     m = out.metrics
     return {
+        "id": out.request_id,
+        "object": "completion",
         "request_id": out.request_id,
         "prompt_tokens": len(out.prompt_token_ids),
         "token_ids": list(out.token_ids),
         "finish_reason": out.finish_reason,
+        "choices": [{
+            "index": 0,
+            "token_ids": list(out.token_ids),
+            "finish_reason": out.finish_reason,
+        }],
+        "usage": {
+            "prompt_tokens": len(out.prompt_token_ids),
+            "completion_tokens": len(out.token_ids),
+            "total_tokens": len(out.prompt_token_ids) + len(out.token_ids),
+        },
         "metrics": {
             "ttft": m.ttft(),
             "e2el": m.e2el(),
@@ -141,6 +187,11 @@ def stats_to_json(stats) -> Dict[str, Any]:
         out["routed_counts"] = list(stats.routed_counts)
     if stats.rebalance is not None:
         out["rebalance"] = dataclasses.asdict(stats.rebalance)
+    if stats.disagg is not None:
+        # disaggregated deployments (DESIGN.md §15): handoff counters plus
+        # the per-role queue split operators watch to size the role ratio
+        out["disagg"] = dataclasses.asdict(stats.disagg)
+        out["queue_depth_by_role"] = stats.queue_depth_by_role
     return out
 
 
@@ -190,8 +241,7 @@ class _Handler(BaseHTTPRequestHandler):
             prompt = _prompt_from_json(body)
             sampling = sampling_from_json(body)
             rid = body.get("request_id")
-            stream = parse_qs(url.query).get("stream", ["0"])[0] in ("1",
-                                                                     "true")
+            stream = stream_requested(body, parse_qs(url.query))
             if stream:
                 self._stream_generate(prompt, sampling, rid)
             else:

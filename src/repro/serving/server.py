@@ -106,6 +106,9 @@ class ReplicaStats:
     waiting: int
     running_decode: int
     preemptions: int
+    # Disaggregation role of this replica ("prefill" / "decode" / "mixed",
+    # DESIGN.md §15) — "mixed" for single replicas and role-less clusters.
+    role: str = "mixed"
     # Waiting-queue composition by SLO class ({"interactive": n, "batch": m},
     # absent classes omitted) — the signal an operator reads to tell "loaded
     # with latency-sensitive work" from "deep but all-batch" (docs/operations.md)
@@ -130,10 +133,25 @@ class ServerStats:
     replicas: List[ReplicaStats] = field(default_factory=list)
     routed_counts: Optional[List[int]] = None     # clusters only
     rebalance: Optional[Any] = None               # RebalanceStats, if enabled
+    disagg: Optional[Any] = None                  # DisaggStats, if handoff on
 
     @property
     def tokens_retired(self) -> int:
         return sum(r.tokens_retired for r in self.replicas)
+
+    @property
+    def queue_depth_by_role(self) -> Dict[str, Dict[str, int]]:
+        """Per-role aggregate queue signals: how deep the prefill-side
+        admission backlog runs vs. how much decode work the decode side
+        carries — the two queues a disaggregated deployment balances."""
+        out: Dict[str, Dict[str, int]] = {}
+        for r in self.replicas:
+            agg = out.setdefault(r.role, {"replicas": 0, "waiting": 0,
+                                          "running_decode": 0})
+            agg["replicas"] += 1
+            agg["waiting"] += r.waiting
+            agg["running_decode"] += r.running_decode
+        return out
 
 
 def _replicas_of(engine: Any) -> List[Any]:
@@ -425,6 +443,7 @@ class LLMServer:
     # ---------------------------------------------------------------- stats
     def stats(self) -> ServerStats:
         out = ServerStats()
+        roles = getattr(self.router, "roles", None)
         for i, replica in enumerate(self.replicas):
             sched = replica.scheduler
             # iterating the waiting deque must not race a concurrent
@@ -447,6 +466,7 @@ class LLMServer:
                 waiting=len(sched.waiting),
                 running_decode=sched.num_running_decode,
                 preemptions=sched.stats.preemptions,
+                role=roles[i] if roles is not None else "mixed",
                 waiting_by_class=by_class,
                 prefix_lookups=sched.stats.prefix_lookups,
                 prefix_hits=sched.stats.prefix_hits,
@@ -460,6 +480,8 @@ class LLMServer:
             out.routed_counts = list(router.routed_counts)
             if router.rebalance_policy is not None:
                 out.rebalance = router.rebalance_stats
+            if router.handoff_policy is not None:
+                out.disagg = router.disagg_stats
         return out
 
     def close(self) -> None:

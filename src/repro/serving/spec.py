@@ -21,6 +21,7 @@ import json
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Tuple, Union
 
+from repro.runtime.disagg import HandoffPolicy, validate_roles
 from repro.runtime.router import RebalancePolicy, ReplicaCapacity
 
 BACKENDS = ("engine", "sim", "trace")
@@ -108,10 +109,20 @@ class ClusterSpec:
     # None keeps the router default (1.0); 0.0 routes load-only.  Inert
     # unless prefix caching is enabled on the replicas.
     cache_affinity: Optional[float] = None
+    # Disaggregated serving (DESIGN.md §15): one role per replica —
+    # "prefill" / "decode" / "mixed".  None means all mixed (the hybrid
+    # throttled baseline).  Admission goes to prefill-capable replicas
+    # only; `handoff` runs the first-decode KV transfer control plane
+    # that ships freshly-prefilled requests to decode replicas.
+    roles: Optional[Tuple[str, ...]] = None
+    handoff: Optional[HandoffPolicy] = None
 
     def __post_init__(self) -> None:
         if self.replicas < 1:
             raise ValueError("ClusterSpec.replicas must be >= 1")
+        if self.roles is not None:
+            object.__setattr__(self, "roles",
+                               validate_roles(self.roles, self.replicas))
         if self.capacities is not None:
             object.__setattr__(self, "capacities", tuple(self.capacities))
             if len(self.capacities) != self.replicas:
@@ -246,9 +257,13 @@ def spec_from_dict(d: Dict[str, Any]) -> ServeSpec:
         cluster = dict(cluster)
         if cluster.get("rebalance") is not None:
             cluster["rebalance"] = RebalancePolicy(**cluster["rebalance"])
+        if cluster.get("handoff") is not None:
+            cluster["handoff"] = HandoffPolicy(**cluster["handoff"])
         if cluster.get("capacities") is not None:
             cluster["capacities"] = tuple(
                 _decode_capacity(c) for c in cluster["capacities"])
+        if cluster.get("roles") is not None:
+            cluster["roles"] = tuple(cluster["roles"])
         kw["cluster"] = ClusterSpec(**cluster)
     trace = d.pop("trace", None)
     if trace is not None:

@@ -1,0 +1,318 @@
+"""Disaggregated prefill/decode serving (DESIGN.md §15).
+
+Four layers:
+
+  * role vocabulary — `validate_roles` rejects malformed fleets; the spec
+    layer round-trips roles/handoff through JSON exactly;
+  * admission masking — decode-role replicas never receive new requests,
+    under both routing policies;
+  * handoff lifecycle corners — abort mid-handoff leaks nothing, a
+    partially-prefilled request steals/hands off and resumes at the right
+    chunk, a prefix-cache-adopted request survives a handoff;
+  * recording — per-replica traces with `handoff` records strict-replay
+    byte-identically (the engine-level bit-identity test lives in
+    tests/test_engine_migration.py because it needs jax).
+"""
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    PagedKVManager,
+    PipelineScheduler,
+    PrefillPolicy,
+    RequestState,
+    SamplingParams,
+    ThrottleConfig,
+)
+from repro.data.workload import SHAREGPT, sample_requests
+from repro.runtime.disagg import (
+    ROLE_DECODE,
+    ROLE_MIXED,
+    ROLE_PREFILL,
+    ROLES,
+    HandoffPolicy,
+    decode_capable,
+    prefill_capable,
+    validate_roles,
+)
+from repro.runtime.router import ReplicaRouter, SimCluster
+from repro.runtime.simulator import PipelineSimulator, cost_model_for
+
+CFG = get_config("qwen2.5-14b")
+
+
+def make_sim(pp=2, pages=512, page_size=8, caching=False,
+             max_chunk_tokens=1 << 20):
+    th = ThrottleConfig(pipeline_depth=pp, policy=PrefillPolicy.GLLM)
+    kv = PagedKVManager(num_pages=pages, page_size=page_size,
+                        enable_prefix_caching=caching)
+    sched = PipelineScheduler(th, kv, max_model_len=pages * page_size,
+                              max_chunk_tokens=max_chunk_tokens)
+    return PipelineSimulator(sched, pp, cost_model_for(CFG, pp=pp))
+
+
+def pd_cluster(*, pages=512, caching=False, handoff=None, trace_dir=None):
+    """One prefill-role + one decode-role replica with the handoff plane."""
+    sims = [make_sim(pages=pages, caching=caching),
+            make_sim(pages=pages, caching=caching)]
+    router = ReplicaRouter(
+        sims, policy="balanced",
+        roles=(ROLE_PREFILL, ROLE_DECODE),
+        handoff=handoff or HandoffPolicy(interval=0.01,
+                                         max_decode_tokens=8))
+    return SimCluster(sims, router, trace_dir=trace_dir)
+
+
+# ---------------------------------------------------------------------------
+# role vocabulary + spec layer
+# ---------------------------------------------------------------------------
+
+class TestRoles:
+    def test_vocabulary(self):
+        assert ROLES == (ROLE_PREFILL, ROLE_DECODE, ROLE_MIXED)
+        assert prefill_capable(ROLE_PREFILL) and prefill_capable(ROLE_MIXED)
+        assert not prefill_capable(ROLE_DECODE)
+        assert decode_capable(ROLE_DECODE) and decode_capable(ROLE_MIXED)
+        assert not decode_capable(ROLE_PREFILL)
+
+    def test_validate_rejects_unknown_role(self):
+        with pytest.raises(ValueError, match="bogus"):
+            validate_roles(("prefill", "bogus"), 2)
+
+    def test_validate_rejects_wrong_length(self):
+        with pytest.raises(ValueError, match="one role per replica"):
+            validate_roles(("prefill", "decode"), 3)
+
+    def test_validate_rejects_unservable_fleets(self):
+        with pytest.raises(ValueError, match="no decode-capable"):
+            validate_roles(("prefill", "prefill"), 2)
+        with pytest.raises(ValueError, match="no prefill-capable"):
+            validate_roles(("decode", "decode"), 2)
+
+    def test_spec_round_trip_exact(self):
+        from repro.serving import ClusterSpec, ServeSpec
+        spec = ServeSpec(
+            backend="sim",
+            cluster=ClusterSpec(
+                replicas=3, roles=("prefill", "mixed", "decode"),
+                handoff=HandoffPolicy(interval=0.02, handoff_batch=4)))
+        again = ServeSpec.from_json(spec.to_json())
+        assert again == spec
+        assert again.cluster.roles == ("prefill", "mixed", "decode")
+        assert again.cluster.handoff == HandoffPolicy(interval=0.02,
+                                                      handoff_batch=4)
+
+    def test_spec_rejects_unknown_role_value(self):
+        from repro.serving import ClusterSpec
+        with pytest.raises(ValueError, match="unknown replica role"):
+            ClusterSpec(replicas=2, roles=("prefill", "deocde"))
+
+
+# ---------------------------------------------------------------------------
+# admission masking
+# ---------------------------------------------------------------------------
+
+class TestAdmissionMasking:
+    @pytest.mark.parametrize("policy", ["balanced", "rr"])
+    def test_decode_replicas_never_admit(self, policy):
+        sims = [make_sim() for _ in range(3)]
+        router = ReplicaRouter(
+            sims, policy=policy,
+            roles=(ROLE_PREFILL, ROLE_DECODE, ROLE_MIXED),
+            handoff=HandoffPolicy())
+        for _ in range(12):
+            assert router.select(64) != 1
+        assert router.routed_counts[1] == 0
+        assert sum(router.routed_counts) == 12
+
+
+# ---------------------------------------------------------------------------
+# handoff lifecycle
+# ---------------------------------------------------------------------------
+
+def _no_kv_left(cluster):
+    for sim in cluster.sims:
+        assert sim.sched.kv.num_free_pages == sim.sched.kv.num_pages
+
+
+class TestHandoffLifecycle:
+    def test_requests_hand_off_and_finish(self):
+        cluster = pd_cluster()
+        arrivals = [(t, p, o) for t, p, o in
+                    sample_requests(SHAREGPT, 30, 40.0, seed=3)]
+        finished = cluster.run(arrivals)
+        assert len(finished) == 30
+        st = cluster.router.disagg_stats
+        assert st.handoffs > 0 and st.handoff_tokens > 0
+        assert st.fallbacks == 0
+        # the decode replica did the decoding it was handed
+        assert cluster.sims[1].sched.stats.tokens_retired > 0
+        for sim in cluster.sims:
+            sim.sched.check_invariants()
+        for r in finished:
+            assert r.num_output_tokens == r.sampling.max_new_tokens \
+                or r.state.value == "finished_stopped"
+        _no_kv_left(cluster)
+
+    def test_each_request_hands_off_at_most_policy_times(self):
+        cluster = pd_cluster()
+        arrivals = sample_requests(SHAREGPT, 30, 40.0, seed=3)
+        cluster.run(arrivals)
+        # counters are popped as requests finish; the policy cap held if
+        # handoffs never exceeded the request count
+        assert cluster.router.disagg_stats.handoffs <= 30
+
+    def test_abort_mid_handoff_drops_delivery_without_leaks(self):
+        cluster = pd_cluster()
+        sims, router = cluster.sims, cluster.router
+        arrivals = sample_requests(SHAREGPT, 8, 100.0, seed=5)
+        for t, prompt, out_len in arrivals:
+            sims[0].inject_request(t, prompt, out_len)
+        # decode something on the prefill replica, then hand it off so the
+        # KV payload is in transit
+        rid = None
+        for _ in range(80):
+            sims[0].run_until(sims[0].backend.time + 0.05)
+            for cand in list(sims[0].sched.running_decode):
+                if router._move_request(cand.request_id, 0, 1,
+                                        kind="handoff"):
+                    rid = cand.request_id
+                    break
+            if rid is not None:
+                break
+        assert rid is not None, "no decode request became drainable"
+        assert router.has_in_transit
+        assert not sims[0].sched.kv.has_request(rid)
+        # abort while the payload rides the interconnect
+        assert router.abort_request(rid)
+        assert not router.has_in_transit       # delivery dropped
+        assert rid not in router._handoffs_of  # counter retired
+        # nothing may land later: run the cluster dry and check both pools
+        finished = cluster.run([])
+        assert not sims[1].sched.kv.has_request(rid)
+        aborted = [r for r in finished if r.request_id == rid]
+        assert len(aborted) == 1
+        assert aborted[0].state is RequestState.FINISHED_ABORTED
+        assert len(finished) == 8
+        for sim in sims:
+            sim.sched.check_invariants()
+        _no_kv_left(cluster)
+
+    def test_steal_of_partially_prefilled_request(self):
+        # chunk cap forces the prompt through many prefill ticks, opening
+        # drainable windows between chunk retire and next dispatch
+        sims = [make_sim(max_chunk_tokens=256), make_sim()]
+        router = ReplicaRouter(sims, policy="balanced")
+        cluster = SimCluster(sims, router)
+        prompt = list(range(1, 1501))
+        sims[0].inject_request(0.0, prompt, 12)
+        rid = None
+        for _ in range(400):
+            sims[0].step()
+            for cand in list(sims[0].sched.running_prefill):
+                if 0 < cand.num_prefilled < cand.num_effective_prompt_tokens:
+                    if router.migrate_request(cand.request_id, 0, 1):
+                        rid = cand.request_id
+                        break
+            if rid is not None:
+                break
+        assert rid is not None, "never caught the request mid-prefill"
+        router.control_tick(sims[0].backend.time + 1.0)  # deliver
+        req = next(r for r in list(sims[1].sched.running_prefill)
+                   + list(sims[1].sched.waiting) if r.request_id == rid)
+        # progress moved with it: the destination resumes at the chunk
+        # cursor, with exactly the prefilled KV resident
+        assert req.num_prefilled > 0
+        assert sims[1].sched.kv.num_tokens(rid) == req.num_prefilled
+        finished = cluster.run([])
+        assert len(finished) == 1
+        assert finished[0].num_output_tokens == 12
+        for sim in sims:
+            sim.sched.check_invariants()
+        _no_kv_left(cluster)
+
+    def test_handoff_of_prefix_adopted_request(self):
+        cluster = pd_cluster(caching=True)
+        sims, router = cluster.sims, cluster.router
+        prefix = list(range(1, 129))           # 16 full pages of 8
+        first = (0.0, prefix + [200, 201, 202], 4)
+        second = (1.0, prefix + [300, 301, 302], 12)
+        finished = cluster.run([first, second])
+        assert len(finished) == 2
+        sched0 = sims[0].sched
+        assert sched0.stats.prefix_hits >= 1   # second adopted the head
+        assert sched0.stats.prefix_tokens_avoided > 0
+        assert router.disagg_stats.handoffs >= 1
+        for r in finished:
+            assert r.num_output_tokens == r.sampling.max_new_tokens
+        for sim in sims:
+            sim.sched.check_invariants()
+
+    def test_handoff_records_strict_replay(self, tmp_path):
+        from repro.runtime.trace import Trace, check_trace
+        cluster = pd_cluster(trace_dir=str(tmp_path))
+        arrivals = sample_requests(SHAREGPT, 24, 40.0, seed=7)
+        finished = cluster.run(arrivals)
+        assert cluster.router.disagg_stats.handoffs > 0
+        for sim in cluster.sims:
+            sim.recorder.close()
+        cluster.router.close_trace()
+        saw_handoff = 0
+        per_replica = 0
+        for i in range(2):
+            path = str(tmp_path / f"replica{i}.trace.jsonl")
+            trace = Trace.load(path)
+            saw_handoff += sum(1 for r in trace.records
+                               if r["kind"] == "handoff")
+            # strict replay + re-record byte-identity through handoff
+            # records (the §15 guarantee, same bar as §9 migration)
+            report = check_trace(path)
+            per_replica += len(report.finished)
+        assert saw_handoff >= 2        # at least one out + one in
+        assert per_replica == len(finished)
+        # the router stream declares the fleet shape and the moves
+        router_trace = Trace.load(str(tmp_path / "router.trace.jsonl"),
+                                  expect="gllm-route")
+        assert router_trace.header["roles"] == ["prefill", "decode"]
+        assert "handoff" in router_trace.header
+        assert any(r.get("kind") == "handoff"
+                   for r in router_trace.records)
+
+
+# ---------------------------------------------------------------------------
+# serving surface (spec -> build -> stats)
+# ---------------------------------------------------------------------------
+
+class TestServingSurface:
+    def test_stats_surface_roles_and_handoffs(self):
+        from repro.serving import ClusterSpec, ServeSpec, SimSpec, build
+        from repro.serving.http import stats_to_json
+        spec = ServeSpec(
+            backend="sim",
+            sim=SimSpec(pp=2, pages=512, page_size=8),
+            cluster=ClusterSpec(
+                replicas=2, roles=("prefill", "decode"),
+                handoff=HandoffPolicy(interval=0.01, max_decode_tokens=8)))
+        server = build(spec)
+        arrivals = sample_requests(SHAREGPT, 16, 40.0, seed=1)
+        server.engine.run(arrivals)
+        stats = server.stats()
+        assert [r.role for r in stats.replicas] == ["prefill", "decode"]
+        assert stats.disagg is not None and stats.disagg.handoffs > 0
+        depth = stats.queue_depth_by_role
+        assert set(depth) == {"prefill", "decode"}
+        assert depth["prefill"]["replicas"] == 1
+        js = stats_to_json(stats)
+        assert js["disagg"]["handoffs"] == stats.disagg.handoffs
+        assert js["queue_depth_by_role"] == depth
+        assert [r["role"] for r in js["replicas"]] == ["prefill", "decode"]
+
+    def test_role_less_cluster_reports_mixed(self):
+        from repro.serving import ClusterSpec, ServeSpec, SimSpec, build
+        spec = ServeSpec(backend="sim",
+                         sim=SimSpec(pp=2, pages=512, page_size=8),
+                         cluster=ClusterSpec(replicas=2))
+        stats = build(spec).stats()
+        assert [r.role for r in stats.replicas] == ["mixed", "mixed"]
+        assert stats.disagg is None

@@ -89,6 +89,41 @@ def test_migrated_request_matches_dense_reference(pair):
     assert req.output_token_ids == want, (req.output_token_ids, want)
 
 
+def test_mid_prefill_handoff_matches_dense_reference(pair):
+    """The §15 disagg enabler: a request moved *mid-prefill* (chunk cursor
+    and prefilled KV in flight, no decode token yet) must still produce
+    exactly the dense reference's greedy tokens after the destination
+    finishes the remaining chunks and all of decode."""
+    cfg, params, (eng_a, eng_b) = pair
+    router = ReplicaRouter([eng_a, eng_b])
+    rng = np.random.default_rng(7)
+    # several 16-token chunks' worth of prompt (dims.C == 16)
+    prompt = list(rng.integers(0, cfg.vocab_size, 45))
+    max_new = 6
+
+    req = eng_a.add_request(prompt, SamplingParams(max_new_tokens=max_new))
+    moved = False
+    for _ in range(200):
+        eng_a.step()
+        if 0 < req.num_prefilled < req.num_effective_prompt_tokens \
+                and req.num_output_tokens == 0:
+            # same mechanism the first-decode handoff plane uses
+            if router._move_request(req.request_id, 0, 1, kind="handoff"):
+                moved = True
+                break
+    assert moved, "never caught the request between prefill chunks"
+    assert router.disagg_stats.handoffs == 1
+    assert not eng_a.scheduler.kv.has_request(req.request_id)
+    assert eng_b.scheduler.kv.has_request(req.request_id)
+    # exactly the prefilled prefix is resident at the destination
+    assert eng_b.scheduler.kv.num_tokens(req.request_id) == req.num_prefilled
+
+    eng_b.drain(max_ticks=300)
+    assert req.is_finished
+    want = greedy_generate(cfg, params, prompt, max_new)
+    assert req.output_token_ids == want, (req.output_token_ids, want)
+
+
 def test_unmigrated_and_migrated_runs_agree(pair):
     """Two identical prompts, one served in place on A, one migrated to B
     mid-decode: token streams must be identical."""

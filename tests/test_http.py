@@ -159,6 +159,67 @@ def test_unknown_endpoint_404(frontend):
 
 
 # ---------------------------------------------------------------------------
+# OpenAI-compatible request/response surface
+# ---------------------------------------------------------------------------
+
+def test_openai_completion_shape(frontend):
+    """The response body carries an OpenAI-completions shape (`id`,
+    `object`, `choices`, `usage`) alongside the repo-native fields."""
+    out = _json(_post(frontend.url + "/v1/generate",
+                      {"prompt": [1, 2, 3, 4], "max_new_tokens": 5}))
+    assert out["object"] == "completion"
+    assert out["id"] == out["request_id"]
+    choice = out["choices"][0]
+    assert choice["index"] == 0
+    assert choice["token_ids"] == out["token_ids"]
+    assert choice["finish_reason"] == "length"
+    assert out["usage"] == {"prompt_tokens": 4, "completion_tokens": 5,
+                            "total_tokens": 9}
+
+
+def test_openai_max_tokens_alias(frontend):
+    out = _json(_post(frontend.url + "/v1/generate",
+                      {"prompt": [1, 2, 3], "max_tokens": 4}))
+    assert out["finish_reason"] == "length"
+    assert len(out["token_ids"]) == 4
+
+
+def test_openai_stop_alias(frontend):
+    """`stop` maps onto the native token-id stop list; this prompt's
+    first sampled token is deterministic in the sim, so stopping on it
+    ends the request after one token with finish_reason="stop"."""
+    first = _json(_post(frontend.url + "/v1/generate",
+                        {"prompt": [7] * 6, "max_new_tokens": 3}))
+    tok = first["token_ids"][0]
+    out = _json(_post(frontend.url + "/v1/generate",
+                      {"prompt": [7] * 6, "max_new_tokens": 8,
+                       "stop": [tok]}))
+    assert out["finish_reason"] == "stop"
+    assert out["token_ids"] == [tok]
+
+
+def test_openai_stream_body_flag(frontend):
+    """`"stream": true` in the body is equivalent to `?stream=1`."""
+    resp = _post(frontend.url + "/v1/generate",
+                 {"prompt": [5, 6, 7], "max_new_tokens": 3, "stream": True})
+    assert resp.headers["Content-Type"] == "text/event-stream"
+    frames = list(_sse_frames(resp))
+    assert frames[-1]["finish_reason"] == "length"
+
+
+@pytest.mark.parametrize("body,match", [
+    ({"prompt": [1], "max_tokens": 2, "max_new_tokens": 2},
+     "duplicates"),
+    ({"prompt": [1], "stream": "yes"}, "stream"),
+])
+def test_openai_alias_misuse_is_400(frontend, body, match):
+    with pytest.raises(urllib.error.HTTPError) as e:
+        _post(frontend.url + "/v1/generate", body)
+    assert e.value.code == 400
+    assert match in json.loads(e.value.read())["error"]
+
+
+# ---------------------------------------------------------------------------
 # spec-driven heterogeneous cluster over HTTP
 # ---------------------------------------------------------------------------
 

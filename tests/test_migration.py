@@ -270,10 +270,10 @@ def _hetero_cluster(rebalance, *, pp=4, pages=2048, trace_dir=None):
 
 class TestClusterMigration:
     def test_control_plane_completes_everything_and_moves_work(self):
-        cluster = _hetero_cluster(RebalancePolicy())
-        arrivals = sample_requests(SHAREGPT, 120, 60.0, seed=0)
+        cluster = _hetero_cluster(RebalancePolicy(), pages=1536)
+        arrivals = sample_requests(SHAREGPT, 150, 90.0, seed=0)
         finished = cluster.run(arrivals)
-        assert len(finished) == 120
+        assert len(finished) == 150
         rs = cluster.router.rebalance_stats
         assert rs.passes > 0
         assert rs.stolen + rs.migrated > 0
@@ -289,9 +289,9 @@ class TestClusterMigration:
 
     def test_migration_events_round_trip_through_traces(self, tmp_path):
         from repro.runtime.trace import Trace, check_trace, replay_trace
-        cluster = _hetero_cluster(RebalancePolicy(),
+        cluster = _hetero_cluster(RebalancePolicy(), pages=1536,
                                   trace_dir=str(tmp_path))
-        arrivals = sample_requests(SHAREGPT, 120, 60.0, seed=0)
+        arrivals = sample_requests(SHAREGPT, 150, 90.0, seed=0)
         finished = cluster.run(arrivals)
         assert cluster.router.rebalance_stats.migrated > 0
         for sim in cluster.sims:

@@ -24,9 +24,9 @@ def test_steal_plus_migrate_beats_admission_only_p95():
 
 
 def test_tight_pool_exercises_live_migration():
-    adm = run_cluster("admission", 60.0, pages=2048, num_requests=150,
+    adm = run_cluster("admission", 90.0, pages=1536, num_requests=150,
                       seed=0)
-    smg = run_cluster("steal+mig", 60.0, pages=2048, num_requests=150,
+    smg = run_cluster("steal+mig", 90.0, pages=1536, num_requests=150,
                       seed=0)
     rs = smg.router.rebalance_stats
     assert rs.migrated > 0 and rs.migrated_tokens > 0

@@ -37,6 +37,26 @@ def test_balanced_beats_round_robin_on_p95_ttft(hetero):
     assert counts[0] != counts[1] or hetero == "depth"
 
 
+def test_declared_capacities_are_never_diluted_by_discovery():
+    """Measured service rates conflate capacity with utilization, so
+    discovery refines only the *uniform default* — a fleet with explicit
+    capacity hints keeps them verbatim no matter what the EWMAs say."""
+    cfg = get_config("qwen2.5-14b")
+    from repro.runtime.router import ReplicaRouter
+    fast, slow = make_hetero_pair("slow", cfg=cfg, slow_factor=2.5)
+
+    declared = ReplicaRouter([fast, slow], capacities=[1.0, 0.4])
+    for sim in (fast, slow):   # plant asymmetric measured rates
+        sim.sched.stats.service_rate = 100.0
+    slow.sched.stats.service_rate = 10.0
+    declared.scores(prompt_tokens=64)
+    assert declared._caps_eff == [1.0, 0.4]
+
+    undeclared = ReplicaRouter([fast, slow])
+    undeclared.scores(prompt_tokens=64)
+    assert undeclared._caps_eff[0] > undeclared._caps_eff[1]
+
+
 def test_discovery_only_cases_use_no_capacity_hints():
     """`kv` and `depth` wins come purely from the scheduler signals the
     paper's Token Throttling exposes — pin that so the benchmark cannot
