@@ -13,6 +13,12 @@
 #   make disagg-check  sim-only disaggregation smoke: the best prefill:decode
 #                     split must not lose to the throttled hybrid on
 #                     interactive goodput or p95 TBT, with handoffs flowing
+#   make autoscale-check  sim-only elasticity smoke: the autoscaled fleet
+#                     must hold the static fleet's interactive SLO
+#                     attainment at <= 75% of its replica-seconds, with
+#                     scale-ups and retirements both demonstrably firing
+#                     (the fleet-scale soak itself runs in tier-1;
+#                     REPRO_SOAK_REPLICAS caps its CI fleet, default 16)
 #   make examples-check  run the examples end-to-end against the public
 #                     serving API (reduced engine on CPU + the HTTP demo)
 #   make docs-check   run every fenced python block in README.md + docs/
@@ -20,10 +26,10 @@
 #   make bench-smoke  seconds-scale run of the engine perf harness (all
 #                     four dispatch/shape variants, bit-identity asserted)
 #                     plus schema validation of the checked-in
-#                     BENCH_engine.json
+#                     BENCH_engine.json and BENCH_autoscale.json
 #   make ci           dev-deps + tier-1 + golden traces + rebalance smoke
-#                     + prefix smoke + disagg smoke + examples + docs
-#                     + bench smoke
+#                     + prefix smoke + disagg smoke + autoscale smoke
+#                     + examples + docs + bench smoke
 #   make bench        fast benchmark sweep (CSV rows on stdout)
 
 PY ?= python
@@ -34,7 +40,7 @@ TRACE_FIXTURES := tests/fixtures/traces/prefill_heavy.trace.jsonl \
                   tests/fixtures/traces/decode_saturated.trace.jsonl
 
 .PHONY: dev-deps test trace-check rebalance-check prefix-check disagg-check \
-        examples-check docs-check bench-smoke ci bench
+        autoscale-check examples-check docs-check bench-smoke ci bench
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -54,6 +60,9 @@ prefix-check:
 disagg-check:
 	$(PY) -m benchmarks.fig_disagg --check
 
+autoscale-check:
+	$(PY) -m benchmarks.fig_autoscale --check
+
 examples-check:
 	$(PY) examples/quickstart.py
 	$(PY) examples/serve_offline.py 8
@@ -66,9 +75,10 @@ docs-check:
 bench-smoke:
 	$(PY) benchmarks/bench_engine.py --smoke
 	$(PY) benchmarks/bench_engine.py --validate BENCH_engine.json
+	$(PY) -m benchmarks.fig_autoscale --validate BENCH_autoscale.json
 
 ci: dev-deps test trace-check rebalance-check prefix-check disagg-check \
-    examples-check docs-check bench-smoke
+    autoscale-check examples-check docs-check bench-smoke
 
 bench:
 	$(PY) -m benchmarks.run --fast

@@ -1,0 +1,321 @@
+"""Elastic fleet vs peak-provisioned static fleet (DESIGN.md §16).
+
+gLLM balances work *within* a fleet; this study asks what the fleet costs.
+Production load is not flat — diurnal swings and flash crowds move the
+request rate by integer factors — so a static fleet must be sized for its
+peak and then burns replica-hours all night serving the trough.  The
+autoscaler on the router control plane (`AutoscalePolicy`) grows the fleet
+on sustained queue/KV pressure and shrinks it by draining (mask from
+admission, steal waiting work, live-migrate residents, retire), so the
+fleet tracks the load curve instead of its maximum.
+
+Two cluster shapes from declarative `ServeSpec`s per scenario:
+
+  static      `peak` replicas, admission balancing only — the fleet an
+              operator provisions when the only tool is peak sizing
+  autoscaled  starts at `start` replicas with `AutoscalePolicy(max_
+              replicas=peak)` — same ceiling, elastic floor
+
+Scenarios: a diurnal sinusoid (trough -> peak -> trough) and a flash crowd
+(steady base rate with a hard step), both with an interactive/batch SLO
+class mix.  Per fleet we report per-class SLO attainment (the shared
+`attainment_by_class` definition — same numbers as `GET /v1/stats` and
+fig_disagg) and *replica-seconds*, the integral of fleet size over the
+serving window (`AutoscaleStats.replica_seconds`; a draining replica still
+counts until retired).
+
+`--check` is the CI gate (`make autoscale-check`), reduced scale: on every
+scenario the autoscaled fleet must match the static fleet's interactive
+attainment while spending <= 75% of its replica-seconds.
+
+The full run (no flags) sizes the fleet at O(100) replicas and writes
+`BENCH_autoscale.json` at the repo root; `--validate PATH` re-validates a
+checked-in document's schema (`make bench-smoke`).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Dict
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core import SLO_BATCH, SLO_INTERACTIVE, SamplingParams
+from repro.data.workload import diurnal_requests, flash_crowd_requests
+from repro.runtime.autoscale import (
+    DEFAULT_SLOS,
+    AutoscalePolicy,
+    attainment_by_class,
+)
+from repro.serving import ClusterSpec, ServeSpec, SimSpec, build
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+BENCH_SCHEMA = "repro-bench-autoscale/1"
+
+# The shared per-class targets: one definition across the stats surface and
+# every benchmark that reports attainment (tests pin this identity).
+SLOS = DEFAULT_SLOS
+
+SCENARIOS = ("diurnal", "flash_crowd")
+
+
+def _with_classes(base, *, interactive_frac: float = 0.6, seed: int = 0):
+    """Attach the SLO-class mix: 3-tuples from the workload generators ->
+    the 4-tuple form `SimCluster.run` injects (sampling carries the
+    class)."""
+    rng = np.random.default_rng(seed + 1)
+    out = []
+    for t, prompt, lo in base:
+        cls = (SLO_INTERACTIVE if rng.random() < interactive_frac
+               else SLO_BATCH)
+        out.append((t, prompt, lo,
+                    SamplingParams(max_new_tokens=lo, slo_class=cls)))
+    return out
+
+
+def scenario_arrivals(name: str, *, duration: float, peak_rate: float,
+                      base_rate: float, seed: int = 0):
+    """One elastic-serving stressor, classes attached.  `diurnal` sweeps a
+    full sinusoid trough->peak->trough; `flash_crowd` steps from the base
+    rate to the peak for a fifth of the window with no leading edge."""
+    # Long decode residency (relative to the tight per-replica KV pool in
+    # `fleet_spec`): each resident parks a few hundred KV tokens for its
+    # whole decode, so concurrency — not raw token rate — is what the
+    # fleet must be sized for.
+    shape = dict(mean_input=96.0, mean_output=192.0, max_output=512)
+    if name == "diurnal":
+        base = diurnal_requests(duration, base_rate=base_rate,
+                                peak_rate=peak_rate, seed=seed, **shape)
+    elif name == "flash_crowd":
+        base = flash_crowd_requests(
+            duration, base_rate=base_rate, spike_rate=peak_rate,
+            spike_start=duration * 0.3, spike_len=duration * 0.2,
+            seed=seed, **shape)
+    else:
+        raise ValueError(f"unknown scenario {name!r}")
+    return _with_classes(base, seed=seed)
+
+
+def fleet_spec(*, replicas: int, peak: int, elastic: bool, pp: int = 2,
+               pages: int = 256, page_size: int = 8) -> ServeSpec:
+    """Declarative description of one fleet.  The elastic fleet gets the
+    same `peak` ceiling the static fleet is provisioned at — the study
+    varies the floor, not the capacity.  Per-replica KV is deliberately
+    tight (page budget ~2k tokens): a replica saturates at a couple dozen
+    residents, so the load curve translates into fleet-size demand rather
+    than vanishing into one replica's slack."""
+    autoscale = AutoscalePolicy(
+        interval=0.1, min_replicas=1, max_replicas=peak,
+        target_queue=2.0, up_cooldown=0.2, down_cooldown=2.0,
+        max_step_up=max(8, peak // 4)) if elastic else None
+    return ServeSpec(
+        backend="sim",
+        sim=SimSpec(pp=pp, pages=pages, page_size=page_size),
+        cluster=ClusterSpec(replicas=replicas, route="balanced",
+                            autoscale=autoscale))
+
+
+def run_fleet(arrivals, *, replicas: int, peak: int, elastic: bool,
+              pp: int = 2, pages: int = 256) -> Dict[str, Any]:
+    """Build one fleet from its spec, serve the arrivals, report
+    attainment + replica-seconds."""
+    server = build(fleet_spec(replicas=replicas, peak=peak,
+                              elastic=elastic, pp=pp, pages=pages))
+    cluster = server.engine
+    finished = cluster.run(arrivals)
+    elapsed = max((r.metrics.finish_time or 0.0) for r in finished)
+    report: Dict[str, Any] = {
+        "start_replicas": replicas,
+        "finished": len(finished),
+        "elapsed_s": elapsed,
+        "classes": attainment_by_class(finished, SLOS, elapsed=elapsed),
+    }
+    if elastic:
+        st = cluster.router.autoscale_stats
+        report["replica_seconds"] = st.replica_seconds(replicas, 0.0,
+                                                       elapsed)
+        report["peak_replicas"] = max(
+            [replicas] + [size for _, kind, size in st.events
+                          if kind != "drain"])
+        report["scale_ups"] = st.scale_ups
+        report["replicas_added"] = st.replicas_added
+        report["retired"] = st.retired
+        report["drain_moves"] = st.drain_moves
+    else:
+        report["replica_seconds"] = replicas * elapsed
+        report["peak_replicas"] = replicas
+    return report
+
+
+def run_scenario(name: str, *, peak: int, start: int, duration: float,
+                 peak_rate: float, base_rate: float,
+                 seed: int = 0) -> Dict[str, Any]:
+    """Static-vs-autoscaled on one load curve.  `rs_ratio` is the cost
+    axis (autoscaled replica-seconds over static); the gate additionally
+    reads interactive attainment out of `classes`."""
+    arrivals = scenario_arrivals(name, duration=duration,
+                                 peak_rate=peak_rate, base_rate=base_rate,
+                                 seed=seed)
+    static = run_fleet(arrivals, replicas=peak, peak=peak, elastic=False)
+    auto = run_fleet(arrivals, replicas=start, peak=peak, elastic=True)
+    return {
+        "arrivals": len(arrivals),
+        "duration_s": duration,
+        "base_rate": base_rate,
+        "peak_rate": peak_rate,
+        "static": static,
+        "autoscaled": auto,
+        "rs_ratio": auto["replica_seconds"]
+        / max(static["replica_seconds"], 1e-9),
+    }
+
+
+def _gate(sc: Dict[str, Any]) -> bool:
+    """The acceptance bar: interactive attainment no worse than the
+    peak-provisioned fleet, at <= 75% of its replica-seconds."""
+    a = sc["autoscaled"]["classes"][SLO_INTERACTIVE]["attainment"]
+    s = sc["static"]["classes"][SLO_INTERACTIVE]["attainment"]
+    return a >= s and sc["rs_ratio"] <= 0.75
+
+
+def run(verbose: bool = True, *, peak: int = 96, start: int = 12,
+        duration: float = 40.0, peak_rate: float = 400.0,
+        base_rate: float = 10.0, seed: int = 0) -> Dict[str, Any]:
+    """Both scenarios at one fleet scale.  Defaults are the full O(100)
+    study; `check()` re-runs it reduced."""
+    scenarios = {}
+    rows = []
+    for name in SCENARIOS:
+        sc = run_scenario(name, peak=peak, start=start, duration=duration,
+                          peak_rate=peak_rate, base_rate=base_rate,
+                          seed=seed)
+        sc["gate"] = _gate(sc)
+        scenarios[name] = sc
+        for fleet in ("static", "autoscaled"):
+            m = sc[fleet]["classes"][SLO_INTERACTIVE]
+            rows.append(csv_row(
+                f"fig_autoscale_{name}_{fleet}_interactive_attainment",
+                m["attainment"],
+                f"ttft_p95={m['ttft_p95']:.3f}s "
+                f"replica_seconds={sc[fleet]['replica_seconds']:.1f}"))
+        rows.append(csv_row(
+            f"fig_autoscale_{name}_replica_seconds_ratio", sc["rs_ratio"],
+            f"peak={sc['autoscaled']['peak_replicas']}"
+            f"/{sc['static']['peak_replicas']} replicas, "
+            f"gate={'OK' if sc['gate'] else 'FAIL'}"))
+    if verbose:
+        for r in rows:
+            print(r)
+    return {
+        "schema": BENCH_SCHEMA,
+        "cluster": {"peak": peak, "start": start, "pp": 2, "pages": 256,
+                    "page_size": 8, "seed": seed},
+        "slos": SLOS,
+        "scenarios": scenarios,
+    }
+
+
+def check(verbose: bool = True) -> bool:
+    """CI smoke gate (`make autoscale-check`), reduced scale: every
+    scenario must pass `_gate` — attainment held at <= 75% of the static
+    fleet's replica-seconds — *and* demonstrably exercise the elastic
+    loop (scale-ups and retirements both fired; a load too light to grow
+    the fleet would pass the cost gate without testing anything)."""
+    doc = run(verbose=False, peak=12, start=2, duration=30.0,
+              peak_rate=30.0, base_rate=2.0)
+    ok = True
+    for name, sc in doc["scenarios"].items():
+        auto = sc["autoscaled"]
+        a = auto["classes"][SLO_INTERACTIVE]["attainment"]
+        s = sc["static"]["classes"][SLO_INTERACTIVE]["attainment"]
+        good = (sc["gate"] and auto["replicas_added"] > 0
+                and auto["retired"] > 0)
+        ok = ok and good
+        if verbose:
+            print(f"# autoscale-check[{name}]: interactive attainment "
+                  f"auto={a:.3f} static={s:.3f} "
+                  f"replica_seconds_ratio={sc['rs_ratio']:.3f} "
+                  f"(peak {auto['peak_replicas']}"
+                  f"/{sc['static']['peak_replicas']} replicas, "
+                  f"+{auto['replicas_added']}/-{auto['retired']}) "
+                  f"-> {'OK' if good else 'FAIL'}")
+    return ok
+
+
+def validate(doc: Dict[str, Any]) -> None:
+    """Schema check for BENCH_autoscale.json (no external deps): raises
+    ValueError with the offending path on any violation."""
+    def need(cond, path, msg):
+        if not cond:
+            raise ValueError(f"BENCH_autoscale.json invalid at {path}: "
+                             f"{msg}")
+
+    need(doc.get("schema") == BENCH_SCHEMA, "schema",
+         f"expected {BENCH_SCHEMA!r}, got {doc.get('schema')!r}")
+    need(isinstance(doc.get("cluster"), dict), "cluster", "missing dict")
+    for k in ("peak", "start", "seed"):
+        need(k in doc["cluster"], f"cluster.{k}", "missing")
+    need(isinstance(doc.get("slos"), dict), "slos", "missing dict")
+    need(isinstance(doc.get("scenarios"), dict), "scenarios",
+         "missing dict")
+    need(set(doc["scenarios"]) == set(SCENARIOS), "scenarios",
+         f"expected {sorted(SCENARIOS)}, got {sorted(doc['scenarios'])}")
+    for name, sc in doc["scenarios"].items():
+        p = f"scenarios.{name}"
+        need(sc.get("gate") is True, f"{p}.gate",
+             "checked-in result must pass the attainment/cost gate")
+        need(0.0 < sc.get("rs_ratio", -1.0) <= 0.75, f"{p}.rs_ratio",
+             "autoscaled fleet must spend <= 75% of static "
+             "replica-seconds")
+        for fleet in ("static", "autoscaled"):
+            rep = sc.get(fleet)
+            need(isinstance(rep, dict), f"{p}.{fleet}", "missing dict")
+            for k in ("finished", "elapsed_s", "replica_seconds",
+                      "peak_replicas"):
+                need(isinstance(rep.get(k), (int, float)),
+                     f"{p}.{fleet}.{k}",
+                     f"missing or non-numeric: {rep.get(k)!r}")
+            cls = rep.get("classes", {})
+            for c in (SLO_INTERACTIVE, SLO_BATCH):
+                need(isinstance(cls.get(c), dict), f"{p}.{fleet}."
+                     f"classes.{c}", "missing dict")
+                att = cls[c].get("attainment")
+                need(isinstance(att, (int, float)) and 0.0 <= att <= 1.0,
+                     f"{p}.{fleet}.classes.{c}.attainment",
+                     "out of [0, 1]")
+        auto = sc["autoscaled"]
+        need(auto.get("replicas_added", 0) > 0, f"{p}.autoscaled."
+             "replicas_added", "elastic run must actually scale up")
+        need(auto.get("retired", 0) > 0, f"{p}.autoscaled.retired",
+             "elastic run must actually scale back down")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--check", action="store_true",
+                    help="CI gate: autoscaled fleet must hold interactive "
+                    "attainment at <= 75% of static replica-seconds")
+    ap.add_argument("--validate", type=Path, default=None, metavar="PATH",
+                    help="only validate an existing bench document and "
+                    "exit")
+    ap.add_argument("--out", type=Path, default=None,
+                    help=f"output path (default: {REPO_ROOT}/"
+                    "BENCH_autoscale.json)")
+    args = ap.parse_args()
+    if args.validate is not None:
+        validate(json.loads(args.validate.read_text()))
+        print(f"{args.validate}: valid {BENCH_SCHEMA}")
+        raise SystemExit(0)
+    if args.check:
+        raise SystemExit(0 if check() else 1)
+    doc = run()
+    validate(doc)
+    out = args.out or REPO_ROOT / "BENCH_autoscale.json"
+    with open(out, "w") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"# wrote {out}")

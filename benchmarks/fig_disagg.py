@@ -43,6 +43,7 @@ import numpy as np
 from benchmarks.common import csv_row
 from repro.core import SLO_BATCH, SLO_INTERACTIVE, SamplingParams
 from repro.data.workload import WorkloadSpec, sample_requests
+from repro.runtime.autoscale import DEFAULT_SLOS, attainment_by_class
 from repro.runtime.disagg import HandoffPolicy
 from repro.runtime.router import RebalancePolicy
 from repro.serving import ClusterSpec, ServeSpec, SimSpec, build
@@ -53,14 +54,12 @@ from repro.serving import ClusterSpec, ServeSpec, SimSpec, build
 PREFILL_HEAVY = WorkloadSpec("prefill-heavy", mean_input=1200.0,
                              mean_output=96.0, sigma=0.7)
 
-# Per-class SLO targets for goodput (sim seconds): interactive requests
-# are TTFT- and TBT-bound — the TBT target sits right at the hybrid's
-# observed tail, because decode-tick isolation is exactly what
-# disaggregation sells; batch requests only need a sane token cadence.
-SLOS = {
-    SLO_INTERACTIVE: dict(ttft=2.0, tbt=0.02),
-    SLO_BATCH: dict(ttft=20.0, tbt=0.30),
-}
+# Per-class SLO targets for goodput (sim seconds): the shared table from
+# the autoscale module — one definition across `GET /v1/stats`,
+# fig_autoscale, and this study (the interactive TBT target sits right at
+# the hybrid's observed tail, because decode-tick isolation is exactly
+# what disaggregation sells).
+SLOS = DEFAULT_SLOS
 
 
 def disagg_arrivals(num_requests: int, rate: float, *, seed: int = 0,
@@ -93,27 +92,10 @@ def cluster_spec(roles, *, replicas: int = 4, pp: int = 4,
                             roles=roles, handoff=handoff))
 
 
-def _per_class(finished, elapsed: float):
-    """{slo_class: {n, goodput, ttft_p95, tbt_p95}} over finished reqs."""
-    out = {}
-    for cls, slo in SLOS.items():
-        reqs = [r for r in finished if r.sampling.slo_class == cls]
-        ttfts = [r.metrics.ttft() for r in reqs
-                 if r.metrics.ttft() is not None]
-        tbts = [r.metrics.tpot(r.num_output_tokens) for r in reqs
-                if r.metrics.tpot(r.num_output_tokens) is not None]
-        ok = sum(1 for r in reqs
-                 if r.metrics.ttft() is not None
-                 and r.metrics.ttft() <= slo["ttft"]
-                 and (r.metrics.tpot(r.num_output_tokens) or 0.0)
-                 <= slo["tbt"])
-        out[cls] = {
-            "n": len(reqs),
-            "goodput": ok / max(elapsed, 1e-9),
-            "ttft_p95": float(np.quantile(ttfts, 0.95)) if ttfts else 0.0,
-            "tbt_p95": float(np.quantile(tbts, 0.95)) if tbts else 0.0,
-        }
-    return out
+# The shared per-class attainment/goodput report (tests pin this
+# identity: fig_disagg and fig_autoscale must score requests the same
+# way the stats surface does).
+_per_class = attainment_by_class
 
 
 def run_shape(roles, arrivals, *, replicas: int = 4, pp: int = 4,
@@ -128,7 +110,7 @@ def run_shape(roles, arrivals, *, replicas: int = 4, pp: int = 4,
     report = {
         "roles": list(roles) if roles is not None else None,
         "finished": len(finished),
-        "classes": _per_class(finished, elapsed),
+        "classes": _per_class(finished, SLOS, elapsed=elapsed),
         "queue_depth_by_role": stats.queue_depth_by_role,
     }
     if stats.disagg is not None:

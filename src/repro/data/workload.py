@@ -11,7 +11,7 @@ distribution", §4.1).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -114,6 +114,103 @@ def shared_prefix_requests(
         suffix = rng.integers(0, vocab, int(ls)).tolist()
         out.append((float(t), prefixes[int(p)] + suffix, int(lo)))
     return out
+
+
+def _thinned_arrivals(rng: np.random.Generator, rate_fn, peak_rate: float,
+                      duration: float) -> List[float]:
+    """Non-homogeneous Poisson arrivals over [0, duration) by thinning: draw
+    candidates at the constant `peak_rate` envelope, keep each candidate at
+    time t with probability rate_fn(t)/peak_rate."""
+    out: List[float] = []
+    t = 0.0
+    inv = 1.0 / max(peak_rate, 1e-9)
+    while True:
+        t += float(rng.exponential(inv))
+        if t >= duration:
+            return out
+        if rng.random() * peak_rate < rate_fn(t):
+            out.append(t)
+
+
+def diurnal_requests(
+    duration: float,
+    *,
+    base_rate: float,
+    peak_rate: float,
+    period: Optional[float] = None,
+    mean_input: float = 64.0,
+    mean_output: float = 32.0,
+    sigma: float = 0.6,
+    max_input: int = 2048,
+    max_output: int = 512,
+    seed: int = 0,
+    vocab: int = 32000,
+) -> List[Tuple[float, List[int], int]]:
+    """Diurnal load: the arrival rate follows one (by default) full sinusoid
+    cycle between `base_rate` (trough) and `peak_rate` over `duration`
+    seconds, starting at the trough.  This is the canonical elastic-serving
+    shape — a peak-provisioned static fleet idles through the trough while
+    an autoscaled fleet tracks the curve (benchmarks/fig_autoscale.py)."""
+    if peak_rate < base_rate:
+        raise ValueError("peak_rate must be >= base_rate")
+    period = duration if period is None else period
+    rng = np.random.default_rng(seed)
+    mid = (base_rate + peak_rate) / 2.0
+    amp = (peak_rate - base_rate) / 2.0
+
+    def rate(t: float) -> float:
+        # trough at t=0, peak at t=period/2
+        return mid - amp * np.cos(2.0 * np.pi * t / period)
+
+    arrivals = _thinned_arrivals(rng, rate, peak_rate, duration)
+    return _fill_lengths(rng, arrivals, mean_input, mean_output, sigma,
+                         max_input, max_output, vocab)
+
+
+def flash_crowd_requests(
+    duration: float,
+    *,
+    base_rate: float,
+    spike_rate: float,
+    spike_start: float,
+    spike_len: float,
+    mean_input: float = 64.0,
+    mean_output: float = 32.0,
+    sigma: float = 0.6,
+    max_input: int = 2048,
+    max_output: int = 512,
+    seed: int = 0,
+    vocab: int = 32000,
+) -> List[Tuple[float, List[int], int]]:
+    """Flash crowd: steady `base_rate` with a step to `spike_rate` on
+    [spike_start, spike_start + spike_len) — the worst case for reactive
+    scaling (no leading edge to anticipate) and the soak tests' stressor."""
+    if spike_rate < base_rate:
+        raise ValueError("spike_rate must be >= base_rate")
+    rng = np.random.default_rng(seed)
+
+    def rate(t: float) -> float:
+        in_spike = spike_start <= t < spike_start + spike_len
+        return spike_rate if in_spike else base_rate
+
+    arrivals = _thinned_arrivals(rng, rate, spike_rate, duration)
+    return _fill_lengths(rng, arrivals, mean_input, mean_output, sigma,
+                         max_input, max_output, vocab)
+
+
+def _fill_lengths(rng: np.random.Generator, arrivals: List[float],
+                  mean_input: float, mean_output: float, sigma: float,
+                  max_input: int, max_output: int,
+                  vocab: int) -> List[Tuple[float, List[int], int]]:
+    n = len(arrivals)
+    if n == 0:
+        return []
+    in_lens = np.clip(_lognormal(rng, mean_input, sigma, n),
+                      4, max_input).astype(int)
+    out_lens = np.clip(_lognormal(rng, mean_output, sigma, n),
+                       1, max_output).astype(int)
+    return [(float(t), rng.integers(0, vocab, int(li)).tolist(), int(lo))
+            for t, li, lo in zip(arrivals, in_lens, out_lens)]
 
 
 def multi_turn_requests(

@@ -69,6 +69,19 @@ def validate_roles(roles: Sequence[str], num_replicas: int
     return out
 
 
+def retirable(roles: Sequence[str], i: int) -> bool:
+    """May replica `i` be drained and retired without breaking the fleet's
+    role cover?  The surviving set must still satisfy `validate_roles`'
+    liveness conditions: at least one prefill-capable replica (or new
+    requests could never be admitted) and at least one decode-capable one
+    (or prefilled requests could never decode).  The autoscaler checks
+    this before choosing a drain victim — the last prefill- or
+    decode-capable replica of a disaggregated fleet is never retired."""
+    rest = [r for j, r in enumerate(roles) if j != i]
+    return (any(prefill_capable(r) for r in rest)
+            and any(decode_capable(r) for r in rest))
+
+
 @dataclass(frozen=True)
 class HandoffPolicy:
     """When a prefill-role replica ships a freshly-prefilled request to a

@@ -37,16 +37,20 @@ import enum
 import heapq
 import itertools
 from dataclasses import dataclass
-from typing import Any, Iterable, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, Iterable, List, Optional, Sequence,
+                    Tuple)
 
 import numpy as np
 
 from repro.core import (SLO_BATCH, KVExport, Request, RequestState,
                         SamplingParams)
+from repro.runtime.autoscale import (AutoscalePolicy, AutoscaleStats,
+                                     fleet_pressure, replica_pressure,
+                                     scale_up_step)
 from repro.runtime.disagg import (ROLE_MIXED, ROLE_PREFILL, DisaggStats,
                                   HandoffPolicy, decode_capable,
                                   handoff_candidates, prefill_capable,
-                                  validate_roles)
+                                  retirable, validate_roles)
 
 
 class RoutingPolicy(enum.Enum):
@@ -338,6 +342,8 @@ class ReplicaRouter:
         rebalance: Optional[RebalancePolicy] = None,
         roles: Optional[Sequence[str]] = None,
         handoff: Optional[HandoffPolicy] = None,
+        autoscale: Optional[AutoscalePolicy] = None,
+        replica_factory: Optional[Callable[[int], Any]] = None,
         trace_path: Optional[str] = None,
     ) -> None:
         if not replicas:
@@ -346,6 +352,14 @@ class ReplicaRouter:
         self.policy = RoutingPolicy(policy)
         self.weights = weights or BalanceWeights()
         n = len(self.replicas)
+        # The replica set is *elastic* (§16): every piece of per-replica
+        # bookkeeping that outlives a single pass is keyed by a stable
+        # replica ordinal (`replica_ids[i]`), never by position — positions
+        # shift when a replica retires.  The parallel positional lists
+        # (`capacities`, `roles`, `_caps_eff`, ...) are mutated together in
+        # `add_replica` / `_retire` only.
+        self.replica_ids: List[int] = list(range(n))
+        self._next_ordinal = n
         self.capacity_hints = list(capacities) if capacities is not None \
             else [1.0] * n
         if len(self.capacity_hints) != n:
@@ -359,31 +373,72 @@ class ReplicaRouter:
         self._caps_eff = list(self.capacities)
         self.roles = (validate_roles(roles, n) if roles is not None
                       else (ROLE_MIXED,) * n)
-        # admission is restricted to prefill-capable replicas: a pure
-        # decode replica only ever receives handed-off / migrated work
-        self._admissible = [i for i, r in enumerate(self.roles)
-                            if prefill_capable(r)]
         self.handoff_policy = handoff
         self.disagg_stats = DisaggStats()
         self._handoffs_of: dict = {}        # rid -> times handed off
         self._next_handoff_due = handoff.interval if handoff is not None \
             else None
         self._rr_next = 0
-        self.routed_counts = [0] * n
+        self._routed_by_id: Dict[int, int] = {o: 0 for o in self.replica_ids}
         self.rebalance_policy = rebalance
         self.rebalance_stats = RebalanceStats()
         self._next_due = rebalance.interval if rebalance is not None else None
+        # elastic lifecycle: the autoscaler pass, draining ordinals, and
+        # replicas retired (kept for finished-request accounting)
+        self.autoscale_policy = autoscale
+        self.autoscale_stats = AutoscaleStats()
+        self.replica_factory = replica_factory
+        self._add_hooks: List[Callable[[Any, int, float], None]] = []
+        self._draining: set = set()         # ordinals mid-drain
+        self._next_drain_due: Optional[float] = None
+        self.retired: List[Any] = []
+        self._next_autoscale_due = autoscale.interval \
+            if autoscale is not None else None
+        self._pressure_ewma: Optional[float] = None
+        self._last_scale_up = -float("inf")
+        self._last_scale_down = 0.0     # first drain waits a full cooldown
+        # in-transit entries address the destination by *ordinal* — the
+        # replica list can change while a payload is on the wire, and a
+        # delivery to a retired/draining destination is re-homed at flush
         self._in_transit: List[Tuple[float, int, int, Request, KVExport,
                                      Any, Any, str]] = []
         self._transit_seq = itertools.count()
         self._aborted: List[Request] = []   # aborted while in transit
         self._migrations_of: dict = {}      # rid -> times live-migrated
-        self._seen_finished = [0] * n
+        self._seen_finished: Dict[int, int] = {o: 0 for o in self.replica_ids}
         self._ewma_output: Optional[float] = None
         self._calib_count = 0
         self._trace = None
         if trace_path is not None:
             self.open_trace(trace_path)
+
+    # ------------------------------------------------------- replica indexing
+    @property
+    def _admissible(self) -> List[int]:
+        """Admission candidates: prefill-capable (a pure decode replica only
+        ever receives handed-off / migrated work) and not draining (a
+        draining replica is masked from new placements)."""
+        return [i for i, r in enumerate(self.roles)
+                if prefill_capable(r)
+                and self.replica_ids[i] not in self._draining]
+
+    def _serving(self) -> List[int]:
+        """Indices counted toward fleet capacity: not draining."""
+        return [i for i in range(len(self.replicas))
+                if self.replica_ids[i] not in self._draining]
+
+    def _index_of(self, ordinal: int) -> Optional[int]:
+        try:
+            return self.replica_ids.index(ordinal)
+        except ValueError:
+            return None
+
+    @property
+    def routed_counts(self) -> List[int]:
+        """Requests placed on each *current* replica, position-aligned with
+        `self.replicas` (backed by ordinal-keyed counters, so the list stays
+        correct as the fleet grows and shrinks)."""
+        return [self._routed_by_id[o] for o in self.replica_ids]
 
     # ---------------------------------------------------------------- tracing
     def open_trace(self, sink) -> None:
@@ -409,6 +464,8 @@ class ReplicaRouter:
             header["roles"] = list(self.roles)
         if self.handoff_policy is not None:
             header["handoff"] = dataclasses.asdict(self.handoff_policy)
+        if self.autoscale_policy is not None:
+            header["autoscale"] = dataclasses.asdict(self.autoscale_policy)
         self._trace.write(header)
 
     def close_trace(self) -> None:
@@ -438,13 +495,14 @@ class ReplicaRouter:
         if prompt is not None:
             prompt_tokens = len(prompt)
         scores: Optional[List[float]] = None
+        admissible = self._admissible
         if self.policy is RoutingPolicy.ROUND_ROBIN:
-            i = self._admissible[self._rr_next % len(self._admissible)]
-            self._rr_next = (self._rr_next + 1) % len(self._admissible)
+            i = admissible[self._rr_next % len(admissible)]
+            self._rr_next = (self._rr_next + 1) % len(admissible)
         else:
             scores = self.scores(prompt_tokens, prompt)
-            i = min(self._admissible, key=lambda j: scores[j])
-        self.routed_counts[i] += 1
+            i = min(admissible, key=lambda j: scores[j])
+        self._routed_by_id[self.replica_ids[i]] += 1
         if self._trace is not None:
             self._trace.write({"kind": "route", "n": prompt_tokens,
                                "scores": scores, "replica": i})
@@ -465,26 +523,48 @@ class ReplicaRouter:
         if self.handoff_policy is not None \
                 and self._next_handoff_due is not None:
             cands.append(self._next_handoff_due)
+        if self.autoscale_policy is not None \
+                and self._next_autoscale_due is not None:
+            cands.append(self._next_autoscale_due)
+        if self._next_drain_due is not None:
+            # active drains need periodic control ticks to push moves and
+            # retire even when no policy supplies a cadence
+            cands.append(self._next_drain_due)
         return min(cands) if cands else None
 
     def control_tick(self, now: float) -> None:
-        """Run everything due at `now`: deliver completed transfers, then a
-        handoff pass and/or rebalance pass if their intervals elapsed."""
+        """Run everything due at `now`: deliver completed transfers, push
+        active drains forward, then a handoff / rebalance / autoscale pass
+        if their intervals elapsed."""
         self._flush_in_transit(now)
+        if self._draining:
+            self._drain_pass(now)
+        if self._next_drain_due is not None:
+            if not self._draining:
+                self._next_drain_due = None
+            elif now >= self._next_drain_due:
+                interval = self._drain_interval()
+                missed = int((now - self._next_drain_due) // interval) + 1
+                self._next_drain_due += missed * interval
         if self.handoff_policy is not None and now >= self._next_handoff_due:
             self._handoff_pass(now)
             interval = self.handoff_policy.interval
             missed = int((now - self._next_handoff_due) // interval) + 1
             self._next_handoff_due += missed * interval
-        if self.rebalance_policy is None or now < self._next_due:
-            return
-        self.rebalance(now)
-        # re-anchor arithmetically: engine clocks are time.monotonic(), so
-        # `now` can be arbitrarily far past the virtual-time-zero anchor —
-        # a += loop would spin once per elapsed interval
-        interval = self.rebalance_policy.interval
-        missed = int((now - self._next_due) // interval) + 1
-        self._next_due += missed * interval
+        if self.rebalance_policy is not None and now >= self._next_due:
+            self.rebalance(now)
+            # re-anchor arithmetically: engine clocks are time.monotonic(),
+            # so `now` can be arbitrarily far past the virtual-time-zero
+            # anchor — a += loop would spin once per elapsed interval
+            interval = self.rebalance_policy.interval
+            missed = int((now - self._next_due) // interval) + 1
+            self._next_due += missed * interval
+        if self.autoscale_policy is not None \
+                and now >= self._next_autoscale_due:
+            self._autoscale_pass(now)
+            interval = self.autoscale_policy.interval
+            missed = int((now - self._next_autoscale_due) // interval) + 1
+            self._next_autoscale_due += missed * interval
 
     # ---------------------------------------------------- first-decode handoff
     def _handoff_pass(self, now: float) -> None:
@@ -525,6 +605,8 @@ class ReplicaRouter:
         for i, r in enumerate(self.replicas):
             if i == src_i or not decode_capable(self.roles[i]):
                 continue
+            if self.replica_ids[i] in self._draining:
+                continue
             if not self._servable_on(r, req):
                 continue
             if not r.scheduler.kv.can_allocate(req.request_id,
@@ -545,8 +627,13 @@ class ReplicaRouter:
         move, else None."""
         pol = self.rebalance_policy
         scores = self.scores(0)
+        # a draining replica may *shed* load (src) but never receive it —
+        # the drain pass is emptying it
+        serving = self._serving()
+        if not serving:
+            return None
         src = int(np.argmax(scores))
-        dst = int(np.argmin(scores))
+        dst = min(serving, key=lambda j: scores[j])
         if src == dst:
             return None
         if scores[src] - scores[dst] < pol.min_score_gap:
@@ -593,9 +680,9 @@ class ReplicaRouter:
         first, long ones dominate the drain tail)."""
         pol = self.rebalance_policy
         calibrate = pol is not None and pol.calibrate_decode_weight
-        for i, r in enumerate(self.replicas):
+        for ordinal, r in zip(self.replica_ids, self.replicas):
             fin = _finished_of(r)
-            for req in fin[self._seen_finished[i]:]:
+            for req in fin[self._seen_finished.get(ordinal, 0):]:
                 # move counts only matter while the request is alive
                 self._migrations_of.pop(req.request_id, None)
                 self._handoffs_of.pop(req.request_id, None)
@@ -608,7 +695,7 @@ class ReplicaRouter:
                     self._ewma_output = float(n)
                 else:
                     self._ewma_output += alpha * (n - self._ewma_output)
-            self._seen_finished[i] = len(fin)
+            self._seen_finished[ordinal] = len(fin)
         if calibrate and self._ewma_output is not None:
             self.weights = dataclasses.replace(
                 self.weights,
@@ -810,16 +897,44 @@ class ReplicaRouter:
             self._deliver(dst_i, drained, export, payload, state, now, kind)
         else:
             heapq.heappush(self._in_transit,
-                           (now + delay, next(self._transit_seq), dst_i,
+                           (now + delay, next(self._transit_seq),
+                            self.replica_ids[dst_i],
                             drained, export, payload, state, kind))
         return True
 
     def _flush_in_transit(self, now: float) -> None:
         while self._in_transit and self._in_transit[0][0] <= now:
-            at, _, dst_i, req, export, payload, state, kind = heapq.heappop(
+            at, _, dst_ord, req, export, payload, state, kind = heapq.heappop(
                 self._in_transit)
+            dst_i = self._index_of(dst_ord)
+            if dst_i is None or dst_ord in self._draining:
+                # the destination drained/retired while the payload was on
+                # the wire: re-home the delivery instead of dropping it —
+                # the source already freed its pages, so this host-held
+                # copy is the only live form of the request
+                dst_i = self._rehome_dst(req)
+                self.autoscale_stats.rehomed += 1
             self._deliver(dst_i, req, export, payload, state,
                           max(at, now), kind)
+
+    def _rehome_dst(self, req: Request) -> int:
+        """Pick a fresh destination for an orphaned in-transit delivery:
+        lowest-score serving replica whose role can hold the request (the
+        `_deliver` fallback path absorbs any KV shortfall by degrading to
+        recompute admission, so headroom is a preference, not a guard)."""
+        cands = [i for i in self._serving()
+                 if self._role_ok(i, req)
+                 and self._servable_on(self.replicas[i], req)]
+        if not cands:   # no serving replica fits: any serving role-ok one
+            cands = [i for i in self._serving() if self._role_ok(i, req)]
+        if not cands:
+            raise RuntimeError(
+                f"no serving replica can adopt in-transit request "
+                f"{req.request_id!r}")
+        scores = self.scores(0)
+        good = [i for i in cands
+                if self._dst_headroom_ok(self.replicas[i], req)]
+        return min(good or cands, key=lambda i: scores[i])
 
     def _deliver(self, dst_i: int, req: Request, export: KVExport,
                  payload: Any, state: Any, now: float,
@@ -854,6 +969,267 @@ class ReplicaRouter:
         dst.scheduler.adopt_request(req)
         _record_move_in(dst, req, now, kind)
         _advance_replica_clock(dst, now)
+
+    # ------------------------------------------------- elastic lifecycle (§16)
+    def add_replica_hook(self, fn: Callable[[Any, int, float], None]) -> None:
+        """Register `fn(replica, ordinal, now)` to run on every replica the
+        autoscaler adds — the integration seam: `SimCluster` namespaces the
+        rid stream and attaches the per-replica trace; `LLMServer` wires
+        token/preempt callbacks."""
+        self._add_hooks.append(fn)
+
+    def add_replica(self, now: Optional[float] = None) -> int:
+        """Grow the fleet by one replica from `replica_factory` (role
+        `mixed`, unit capacity — elastic replicas are the homogeneous pool;
+        heterogeneous hints belong to the static fleet).  Returns the new
+        replica's index."""
+        if self.replica_factory is None:
+            raise RuntimeError("ReplicaRouter has no replica_factory; "
+                               "cannot scale up")
+        if now is None:
+            now = self._clock()
+        ordinal = self._next_ordinal
+        self._next_ordinal += 1
+        replica = self.replica_factory(ordinal)
+        self.replicas.append(replica)
+        self.replica_ids.append(ordinal)
+        self.capacity_hints.append(1.0)
+        self.capacities.append(1.0)
+        self._caps_eff.append(1.0)
+        self.roles = self.roles + (ROLE_MIXED,)
+        self._routed_by_id[ordinal] = 0
+        self._seen_finished[ordinal] = 0
+        for hook in self._add_hooks:
+            hook(replica, ordinal, now)
+        rec = getattr(replica, "recorder", None)
+        if rec is not None:     # first record of the newborn's trace stream
+            rec.record_scale_event("scale_up", now)
+        self.autoscale_stats.replicas_added += 1
+        self.autoscale_stats.note(now, "scale_up", len(self._serving()))
+        if self._trace is not None:
+            self._trace.write({"kind": "scale_up", "now": now,
+                               "replica": ordinal,
+                               "fleet": len(self._serving())})
+        return len(self.replicas) - 1
+
+    def start_drain(self, i: int, now: Optional[float] = None) -> None:
+        """Begin retiring replica `i`: mask it from admission and from
+        control-plane destinations; subsequent control ticks move its work
+        off (waiting requests are stolen, residents live-migrated) and
+        retire it once empty.  Refuses a drain that would leave the serving
+        fleet without prefill or decode cover (§15 roles)."""
+        ordinal = self.replica_ids[i]
+        if ordinal in self._draining:
+            raise ValueError(f"replica {ordinal} is already draining")
+        if now is None:
+            now = self._clock()
+        serving = self._serving()
+        serving_roles = [self.roles[j] for j in serving]
+        if len(serving) <= 1 or not retirable(serving_roles,
+                                              serving.index(i)):
+            raise ValueError(
+                f"draining replica {ordinal} would leave the fleet without "
+                f"prefill or decode cover (serving roles: {serving_roles})")
+        self._draining.add(ordinal)
+        if self._next_drain_due is None:
+            self._next_drain_due = now + self._drain_interval()
+        self.autoscale_stats.drains_started += 1
+        self.autoscale_stats.note(now, "drain", len(self._serving()))
+        _record_scale(self.replicas[i], "drain", now)
+        if self._trace is not None:
+            self._trace.write({"kind": "drain", "now": now,
+                               "replica": ordinal,
+                               "fleet": len(self._serving())})
+
+    def _drain_interval(self) -> float:
+        """Cadence of drain pushes: the autoscaler's interval when the
+        drain came from the policy loop, a fixed 50ms for manual drains."""
+        return (self.autoscale_policy.interval
+                if self.autoscale_policy is not None else 0.05)
+
+    def _drain_dst(self, victim_i: int, req: Request) -> Optional[int]:
+        """Destination for work leaving a draining replica.  Unlike the
+        rebalance plane's moves, drains are *mandatory* — the victim must
+        empty — so headroom is a preference, not a gate: prefer serving
+        replicas whose projected KV absorbs the request, but fall back to
+        any serving role-compatible one (`_deliver` degrades to recompute
+        admission if its pool shrank by arrival time)."""
+        cands = [i for i in self._serving()
+                 if i != victim_i and self._role_ok(i, req)
+                 and self._servable_on(self.replicas[i], req)]
+        if not cands:
+            return None
+        scores = self.scores(0)
+        good = [i for i in cands
+                if self._dst_headroom_ok(self.replicas[i], req)]
+        return min(good or cands, key=lambda i: scores[i])
+
+    def _drain_move(self, victim_i: int, dst_i: int, req: Request,
+                    now: float) -> bool:
+        """One forced move off a draining replica (kept as a single seam so
+        chaos tests can fault-inject a broken drain)."""
+        return self._move_request(req.request_id, victim_i, dst_i,
+                                  now=now, kind="migrate")
+
+    def _drain_pass(self, now: float) -> None:
+        """Push every active drain forward: move the victim's waiting queue
+        and resident prefill/decode state to serving replicas (up to
+        `drain_batch` per pass — in-flight requests are undrainable this
+        tick and retry next pass), then retire victims that emptied."""
+        cap = self.autoscale_policy.drain_batch \
+            if self.autoscale_policy is not None else 16
+        for ordinal in sorted(self._draining):
+            i = self._index_of(ordinal)
+            victim = self.replicas[i]
+            sched = victim.scheduler
+            moved = 0
+            # waiting first (cheap, no KV on the wire), then residents
+            candidates = (list(sched.waiting) + list(sched.running_decode)
+                          + list(sched.running_prefill))
+            for req in candidates:
+                if moved >= cap:
+                    break
+                dst_i = self._drain_dst(i, req)
+                if dst_i is None:
+                    continue
+                if self._drain_move(i, dst_i, req, now):
+                    moved += 1
+            self.autoscale_stats.drain_moves += moved
+            self._try_retire(ordinal, now)
+
+    def _try_retire(self, ordinal: int, now: float) -> bool:
+        """Retire a draining replica iff nothing references it anymore: no
+        scheduler work, no in-flight ticks, nothing in transit toward it.
+        The replica object moves to `self.retired` so its finished-request
+        history stays part of the cluster's accounting."""
+        i = self._index_of(ordinal)
+        victim = self.replicas[i]
+        if victim.has_work or victim.busy:
+            return False
+        if any(entry[2] == ordinal for entry in self._in_transit):
+            return False
+        # final bookkeeping sweep before the finished list freezes
+        for req in _finished_of(victim)[self._seen_finished.get(ordinal, 0):]:
+            self._migrations_of.pop(req.request_id, None)
+            self._handoffs_of.pop(req.request_id, None)
+        self._seen_finished.pop(ordinal, None)
+        _record_scale(victim, "retire", now)
+        rec = getattr(victim, "recorder", None)
+        if rec is not None:
+            rec.close()     # `retire` is the stream's last record
+        del self.replicas[i]
+        del self.replica_ids[i]
+        del self.capacities[i]
+        del self.capacity_hints[i]
+        del self._caps_eff[i]
+        self.roles = self.roles[:i] + self.roles[i + 1:]
+        self._draining.discard(ordinal)
+        self.retired.append(victim)
+        self.autoscale_stats.retired += 1
+        self.autoscale_stats.note(now, "retire", len(self._serving()))
+        if self._trace is not None:
+            self._trace.write({"kind": "retire", "now": now,
+                               "replica": ordinal,
+                               "fleet": len(self._serving())})
+        return True
+
+    def _autoscale_pass(self, now: float) -> None:
+        """One autoscale decision on the EWMA of fleet pressure: grow on
+        sustained overload, start (at most one) drain on sustained
+        underload.  Hysteresis = threshold gap + per-direction cooldowns;
+        the drain victim is the lowest-pressure replica whose removal keeps
+        role cover."""
+        pol = self.autoscale_policy
+        self.autoscale_stats.passes += 1
+        serving = self._serving()
+        p = fleet_pressure([self.replicas[i] for i in serving], pol)
+        if self._pressure_ewma is None:
+            self._pressure_ewma = p
+        else:
+            self._pressure_ewma += pol.ewma_alpha * (p - self._pressure_ewma)
+        ewma = self._pressure_ewma
+        n = len(serving)
+        if (ewma > pol.up_threshold and n < pol.max_replicas
+                and now - self._last_scale_up >= pol.up_cooldown
+                and self.replica_factory is not None):
+            step = scale_up_step(n, ewma, pol)
+            for _ in range(step):
+                self.add_replica(now)
+            if step:
+                self.autoscale_stats.scale_ups += 1
+                self._last_scale_up = now
+            return
+        if (ewma < pol.down_threshold and n > pol.min_replicas
+                and not self._draining
+                and now - self._last_scale_down >= pol.down_cooldown):
+            victims = sorted(
+                serving,
+                key=lambda i: replica_pressure(self.replicas[i], pol))
+            roles = [self.roles[i] for i in serving]
+            for i in victims:
+                if retirable(roles, serving.index(i)):
+                    self.start_drain(i, now)
+                    self._last_scale_down = now
+                    break
+
+    def check_invariants(self,
+                         expected_rids: Optional[Sequence[str]] = None
+                         ) -> None:
+        """Cluster-wide conservation audit (the chaos suite runs this after
+        every operation): every per-replica scheduler invariant holds, no
+        request id appears in two places at once (across all waiting /
+        running groups and the in-transit heap), no id finishes twice, and
+        — when `expected_rids` is given — every submitted request is
+        accounted for somewhere (alive, in transit, or finished)."""
+        alive: Dict[str, str] = {}
+
+        def see(rid: str, where: str) -> None:
+            if rid in alive:
+                raise AssertionError(
+                    f"request {rid!r} is both {alive[rid]} and {where}")
+            alive[rid] = where
+
+        for ordinal, r in zip(self.replica_ids, self.replicas):
+            sched = r.scheduler
+            sched.check_invariants()
+            local: Dict[str, str] = {}
+            for group, name in ((sched.waiting, "waiting"),
+                                (sched.running_prefill, "running_prefill"),
+                                (sched.running_decode, "running_decode")):
+                for req in group:
+                    if req.request_id in local:
+                        raise AssertionError(
+                            f"request {req.request_id!r} is both "
+                            f"{local[req.request_id]} and {name} on "
+                            f"replica{ordinal}")
+                    local[req.request_id] = name
+            # mid-tick, a request whose *final* prefill chunk is in flight
+            # has left `waiting` but not yet entered `running_decode` — it
+            # is alive only in the scheduled batch (a decode/chunk seq also
+            # appears in its running list, hence setdefault, not see)
+            for bid in sched.active_batch_ids():
+                for seq in sched.get_batch(bid).seqs:
+                    local.setdefault(seq.request.request_id, "in-flight")
+            for rid, name in local.items():
+                see(rid, f"replica{ordinal}:{name}")
+        for entry in self._in_transit:
+            see(entry[3].request_id, "in-transit")
+        counts: Dict[str, int] = {}
+        for req in self.finished:
+            counts[req.request_id] = counts.get(req.request_id, 0) + 1
+        dups = sorted(rid for rid, c in counts.items() if c > 1)
+        if dups:
+            raise AssertionError(f"requests finished more than once: {dups}")
+        both = sorted(set(alive) & set(counts))
+        if both:
+            raise AssertionError(
+                f"requests both alive and finished: {both}")
+        if expected_rids is not None:
+            seen = set(alive) | set(counts)
+            missing = sorted(set(expected_rids) - seen)
+            if missing:
+                raise AssertionError(f"requests lost (not alive, in "
+                                     f"transit, or finished): {missing}")
 
     # ---------------------------------------------------------------- abort
     def abort_request(self, rid: str) -> bool:
@@ -922,7 +1298,9 @@ class ReplicaRouter:
         analogue of N independent driver loops), preceded by any due
         control-plane work on the backend clock."""
         if self.rebalance_policy is not None \
-                or self.handoff_policy is not None or self._in_transit:
+                or self.handoff_policy is not None \
+                or self.autoscale_policy is not None \
+                or self._draining or self._in_transit:
             self.control_tick(self._clock())
         out: List[Request] = []
         for r in self.replicas:
@@ -942,6 +1320,8 @@ class ReplicaRouter:
     def finished(self) -> List[Request]:
         out: List[Request] = []
         for r in self.replicas:
+            out.extend(_finished_of(r))
+        for r in self.retired:     # history survives the replica's retirement
             out.extend(_finished_of(r))
         out.extend(self._aborted)
         return out
@@ -995,6 +1375,12 @@ def _record_move_in(replica, req: Request, now: float, kind: str) -> None:
         rec.record_move_in(req, now, kind=kind)
 
 
+def _record_scale(replica, kind: str, now: float) -> None:
+    rec = getattr(replica, "recorder", None)
+    if rec is not None:
+        rec.record_scale_event(kind, now)
+
+
 class SimCluster:
     """N `PipelineSimulator` replicas behind a `ReplicaRouter`, driven in
     causally-consistent virtual time: each arrival first advances every
@@ -1004,25 +1390,48 @@ class SimCluster:
 
     def __init__(self, sims: Sequence[Any], router: ReplicaRouter,
                  *, trace_dir: Optional[str] = None) -> None:
-        self.sims = list(sims)
+        # the router's replica list is authoritative — the autoscaler
+        # mutates it (add/retire) and the cluster must track those changes,
+        # so `self.sims` is a live view, not a copy
+        if list(sims) != router.replicas:
+            raise ValueError(
+                "SimCluster must front the router's own replica list")
         self.router = router
-        for i, sim in enumerate(self.sims):
+        for ordinal, sim in zip(router.replica_ids, self.sims):
             # migration needs cluster-unique request ids: namespace each
             # replica's default id stream (engines already share a
             # process-wide counter)
             if getattr(sim, "rid_prefix", None) == "r":
-                sim.rid_prefix = f"r{i}:"
+                sim.rid_prefix = f"r{ordinal}:"
+        self._trace_dir = trace_dir
         if trace_dir is not None:
             # one tick trace per replica + the router's placement stream —
             # together they capture the whole cluster run for offline replay
             import os
             os.makedirs(trace_dir, exist_ok=True)
-            for i, sim in enumerate(self.sims):
+            for ordinal, sim in zip(router.replica_ids, self.sims):
                 sim.attach_trace(
-                    os.path.join(trace_dir, f"replica{i}.trace.jsonl"))
+                    os.path.join(trace_dir, f"replica{ordinal}.trace.jsonl"))
             if router._trace is None:
                 router.open_trace(
                     os.path.join(trace_dir, "router.trace.jsonl"))
+        router.add_replica_hook(self._on_add_replica)
+
+    @property
+    def sims(self) -> List[Any]:
+        return self.router.replicas
+
+    def _on_add_replica(self, sim, ordinal: int, now: float) -> None:
+        """Bring an autoscaler-added simulator into the cluster: namespaced
+        rid stream, its own trace file, clock advanced to its birth instant
+        (it must not tick in the past)."""
+        if getattr(sim, "rid_prefix", None) == "r":
+            sim.rid_prefix = f"r{ordinal}:"
+        if self._trace_dir is not None:
+            import os
+            sim.attach_trace(os.path.join(
+                self._trace_dir, f"replica{ordinal}.trace.jsonl"))
+        sim.advance_clock(now)
 
     def _advance_to(self, t: float) -> None:
         """Advance every replica to `t`, running control-plane events
@@ -1039,9 +1448,9 @@ class SimCluster:
 
     @property
     def _cluster_busy(self) -> bool:
-        return self.router.has_in_transit or any(
-            s.sched.has_work or s.loop.busy or s._arrivals
-            for s in self.sims)
+        return self.router.has_in_transit or bool(self.router._draining) \
+            or any(s.sched.has_work or s.loop.busy or s._arrivals
+                   for s in self.sims)
 
     # ------------------------------------------------- engine-compatible API
     # The serving layer drives a sim cluster through the same surface as a
@@ -1072,19 +1481,23 @@ class SimCluster:
     def abort_request(self, rid: str) -> bool:
         return self.router.abort_request(rid)
 
-    def _finished_marks(self) -> List[int]:
-        """Per-source finished-list lengths (one per replica + the router's
-        in-transit-aborted list) — new finishes land in *whichever* source's
-        list, so "what finished since" must be tracked per source, not by
-        slicing the concatenation."""
-        return [len(s.metrics.finished) for s in self.sims] + [
-            len(self.router._aborted)]
+    def _finished_marks(self) -> Dict[Any, int]:
+        """Per-source finished-list lengths (every replica — live *or*
+        retired — plus the router's in-transit-aborted list), keyed by the
+        source object: new finishes land in *whichever* source's list, the
+        fleet can change size between marks, and a replica can finish work
+        and then retire within one step — so the marks must survive both."""
+        marks: Dict[Any, int] = {
+            id(s): len(s.metrics.finished)
+            for s in itertools.chain(self.sims, self.router.retired)}
+        marks["aborted"] = len(self.router._aborted)
+        return marks
 
-    def _finished_since(self, marks: List[int]) -> List[Request]:
+    def _finished_since(self, marks: Dict[Any, int]) -> List[Request]:
         out: List[Request] = []
-        for sim, n in zip(self.sims, marks):
-            out.extend(sim.metrics.finished[n:])
-        out.extend(self.router._aborted[marks[-1]:])
+        for sim in itertools.chain(self.sims, self.router.retired):
+            out.extend(sim.metrics.finished[marks.get(id(sim), 0):])
+        out.extend(self.router._aborted[marks.get("aborted", 0):])
         return out
 
     def step(self) -> List[Request]:
@@ -1096,7 +1509,7 @@ class SimCluster:
                    if s.sched.has_work or s.loop.busy or s._arrivals]
         if pending:
             self._advance_to(min(s._next_tick_time() for s in pending))
-        elif self.router.has_in_transit:
+        elif self.router.has_in_transit or self.router._draining:
             due = self.router.next_control_event()
             if due is not None:
                 self._advance_to(due)
@@ -1135,7 +1548,8 @@ class SimCluster:
             i = self.router.select(len(prompt), prompt=prompt)
             self.sims[i].inject_request(t, prompt, out_len, *rest)
         intervals = [p.interval for p in (self.router.rebalance_policy,
-                                          self.router.handoff_policy)
+                                          self.router.handoff_policy,
+                                          self.router.autoscale_policy)
                      if p is not None]
         if not intervals:
             for sim in self.sims:
@@ -1157,7 +1571,7 @@ class SimCluster:
     @property
     def finished(self) -> List[Request]:
         out: List[Request] = []
-        for sim in self.sims:
+        for sim in itertools.chain(self.sims, self.router.retired):
             out.extend(sim.metrics.finished)
         out.extend(self.router._aborted)   # aborted while in transit
         return out
@@ -1174,4 +1588,6 @@ class SimCluster:
         return float(np.mean(vals)) if vals else 0.0
 
     def throughput(self) -> float:
-        return float(sum(s.metrics.throughput() for s in self.sims))
+        return float(sum(s.metrics.throughput()
+                         for s in itertools.chain(self.sims,
+                                                  self.router.retired)))

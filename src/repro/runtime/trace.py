@@ -79,7 +79,7 @@ from repro.runtime.core import ExecResult, ExecutionBackend, TickLoop
 SCHEMA = "gllm-trace"
 ROUTE_SCHEMA = "gllm-route"
 SCHEMA_MAJOR = 1
-SCHEMA_MINOR = 5    # 1.1: "abort" record kind; 1.2: req/migrate carry
+SCHEMA_MINOR = 6    # 1.1: "abort" record kind; 1.2: req/migrate carry
                     # per-request priority + SLO class; 1.3: ticks may carry
                     # "host_s" (per-tick host overhead — engine measures it,
                     # sim models it, RuntimeModel.fit_from_trace calibrates
@@ -93,7 +93,12 @@ SCHEMA_MINOR = 5    # 1.1: "abort" record kind; 1.2: req/migrate carry
                     # transfer, same op=out/in layout as "migrate") and
                     # compacted ticks may run-length encode "stage_times"
                     # and exit token lists — raw (non-compact) tick bytes
-                    # are unchanged, so pre-1.5 layouts are preserved
+                    # are unchanged, so pre-1.5 layouts are preserved; 1.6:
+                    # "scale_up" / "drain" / "retire" record kinds (elastic
+                    # fleet lifecycle markers written by the autoscaler —
+                    # no scheduler state change on replay, re-recorded
+                    # verbatim so elastic traces stay byte-identical);
+                    # pre-1.6 traces carry none and keep their exact bytes
 
 
 class TraceSchemaError(ValueError):
@@ -572,6 +577,19 @@ class TraceRecorder(ExecutionBackend):
         self._ensure_header()
         self.writer.write({"kind": "abort", "rid": request_id, "now": now})
 
+    def record_scale_event(self, kind: str, now: float) -> None:
+        """Elastic fleet lifecycle marker (schema 1.6): `scale_up` opens a
+        freshly-added replica's stream, `drain` marks the instant this
+        replica was masked from admission, `retire` is the last record a
+        drained replica writes before its recorder closes.  Markers carry
+        no scheduler state — replay re-records them verbatim (the request
+        movement a drain causes is already fully described by the
+        surrounding migrate/steal records)."""
+        if kind not in ("scale_up", "drain", "retire"):
+            raise ValueError(f"unknown scale event kind {kind!r}")
+        self._ensure_header()
+        self.writer.write({"kind": kind, "now": now})
+
     def record_migrate_out(self, request_id: str, now: float) -> None:
         """The control plane drained a request off this replica (§9)."""
         self.record_move_out(request_id, now, kind="migrate")
@@ -945,6 +963,13 @@ def replay_trace(trace: Trace, *, mode: str = TraceBackend.STRICT,
                 sched.adopt_request(req)
                 if recorder is not None:
                     recorder.record_move_in(req, rec["now"], kind=kind)
+        elif kind in ("scale_up", "drain", "retire"):
+            # elastic lifecycle markers (schema 1.6): no scheduler state
+            # change — the request movement a drain causes is already in
+            # the stream as migrate/steal records.  Re-record verbatim so
+            # elastic traces round-trip byte-identically.
+            if recorder is not None:
+                recorder.record_scale_event(kind, rec["now"])
         elif kind == "route":  # router streams are not tick traces
             raise TraceSchemaError(
                 "route records belong to a gllm-route trace, not a replayable "

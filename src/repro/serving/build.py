@@ -129,7 +129,8 @@ def _replica_trace(record: Optional[str], i: int, n: int) -> Optional[str]:
 
 
 def _wrap_router(spec: ServeSpec, replicas: List[Any],
-                 record: Optional[str]):
+                 record: Optional[str],
+                 replica_factory: Optional[Any] = None):
     from repro.runtime.router import BalanceWeights, ReplicaRouter
     cl = spec.cluster
     weights = None
@@ -143,6 +144,8 @@ def _wrap_router(spec: ServeSpec, replicas: List[Any],
         capacities=cl.capacities,
         roles=cl.roles,
         handoff=cl.handoff,
+        autoscale=cl.autoscale,
+        replica_factory=replica_factory,
         trace_path=None if record is None else f"{record}.router",
     )
 
@@ -171,7 +174,10 @@ def _build_sim(spec: ServeSpec) -> Tuple[Any, Any]:
         return dataclasses.replace(spec.sim, **ov) if ov else spec.sim
 
     def one(i: int) -> PipelineSimulator:
-        ss = replica_sim_spec(i)
+        # ordinals >= the initial fleet size are autoscaler-added replicas:
+        # they take the base geometry (sim_overrides shape the initial
+        # fleet only — the elastic pool is homogeneous)
+        ss = replica_sim_spec(i) if i < n else spec.sim
         th = _throttle_config(spec, ss.pp, reduced=False)
         runtime = (RuntimeModel.vllm_like() if ss.runtime == "vllm"
                    else RuntimeModel.gllm())
@@ -192,7 +198,7 @@ def _build_sim(spec: ServeSpec) -> Tuple[Any, Any]:
     sims = [one(i) for i in range(n)]
     if spec.cluster is None and n == 1:
         return sims[0], cfg
-    router = _wrap_router(spec, sims, None)
+    router = _wrap_router(spec, sims, None, replica_factory=one)
     # SimCluster owns cluster trace layout: one tick trace per replica plus
     # the router placement stream, under `record` as a directory
     return SimCluster(sims, router, trace_dir=record), cfg

@@ -185,6 +185,8 @@ def stats_to_json(stats) -> Dict[str, Any]:
     }
     if stats.routed_counts is not None:
         out["routed_counts"] = list(stats.routed_counts)
+    if stats.replica_ordinals is not None:
+        out["replica_ordinals"] = list(stats.replica_ordinals)
     if stats.rebalance is not None:
         out["rebalance"] = dataclasses.asdict(stats.rebalance)
     if stats.disagg is not None:
@@ -192,6 +194,18 @@ def stats_to_json(stats) -> Dict[str, Any]:
         # the per-role queue split operators watch to size the role ratio
         out["disagg"] = dataclasses.asdict(stats.disagg)
         out["queue_depth_by_role"] = stats.queue_depth_by_role
+    if stats.fleet_size is not None:
+        # elastic fleets (DESIGN.md §16): serving size, active drains,
+        # retirements — plus the scaling event log when the autoscaler runs
+        out["fleet_size"] = stats.fleet_size
+        out["draining"] = stats.draining
+        out["retired"] = stats.retired
+    if stats.autoscale is not None:
+        auto = dataclasses.asdict(stats.autoscale)
+        auto["events"] = [list(e) for e in auto["events"]]
+        out["autoscale"] = auto
+    if stats.attainment_by_class is not None:
+        out["attainment_by_class"] = stats.attainment_by_class
     return out
 
 

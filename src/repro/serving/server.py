@@ -132,8 +132,23 @@ class ReplicaStats:
 class ServerStats:
     replicas: List[ReplicaStats] = field(default_factory=list)
     routed_counts: Optional[List[int]] = None     # clusters only
+    # Stable per-replica ordinals, position-aligned with `replicas` /
+    # `routed_counts` (clusters only).  On an elastic fleet the ordinal —
+    # not the list position — identifies a replica across scale events:
+    # retired ordinals leave the list, newborns get fresh ones.
+    replica_ordinals: Optional[List[int]] = None
     rebalance: Optional[Any] = None               # RebalanceStats, if enabled
     disagg: Optional[Any] = None                  # DisaggStats, if handoff on
+    autoscale: Optional[Any] = None               # AutoscaleStats, if elastic
+    # Elastic fleets (DESIGN.md §16): serving replica count (draining
+    # replicas excluded), active drains, and replicas already retired.
+    fleet_size: Optional[int] = None
+    draining: Optional[int] = None
+    retired: Optional[int] = None
+    # Per-class SLO attainment over finished requests (the shared
+    # `attainment_by_class` definition — same numbers fig_autoscale and
+    # fig_disagg report); None until something finished.
+    attainment_by_class: Optional[Dict[str, Dict[str, float]]] = None
 
     @property
     def tokens_retired(self) -> int:
@@ -202,9 +217,18 @@ class LLMServer:
         self._closed = False
         if engine is not None:
             for replica in _replicas_of(engine):
-                replica.on_token = self._on_token
-                sched = replica.scheduler
-                sched.on_preempt = self._chain_preempt(sched.on_preempt)
+                self._wire_replica(replica)
+            router = _router_of(engine)
+            if router is not None \
+                    and hasattr(router, "add_replica_hook"):
+                # elastic fleets: replicas added later need the same wiring
+                router.add_replica_hook(
+                    lambda replica, ordinal, now: self._wire_replica(replica))
+
+    def _wire_replica(self, replica: Any) -> None:
+        replica.on_token = self._on_token
+        sched = replica.scheduler
+        sched.on_preempt = self._chain_preempt(sched.on_preempt)
 
     # ------------------------------------------------------------ enumeration
     @property
@@ -478,11 +502,31 @@ class LLMServer:
         router = self.router
         if router is not None:
             out.routed_counts = list(router.routed_counts)
+            out.replica_ordinals = list(router.replica_ids)
             if router.rebalance_policy is not None:
                 out.rebalance = router.rebalance_stats
             if router.handoff_policy is not None:
                 out.disagg = router.disagg_stats
+            out.fleet_size = len(router._serving())
+            out.draining = len(router._draining)
+            out.retired = len(router.retired)
+            if router.autoscale_policy is not None:
+                out.autoscale = router.autoscale_stats
+        finished = self._finished_requests()
+        if finished:
+            from repro.runtime.autoscale import attainment_by_class
+            out.attainment_by_class = attainment_by_class(finished)
         return out
+
+    def _finished_requests(self) -> List[Request]:
+        """Everything the substrate has retired (cluster-wide, including
+        work that finished on since-retired replicas)."""
+        if self.engine is None:
+            return [r for r in self._requests.values() if r.is_finished]
+        fin = getattr(self.engine, "finished", None)
+        if fin is None:
+            fin = self.engine.metrics.finished
+        return list(fin)
 
     def close(self) -> None:
         """Flush and close any attached trace recorders/streams."""

@@ -21,6 +21,7 @@ import json
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Tuple, Union
 
+from repro.runtime.autoscale import AutoscalePolicy
 from repro.runtime.disagg import HandoffPolicy, validate_roles
 from repro.runtime.router import RebalancePolicy, ReplicaCapacity
 
@@ -116,10 +117,24 @@ class ClusterSpec:
     # that ships freshly-prefilled requests to decode replicas.
     roles: Optional[Tuple[str, ...]] = None
     handoff: Optional[HandoffPolicy] = None
+    # Cluster-scale elasticity (DESIGN.md §16): when set, the router runs
+    # the autoscaler pass — `replicas` is the *initial* fleet size, and the
+    # fleet grows/shrinks within [min_replicas, max_replicas].  New
+    # replicas are built from the base `ServeSpec.sim` geometry (elastic
+    # replicas are the homogeneous pool; sim_overrides shape only the
+    # initial fleet).  Sim backend only: an engine cannot conjure devices.
+    autoscale: Optional[AutoscalePolicy] = None
 
     def __post_init__(self) -> None:
         if self.replicas < 1:
             raise ValueError("ClusterSpec.replicas must be >= 1")
+        if self.autoscale is not None and not (
+                self.autoscale.min_replicas <= self.replicas
+                <= self.autoscale.max_replicas):
+            raise ValueError(
+                f"ClusterSpec.replicas={self.replicas} must start inside "
+                f"the autoscale range [{self.autoscale.min_replicas}, "
+                f"{self.autoscale.max_replicas}]")
         if self.roles is not None:
             object.__setattr__(self, "roles",
                                validate_roles(self.roles, self.replicas))
@@ -200,6 +215,12 @@ class ServeSpec:
             raise ValueError(
                 'ClusterSpec.sim_overrides applies to backend="sim" only '
                 "(engine replicas take their geometry from EngineSpec)")
+        if (self.backend != "sim" and self.cluster is not None
+                and self.cluster.autoscale is not None):
+            raise ValueError(
+                'ClusterSpec.autoscale applies to backend="sim" only '
+                "(an engine fleet cannot conjure replicas; drive elastic "
+                "studies in sim)")
 
     @property
     def num_replicas(self) -> int:
@@ -259,6 +280,8 @@ def spec_from_dict(d: Dict[str, Any]) -> ServeSpec:
             cluster["rebalance"] = RebalancePolicy(**cluster["rebalance"])
         if cluster.get("handoff") is not None:
             cluster["handoff"] = HandoffPolicy(**cluster["handoff"])
+        if cluster.get("autoscale") is not None:
+            cluster["autoscale"] = AutoscalePolicy(**cluster["autoscale"])
         if cluster.get("capacities") is not None:
             cluster["capacities"] = tuple(
                 _decode_capacity(c) for c in cluster["capacities"])

@@ -1,0 +1,695 @@
+"""Cluster-scale elasticity (DESIGN.md §16).
+
+Five layers, matching the autoscaler's structure:
+
+  * policy — `AutoscalePolicy` validation and exact JSON round-trip through
+    `ClusterSpec.autoscale`; the spec layer rejects fleets outside the
+    policy's bounds and autoscaling on non-sim backends;
+  * signal — `replica_pressure` / `scale_up_step` arithmetic, and the
+    shared `attainment_by_class` definition (pinned here because
+    `GET /v1/stats`, fig_autoscale, and fig_disagg all report through it);
+  * lifecycle — scale-up under a flash crowd, drains that conserve every
+    request (nothing lost, duplicated, or leaked; KV pool empty at
+    retire), role-safe victim selection, and the in-transit re-home path
+    when a delivery's destination drains or retires mid-flight;
+  * accounting — ordinal-keyed router state survives fleet-size changes
+    between passes (the positional-index regression), and the chaos
+    auditor `check_invariants` actually *fails* against a deliberately
+    broken drain (the suite has teeth);
+  * recording — elastic runs strict-replay byte-identically through the
+    1.6 `scale_up`/`drain`/`retire` records, and pre-1.6 traces load.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    SLO_BATCH,
+    SLO_INTERACTIVE,
+    PagedKVManager,
+    PipelineScheduler,
+    PrefillPolicy,
+    Request,
+    SamplingParams,
+    ThrottleConfig,
+)
+from repro.data.workload import diurnal_requests, flash_crowd_requests
+from repro.runtime.autoscale import (
+    DEFAULT_SLOS,
+    AutoscalePolicy,
+    attainment_by_class,
+    fleet_pressure,
+    replica_pressure,
+    request_attains,
+    scale_up_step,
+)
+from repro.runtime.disagg import (
+    ROLE_DECODE,
+    ROLE_MIXED,
+    ROLE_PREFILL,
+    HandoffPolicy,
+    retirable,
+)
+from repro.runtime.router import ReplicaRouter, SimCluster
+from repro.runtime.simulator import PipelineSimulator, cost_model_for
+from repro.runtime.trace import SCHEMA_MAJOR, Trace, check_trace, replay_trace
+
+CFG = get_config("qwen2.5-14b")
+
+
+def make_sim(pp=2, pages=512, page_size=8, caching=False):
+    th = ThrottleConfig(pipeline_depth=pp, policy=PrefillPolicy.GLLM)
+    kv = PagedKVManager(num_pages=pages, page_size=page_size,
+                        enable_prefix_caching=caching)
+    sched = PipelineScheduler(th, kv, max_model_len=pages * page_size)
+    return PipelineSimulator(sched, pp, cost_model_for(CFG, pp=pp))
+
+
+def elastic_cluster(n=1, *, policy=None, roles=None, trace_dir=None,
+                    pages=512, caching=False):
+    """`n` mixed sims behind an autoscaling router whose factory mints more
+    of the same geometry."""
+    pol = policy or AutoscalePolicy(interval=0.05, max_replicas=6,
+                                    up_cooldown=0.1, down_cooldown=0.5,
+                                    target_queue=2.0)
+    sims = [make_sim(pages=pages, caching=caching) for _ in range(n)]
+    router = ReplicaRouter(
+        sims, policy="balanced", roles=roles, autoscale=pol,
+        replica_factory=lambda o: make_sim(pages=pages, caching=caching))
+    return SimCluster(sims, router, trace_dir=trace_dir)
+
+
+def flash_crowd(num=60, seed=0):
+    return flash_crowd_requests(4.0, base_rate=1e-9, spike_rate=num / 1.0,
+                                spike_start=0.5, spike_len=1.0,
+                                mean_input=64.0, mean_output=16.0, seed=seed)
+
+
+def alive_rids(router):
+    """Every live request id in the cluster, including mid-tick in-flight
+    ones that have left `waiting` but not yet entered a running list."""
+    out = []
+    for r in router.replicas:
+        sched = r.scheduler
+        seen = set()
+        for group in (sched.waiting, sched.running_prefill,
+                      sched.running_decode):
+            for req in group:
+                seen.add(req.request_id)
+        for bid in sched.active_batch_ids():
+            for seq in sched.get_batch(bid).seqs:
+                seen.add(seq.request.request_id)
+        out.extend(seen)
+    return out
+
+
+def run_ticks(sched, n, clock_start=0.0):
+    """Drive a bare scheduler loop: schedule+complete with dummy tokens."""
+    now = clock_start
+    for _ in range(n):
+        batch = sched.schedule(now)
+        toks = [7] * sum(1 for s in batch.seqs if s.produces_token)
+        sched.complete(batch.batch_id, toks, now)
+        now += 0.01
+    return now
+
+
+# ---------------------------------------------------------------------------
+# policy + spec layer
+# ---------------------------------------------------------------------------
+
+class TestPolicy:
+    def test_defaults_are_sane(self):
+        pol = AutoscalePolicy()
+        assert pol.down_threshold < pol.up_threshold
+        assert pol.min_replicas >= 1 and pol.max_replicas >= pol.min_replicas
+        assert pol.interval > 0 and pol.max_step_up >= 1
+
+    @pytest.mark.parametrize("kw", [
+        dict(min_replicas=0),
+        dict(min_replicas=4, max_replicas=2),
+        dict(down_threshold=1.0, up_threshold=1.0),
+        dict(interval=0.0),
+    ])
+    def test_validation(self, kw):
+        with pytest.raises(ValueError):
+            AutoscalePolicy(**kw)
+
+    def test_spec_round_trip_exact(self):
+        from repro.serving import ClusterSpec, ServeSpec
+        spec = ServeSpec(
+            backend="sim",
+            cluster=ClusterSpec(
+                replicas=2,
+                autoscale=AutoscalePolicy(interval=0.2, max_replicas=32,
+                                          target_queue=6.0)))
+        again = ServeSpec.from_json(spec.to_json())
+        assert again == spec
+        assert again.cluster.autoscale == AutoscalePolicy(
+            interval=0.2, max_replicas=32, target_queue=6.0)
+
+    def test_spec_rejects_fleet_outside_policy_bounds(self):
+        from repro.serving import ClusterSpec
+        with pytest.raises(ValueError, match="autoscale range"):
+            ClusterSpec(replicas=2,
+                        autoscale=AutoscalePolicy(min_replicas=3,
+                                                  max_replicas=8))
+        with pytest.raises(ValueError, match="autoscale range"):
+            ClusterSpec(replicas=9,
+                        autoscale=AutoscalePolicy(max_replicas=8))
+
+    def test_spec_rejects_autoscale_off_sim(self):
+        from repro.serving import ClusterSpec, ServeSpec
+        with pytest.raises(ValueError, match="sim"):
+            ServeSpec(backend="engine",
+                      cluster=ClusterSpec(replicas=2,
+                                          autoscale=AutoscalePolicy()))
+
+
+# ---------------------------------------------------------------------------
+# pressure signal + scale step
+# ---------------------------------------------------------------------------
+
+class TestPressure:
+    def test_idle_replica_has_zero_pressure(self):
+        pol = AutoscalePolicy()
+        assert replica_pressure(make_sim(), pol) == 0.0
+        assert fleet_pressure([make_sim(), make_sim()], pol) == 0.0
+
+    def test_queue_depth_normalizes_to_target(self):
+        pol = AutoscalePolicy(target_queue=4.0)
+        sim = make_sim()
+        for k in range(8):
+            sim.sched.add_request(
+                Request(f"q{k}", [1] * 16, SamplingParams(max_new_tokens=4)))
+        assert replica_pressure(sim, pol) == pytest.approx(2.0)
+
+    def test_scale_up_step_is_proportional_and_clamped(self):
+        pol = AutoscalePolicy(max_replicas=32, max_step_up=8)
+        # barely over threshold: one replica
+        assert scale_up_step(4, 1.01, pol) == 1
+        # 2x overload at n=4 wants ~4 more
+        assert scale_up_step(4, 2.0, pol) == 4
+        # huge overload clamps to max_step_up ...
+        assert scale_up_step(4, 10.0, pol) == 8
+        # ... and to the max_replicas ceiling
+        assert scale_up_step(30, 10.0, pol) == 2
+        assert scale_up_step(32, 10.0, pol) == 0
+
+
+# ---------------------------------------------------------------------------
+# attainment — the one shared definition (stats surface + both benchmarks)
+# ---------------------------------------------------------------------------
+
+def _finished_req(rid, cls, *, ttft, tpot, n_out=11):
+    r = Request(rid, [1] * 8,
+                SamplingParams(max_new_tokens=n_out, slo_class=cls))
+    r.output_token_ids = [0] * n_out
+    r.metrics.arrival_time = 1.0
+    r.metrics.first_token_time = 1.0 + ttft
+    r.metrics.finish_time = 1.0 + ttft + tpot * (n_out - 1)
+    return r
+
+
+class TestAttainment:
+    def test_pinned_definition(self):
+        """A request attains iff TTFT <= slo["ttft"] AND mean TPOT <=
+        slo["tbt"]; the class row reports n/attained/attainment and p95s.
+        This is the single definition every reporting surface shares —
+        changing it is an API break, not a tweak."""
+        slos = {SLO_INTERACTIVE: {"ttft": 1.0, "tbt": 0.1},
+                SLO_BATCH: {"ttft": 10.0, "tbt": 1.0}}
+        reqs = [
+            _finished_req("a", SLO_INTERACTIVE, ttft=0.5, tpot=0.05),  # ok
+            _finished_req("b", SLO_INTERACTIVE, ttft=2.0, tpot=0.05),  # ttft
+            _finished_req("c", SLO_INTERACTIVE, ttft=0.5, tpot=0.2),   # tbt
+            _finished_req("d", SLO_BATCH, ttft=5.0, tpot=0.5),         # ok
+        ]
+        out = attainment_by_class(reqs, slos, elapsed=10.0)
+        inter = out[SLO_INTERACTIVE]
+        assert inter["n"] == 3 and inter["attained"] == 1
+        assert inter["attainment"] == pytest.approx(1 / 3)
+        assert inter["goodput"] == pytest.approx(0.1)
+        batch = out[SLO_BATCH]
+        assert batch["n"] == 1 and batch["attainment"] == 1.0
+        assert inter["ttft_p95"] > 0 and inter["tbt_p95"] > 0
+
+    def test_empty_class_attains_vacuously(self):
+        out = attainment_by_class([])
+        assert set(out) == set(DEFAULT_SLOS)
+        for row in out.values():
+            assert row["n"] == 0 and row["attainment"] == 1.0
+            assert "goodput" not in row  # only with elapsed=
+
+    def test_no_first_token_never_attains(self):
+        r = Request("x", [1] * 8, SamplingParams())
+        assert not request_attains(r, {"ttft": 100.0, "tbt": 100.0})
+
+    def test_benchmarks_share_this_definition(self):
+        from benchmarks.fig_autoscale import SLOS as auto_slos
+        from benchmarks.fig_disagg import SLOS as disagg_slos
+        from benchmarks.fig_disagg import _per_class
+        assert _per_class is attainment_by_class
+        assert auto_slos == disagg_slos == DEFAULT_SLOS
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: scale-up, drain, retire
+# ---------------------------------------------------------------------------
+
+class TestScaleUp:
+    def test_add_replica_requires_factory(self):
+        router = ReplicaRouter([make_sim()])
+        with pytest.raises(RuntimeError, match="replica_factory"):
+            router.add_replica()
+
+    def test_flash_crowd_grows_fleet_and_conserves_requests(self):
+        cluster = elastic_cluster(1)
+        router = cluster.router
+        reqs = flash_crowd(60)
+        fin = cluster.run(reqs, until=120.0)
+        st = router.autoscale_stats
+        assert st.replicas_added > 0, "flash crowd must trigger scale-up"
+        assert len(fin) == len(reqs)
+        router.check_invariants(
+            expected_rids=[r.request_id for r in fin])
+        # the burst absorbed, underload drains the fleet back down
+        assert st.retired > 0
+        assert len(router.replicas) < 1 + st.replicas_added
+        up_sizes = [s for _, k, s in st.events if k == "scale_up"]
+        assert up_sizes == sorted(up_sizes)
+
+    def test_newborn_replicas_get_namespaced_rid_streams(self):
+        cluster = elastic_cluster(1)
+        cluster.run(flash_crowd(60), until=120.0)
+        fin = cluster.finished
+        assert len(fin) == len({r.request_id for r in fin})
+
+    def test_up_cooldown_rate_limits_growth(self):
+        pol = AutoscalePolicy(interval=0.05, up_cooldown=1e9,
+                              max_replicas=6, target_queue=2.0)
+        cluster = elastic_cluster(1, policy=pol)
+        cluster.run(flash_crowd(60), until=120.0)
+        assert cluster.router.autoscale_stats.scale_ups <= 1
+
+
+class TestDrain:
+    def _loaded_cluster(self):
+        """3 mixed replicas, replica 0 holding waiting + resident work."""
+        sims = [make_sim() for _ in range(3)]
+        router = ReplicaRouter(sims, policy="balanced")
+        for k in range(6):
+            sims[0].inject_request(0.0, [1] * 64, 8)
+        sims[0].run_until(0.05)  # some admitted + resident, some waiting
+        return SimCluster(sims, router), router
+
+    def test_drain_conserves_and_retires_with_empty_pool(self):
+        cluster, router = self._loaded_cluster()
+        victim = router.replicas[0]
+        rids = alive_rids(router)
+        assert len(rids) == 6
+        router.start_drain(0, now=0.05)
+        cluster.drain()
+        assert victim in router.retired
+        assert sorted(r.request_id for r in cluster.finished) == sorted(rids)
+        router.check_invariants(expected_rids=rids)
+        # no KV leaked on retire: the victim's pool is fully free
+        kv = victim.sched.kv
+        assert kv.num_free_pages == kv.num_pages
+        assert router.autoscale_stats.drain_moves > 0
+        assert router.autoscale_stats.retired == 1
+
+    def test_draining_replica_masked_from_admission(self):
+        cluster, router = self._loaded_cluster()
+        router.start_drain(0, now=0.05)
+        assert 0 not in router._admissible
+        for _ in range(8):
+            assert router.select(16) != 0
+
+    def test_drain_refuses_to_break_role_cover(self):
+        sims = [make_sim(), make_sim()]
+        router = ReplicaRouter(sims, roles=(ROLE_PREFILL, ROLE_DECODE),
+                               handoff=HandoffPolicy(interval=0.01))
+        for i in range(2):  # each is the last of its kind
+            with pytest.raises(ValueError, match="cover"):
+                router.start_drain(i)
+        single = ReplicaRouter([make_sim()])
+        with pytest.raises(ValueError, match="cover"):
+            single.start_drain(0)
+
+    def test_double_drain_rejected(self):
+        cluster, router = self._loaded_cluster()
+        router.start_drain(0, now=0.05)
+        with pytest.raises(ValueError, match="already draining"):
+            router.start_drain(0, now=0.06)
+
+    def test_retirable_keeps_prefill_and_decode_cover(self):
+        assert retirable((ROLE_MIXED, ROLE_MIXED), 0)
+        assert not retirable((ROLE_PREFILL, ROLE_DECODE), 0)
+        assert not retirable((ROLE_PREFILL, ROLE_DECODE), 1)
+        assert retirable((ROLE_PREFILL, ROLE_MIXED, ROLE_DECODE), 0)
+        assert not retirable((ROLE_MIXED,), 0)
+
+    def test_autoscaler_never_drains_last_role_holder(self):
+        """Underload on a disaggregated fleet: the scale-down pass must
+        skip the lowest-pressure victim when removing it would break role
+        cover — the pure-prefill replica survives every drain because it
+        is the fleet's only prefill capability."""
+        pol = AutoscalePolicy(interval=0.05, min_replicas=1,
+                              down_cooldown=0.0, target_queue=2.0)
+        sims = [make_sim() for _ in range(3)]
+        router = ReplicaRouter(sims, roles=(ROLE_PREFILL, ROLE_DECODE,
+                                            ROLE_DECODE),
+                               handoff=HandoffPolicy(interval=0.01),
+                               autoscale=pol)
+        for t in range(1, 40):  # idle fleet, many passes: EWMA decays to 0
+            router.control_tick(t * 0.05)
+        # one redundant decode replica retired; the survivors are exactly
+        # the minimal role cover, which no further pass may shrink
+        assert router.autoscale_stats.retired == 1
+        assert sims[0] in router.replicas, "last prefill must survive"
+        assert router.roles == (ROLE_PREFILL, ROLE_DECODE)
+        assert router.retired[0] in (sims[1], sims[2])
+
+
+# ---------------------------------------------------------------------------
+# in-transit deliveries across fleet changes (re-home, §15/§13 composition)
+# ---------------------------------------------------------------------------
+
+class TestInTransitRehome:
+    def _resident_on(self, sim, rid="mig", tokens=64, out=32):
+        """Drive the bare scheduler to a clean tick boundary with `rid`
+        resident in decode (no sim-loop tick in flight, so the control
+        plane may drain it)."""
+        req = Request(rid, [1] * tokens, SamplingParams(max_new_tokens=out))
+        sim.sched.add_request(req)
+        run_ticks(sim.sched, 4)
+        assert req in sim.sched.running_decode
+        return req
+
+    def test_delivery_to_draining_dst_is_rehomed_not_dropped(self):
+        sims = [make_sim() for _ in range(3)]
+        router = ReplicaRouter(sims, policy="balanced")
+        req = self._resident_on(sims[0])
+        assert router.migrate_request(req.request_id, 0, 1, now=0.1)
+        assert router.has_in_transit
+        router.start_drain(1, now=0.1)
+        # flush past the transfer delay: dst is draining -> re-homed
+        router.control_tick(10.0)
+        assert not router.has_in_transit
+        assert router.autoscale_stats.rehomed == 1
+        assert not any(r.request_id == req.request_id
+                       for r in sims[1].sched.waiting)
+        assert not sims[1].sched.kv.has_request(req.request_id)
+        assert req in sims[2].sched.running_decode or any(
+            r.request_id == req.request_id for r in sims[2].sched.waiting
+        ) or req in sims[0].sched.running_decode
+        router.check_invariants(expected_rids=[req.request_id])
+
+    def test_retire_waits_for_in_transit_toward_victim(self):
+        """Satellite regression: drain a replica that is mid-handoff
+        *destination* — the victim cannot retire while a payload is on the
+        wire toward it, and the flush re-homes instead of delivering into
+        a draining replica (no request is double-moved)."""
+        sims = [make_sim() for _ in range(3)]
+        router = ReplicaRouter(sims, policy="balanced",
+                               roles=(ROLE_PREFILL, ROLE_DECODE, ROLE_MIXED),
+                               handoff=HandoffPolicy(interval=0.05,
+                                                     max_decode_tokens=4))
+        req = self._resident_on(sims[0], rid="hand")
+        # ship the first-decode request prefill -> decode (§15)
+        assert router._move_request("hand", 0, 1, now=0.1, kind="handoff")
+        assert router.has_in_transit
+        dst_ord = router._in_transit[0][2]
+        assert dst_ord == router.replica_ids[1]
+        router.start_drain(1, now=0.1)
+        assert not router._try_retire(dst_ord, 0.1)
+        assert router._index_of(dst_ord) is not None
+        router.control_tick(10.0)
+        st = router.autoscale_stats
+        assert st.rehomed == 1
+        # re-homed to the only serving decode-capable replica: the mixed one
+        assert req in sims[2].sched.running_decode or any(
+            r.request_id == "hand" for r in sims[2].sched.waiting)
+        assert sims[1] in router.retired
+        # moved exactly once per plane: the handoff happened, then the
+        # re-home redirected the same delivery — no second export
+        assert router.disagg_stats.handoffs == 1
+        router.check_invariants(expected_rids=["hand"])
+
+    def test_drain_of_prefix_adopted_head_is_plain_steal(self):
+        """Satellite regression (§13 x §16): a waiting request whose block
+        table is an adopted prefix head drains as a steal — the head is
+        released at the source (no page leak at retire), no KV crosses the
+        wire, and the destination re-admits from scratch."""
+        sims = [make_sim(caching=True, pages=256), make_sim(caching=True,
+                                                            pages=256)]
+        router = ReplicaRouter(sims, policy="balanced")
+        src = sims[0].sched
+        shared = list(range(16))
+        warm = Request("warm", shared + [77],
+                       SamplingParams(max_new_tokens=2))
+        src.add_request(warm)
+        sims[0].run_until(0.5)
+        assert warm.is_finished
+        victim = Request("victim", shared + [90, 91, 92],
+                         SamplingParams(max_new_tokens=3))
+        cached, pages = src.kv.match_prefix(victim.effective_prompt[:-1])
+        assert cached == len(shared)
+        src.kv.adopt_prefix("victim", cached, pages)
+        victim.num_prefilled = cached
+        src.waiting.append(victim)
+
+        router.start_drain(0, now=0.5)
+        router.control_tick(0.6)
+        assert router.rebalance_stats.stolen == 1
+        assert router.rebalance_stats.migrated == 0  # no KV on the wire
+        assert victim in sims[1].sched.waiting
+        assert victim.num_prefilled == 0
+        assert sims[0] in router.retired
+        # the adopted head was released at drain: no page pinned to the rid
+        assert not sims[0].sched.kv.has_request("victim")
+        router.check_invariants(expected_rids=["victim"])
+
+
+# ---------------------------------------------------------------------------
+# ordinal-keyed accounting across fleet-size changes
+# ---------------------------------------------------------------------------
+
+class TestElasticAccounting:
+    def test_routed_counts_survive_add_and_retire(self):
+        """Regression: per-replica counters are keyed by ordinal, so a
+        retire must shift positions without reassigning history."""
+        cluster = elastic_cluster(2)
+        router = cluster.router
+        for _ in range(6):
+            router.select(16)
+        before = dict(zip(router.replica_ids, router.routed_counts))
+        new_i = router.add_replica(now=0.0)
+        assert router.routed_counts[new_i] == 0
+        router.start_drain(0, now=0.0)
+        router.control_tick(0.1)   # empty victim retires immediately
+        assert len(router.replicas) == 2
+        after = dict(zip(router.replica_ids, router.routed_counts))
+        for ordinal, count in after.items():
+            assert count == before.get(ordinal, 0)
+
+    def test_stats_and_scores_tolerate_fleet_changes_between_passes(self):
+        """Regression: `scores`/`_calibrate` must not assume the fleet size
+        they saw last pass — every per-replica list is rebuilt per call and
+        keyed bookkeeping follows the ordinal."""
+        from repro.runtime.router import RebalancePolicy
+        sims = [make_sim() for _ in range(3)]
+        router = ReplicaRouter(sims, rebalance=RebalancePolicy(interval=0.1),
+                               replica_factory=lambda o: make_sim())
+        sims[0].inject_request(0.0, [1] * 32, 4)
+        sims[0].run(1.0)
+        router.control_tick(0.1)    # calibration pass at fleet size 3
+        router.add_replica(now=0.2)
+        router.start_drain(0, now=0.2)
+        router.control_tick(0.3)    # pass across add + retire
+        assert len(router.scores(16)) == len(router.replicas) == 3
+        assert len(router._caps_eff) == len(router.replicas)
+        router.control_tick(0.4)
+        assert router.rebalance_stats.passes >= 2
+
+    def test_finished_history_survives_retirement(self):
+        cluster, router = TestDrain()._loaded_cluster()
+        router.start_drain(0, now=0.05)
+        cluster.drain()
+        assert router.autoscale_stats.retired == 1
+        assert len(cluster.finished) == 6  # includes work the victim did
+
+    def test_server_stats_expose_live_fleet_ordinals(self):
+        """The stats surface stays position-aligned with the live fleet and
+        names each row's stable ordinal, so consumers can join counters
+        across scale events (retired ordinals leave the list, newborns get
+        fresh ones)."""
+        from repro.serving import ClusterSpec, SamplingParams, ServeSpec, \
+            SimSpec, build
+        srv = build(ServeSpec(
+            backend="sim",
+            sim=SimSpec(pp=2, pages=256, page_size=8),
+            cluster=ClusterSpec(replicas=1, autoscale=AutoscalePolicy(
+                interval=0.05, max_replicas=4, target_queue=2.0,
+                up_cooldown=0.1, down_cooldown=0.5))))
+        try:
+            for i in range(40):
+                srv.submit([100 + i] * 64,
+                           SamplingParams(max_new_tokens=64))
+            srv.drain()
+            s = srv.stats()
+            assert s.autoscale is not None
+            assert s.autoscale.replicas_added > 0
+            assert (len(s.replica_ordinals) == len(s.replicas)
+                    == len(s.routed_counts))
+            assert len(set(s.replica_ordinals)) == len(s.replica_ordinals)
+            assert s.fleet_size + s.draining == len(s.replicas)
+            if s.autoscale.retired:
+                # retired ordinals are gone from the live view but their
+                # work is not: total placements still cover every request
+                assert s.retired == s.autoscale.retired
+            from repro.serving.http import stats_to_json
+            doc = stats_to_json(s)
+            assert doc["replica_ordinals"] == list(s.replica_ordinals)
+        finally:
+            srv.close()
+
+
+# ---------------------------------------------------------------------------
+# the auditor has teeth: a broken drain must be caught
+# ---------------------------------------------------------------------------
+
+class TestAuditorTeeth:
+    def test_lossy_drain_is_caught(self, monkeypatch):
+        """Deliberately break `_drain_move` to drop requests on the floor
+        (drain from the source, never deliver): `check_invariants` with the
+        submitted rid set must fail with "lost". If this test ever passes
+        silently the whole chaos layer is decorative."""
+        cluster, router = TestDrain()._loaded_cluster()
+        rids = alive_rids(router)
+
+        def lossy(victim_i, dst_i, req, now):
+            sched = router.replicas[victim_i].scheduler
+            drained = sched.drain_request(req.request_id)
+            if drained is None:
+                return False
+            if sched.kv.has_request(req.request_id):
+                sched.kv.free(req.request_id)
+            return True     # "moved" — but nobody received it
+
+        monkeypatch.setattr(router, "_drain_move", lossy)
+        router.start_drain(0, now=0.05)
+        router.control_tick(0.1)
+        assert router.autoscale_stats.drain_moves > 0
+        with pytest.raises(AssertionError, match="lost"):
+            router.check_invariants(expected_rids=rids)
+
+    def test_duplicating_drain_is_caught(self):
+        """A drain that delivers without removing from the source leaves
+        the rid alive in two schedulers — the other failure mode the
+        auditor must see."""
+        sims = [make_sim(), make_sim()]
+        router = ReplicaRouter(sims)
+        req = Request("dup", [1] * 16, SamplingParams(max_new_tokens=2))
+        sims[0].sched.add_request(req)
+        sims[1].sched.adopt_request(
+            Request("dup", [1] * 16, SamplingParams(max_new_tokens=2)))
+        with pytest.raises(AssertionError, match="both"):
+            router.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# recording: elastic runs replay; old traces still load
+# ---------------------------------------------------------------------------
+
+class TestElasticTraces:
+    def test_strict_replay_through_scale_records(self, tmp_path):
+        d = str(tmp_path / "elastic")
+        cluster = elastic_cluster(1, trace_dir=d)
+        cluster.run(flash_crowd(40), until=120.0)
+        st = cluster.router.autoscale_stats
+        assert st.replicas_added > 0 and st.retired > 0
+        for s in cluster.sims:
+            if s.recorder is not None:
+                s.recorder.close()
+        cluster.router.close_trace()
+        names = sorted(n for n in os.listdir(d) if n.startswith("replica"))
+        assert len(names) == 1 + st.replicas_added
+        saw_scale = 0
+        for name in names:
+            path = os.path.join(d, name)
+            kinds = [json.loads(l)["kind"] for l in open(path)]
+            saw_scale += sum(k in ("scale_up", "drain", "retire")
+                             for k in kinds)
+            check_trace(path)   # raises on any byte divergence
+        assert saw_scale >= st.replicas_added + 2 * st.retired
+
+    def test_newborn_stream_opens_with_scale_up_and_retires_closed(
+            self, tmp_path):
+        d = str(tmp_path / "elastic")
+        cluster = elastic_cluster(1, trace_dir=d)
+        cluster.run(flash_crowd(40), until=120.0)
+        router = cluster.router
+        assert router.retired, "test needs at least one retirement"
+        # a retired newborn's stream: header, scale_up first, retire last
+        for n in sorted(os.listdir(d)):
+            if not n.startswith("replica") or n == "replica0.trace.jsonl":
+                continue
+            recs = [json.loads(l) for l in open(os.path.join(d, n))]
+            assert recs[0]["kind"] == "header"
+            assert recs[1]["kind"] == "scale_up"
+            if any(r["kind"] == "retire" for r in recs):
+                assert recs[-1]["kind"] == "retire"
+
+    def test_pre_16_traces_still_load(self):
+        fixture = os.path.join(os.path.dirname(__file__), "fixtures",
+                               "traces", "prefill_heavy.trace.jsonl")
+        lines = open(fixture).read().splitlines()
+        header = json.loads(lines[0])
+        header["version"] = [SCHEMA_MAJOR, 5]
+        old = "\n".join([json.dumps(header)] + lines[1:])
+        trace = Trace.loads(old)    # no scale records, older minor: fine
+        assert trace.header["version"] == [SCHEMA_MAJOR, 5]
+        replay_trace(trace)
+
+    def test_scale_event_validates_kind(self, tmp_path):
+        sim = make_sim()
+        sim.attach_trace(str(tmp_path / "t.jsonl"))
+        with pytest.raises(ValueError, match="unknown scale event"):
+            sim.recorder.record_scale_event("shrink", 0.0)
+
+
+# ---------------------------------------------------------------------------
+# workload generators for the elastic benchmarks
+# ---------------------------------------------------------------------------
+
+class TestElasticWorkloads:
+    def test_diurnal_rate_tracks_the_sinusoid(self):
+        reqs = diurnal_requests(200.0, base_rate=1.0, peak_rate=20.0,
+                                seed=3)
+        trough = sum(1 for t, _, _ in reqs if t < 50.0)
+        peak = sum(1 for t, _, _ in reqs if 75.0 <= t < 125.0)
+        assert peak > 3 * max(trough, 1)
+        assert all(0 <= t < 200.0 for t, _, _ in reqs)
+
+    def test_flash_crowd_concentrates_in_the_spike(self):
+        reqs = flash_crowd_requests(30.0, base_rate=1.0, spike_rate=30.0,
+                                    spike_start=10.0, spike_len=5.0, seed=3)
+        inside = sum(1 for t, _, _ in reqs if 10.0 <= t < 15.0)
+        assert inside > len(reqs) * 0.6
+
+    def test_generators_are_deterministic(self):
+        a = diurnal_requests(50.0, base_rate=2.0, peak_rate=8.0, seed=7)
+        b = diurnal_requests(50.0, base_rate=2.0, peak_rate=8.0, seed=7)
+        assert a == b
+
+    def test_rate_bounds_validated(self):
+        with pytest.raises(ValueError):
+            diurnal_requests(10.0, base_rate=5.0, peak_rate=1.0)
+        with pytest.raises(ValueError):
+            flash_crowd_requests(10.0, base_rate=5.0, spike_rate=1.0,
+                                 spike_start=1.0, spike_len=1.0)
